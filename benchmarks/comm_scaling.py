@@ -1,0 +1,68 @@
+"""Communication-vs-ε scaling (paper Table 1's rate claims, empirically).
+
+Sweeps ε and k and reports measured cost in points for:
+  RANDOM  (one-way ε-net)     — expected Θ((1/ε) log 1/ε)
+  MEDIAN  (two-way)           — expected Θ(log 1/ε)        (Thm 5.1)
+  k-party MEDIAN              — expected Θ(k² log 1/ε)     (Thm 6.3)
+plus the 0-error constant-communication protocols (thresholds, intervals,
+rectangles) as a function of k — expected Θ(k) (Thm 6.2).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import datasets
+from repro.core.protocols import baselines, kparty, one_way, two_way
+
+
+def eps_sweep() -> List[str]:
+    csv, rows = [], []
+    shards = datasets.data3(n_per_node=1000, k=2, seed=0)
+    rows.append("| eps | RANDOM cost | MEDIAN cost | MEDIAN rounds |")
+    rows.append("|---|---|---|---|")
+    for eps in (0.2, 0.1, 0.05, 0.025, 0.0125):
+        t0 = time.time()
+        rc = baselines.random(shards, eps=eps).comm["points"]
+        mr = two_way.iterative_support_median(shards, eps=eps)
+        mc = mr.comm["points"]
+        rows.append(f"| {eps} | {rc} | {mc} | {mr.rounds} |")
+        csv.append(f"comm_scaling/eps={eps},{(time.time() - t0) * 1e6:.0f},"
+                   f"random={rc};median={mc};rounds={mr.rounds}")
+    print("\n".join(rows))
+    return csv
+
+
+def k_sweep() -> List[str]:
+    csv, rows = [], []
+    rows.append("| k | threshold cost | rectangle cost | kparty-median cost |")
+    rows.append("|---|---|---|---|")
+    for k in (2, 3, 4, 6, 8):
+        t0 = time.time()
+        tc = one_way.threshold_protocol(
+            datasets.threshold_instance(n=100 * k, k=k, seed=0)).comm["points"]
+        rc = one_way.rectangle_protocol(
+            datasets.rectangle_instance(n=100 * k, k=k, d=3, seed=0)).comm["points"]
+        mc = kparty.iterative_support_kparty(
+            datasets.data2(n_per_node=100, k=k, seed=0), eps=0.05,
+            selector="median").comm["points"]
+        rows.append(f"| {k} | {tc} | {rc} | {mc} |")
+        csv.append(f"comm_scaling/k={k},{(time.time() - t0) * 1e6:.0f},"
+                   f"threshold={tc};rect={rc};kmedian={mc}")
+    print("\n".join(rows))
+    return csv
+
+
+def main() -> List[str]:
+    print("### ε sweep (Data3, 2-party)")
+    csv = eps_sweep()
+    print("\n### k sweep (0-error protocols + k-party median)")
+    csv += k_sweep()
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Micro-benchmarks of the data-plane hot loops.
+
+On this CPU container the Pallas kernels run in interpret mode (orders of
+magnitude slower than compiled TPU code), so the *timed* path is the jitted
+XLA data plane (the same math the kernels implement) — giving a meaningful
+protocol-scaling curve — while the Pallas path is timed at a reduced size
+purely to record interpret-mode correctness cost.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import geometry as geo
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=5, **kw) -> float:
+    out = fn(*args, **kw)          # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # µs
+
+
+def main() -> List[str]:
+    csv = []
+    key = jax.random.PRNGKey(0)
+    print("### protocol data plane (jitted XLA, CPU)")
+    for n in (1_000, 10_000, 100_000):
+        m = 1024
+        ks = jax.random.split(jax.random.fold_in(key, n), 3)
+        V = geo.direction_grid(m)
+        X = jax.random.normal(ks[0], (n, 2))
+        y = jnp.where(jax.random.bernoulli(ks[1], 0.5, (n,)), 1, -1)
+        ok = jnp.ones((m,), bool)
+        us = _time(geo.uncertain_mask, V, ok, X[:64], y[:64], X, y)
+        print(f"uncertain_mask n={n:>7d} m={m}: {us:10.1f} µs")
+        csv.append(f"kernel/uncertain_mask/n={n},{us:.0f},m={m}")
+    print("### Pallas interpret-mode (correctness-scale)")
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    us = _time(ops.attention, q, k, v, causal=True, interpret=True, reps=2)
+    print(f"flash_attention interpret (1,256,4,64): {us:10.1f} µs")
+    csv.append(f"kernel/flash_attention_interp,{us:.0f},B1S256H4")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Empirical verification of the paper's lower bounds (Thm 3.3 / App A, B).
+
+Appendix A (Ω(1/ε) one-way for linear separators): build the indexing
+construction; show (a) any one-way protocol that ships o(1/ε) points leaves
+B guessing the targeted pair's bit — error ~1/2 over random instances, and
+(b) the two-way MEDIAN protocol solves the same instances with O(log 1/ε)
+communication — the exponential separation of Table 1.
+
+Appendix B (Ω(|D_A|) noise detection): A-side points at even integers decide
+perfect-classifier existence; any sketch of o(n) points misses the decisive
+point with probability -> 1.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import datasets
+from repro.core.classifiers import fit_max_margin
+from repro.core.protocols import two_way
+
+
+def one_way_indexing(eps: float = 0.05, trials: int = 20, budget_frac: float = 0.25):
+    """B fits on its point + a random ``budget_frac`` fraction of A's pairs
+    (an o(1/eps) one-way message); reports how often the targeted pair is
+    misclassified."""
+    wrong = 0
+    total_pairs = None
+    for t in range(trials):
+        (XA, yA), (XB, yB), bits = datasets.indexing_instance(eps, seed=t)
+        n_pairs = len(bits)
+        total_pairs = n_pairs
+        rng = np.random.default_rng(1000 + t)
+        keep_pairs = rng.choice(n_pairs, size=max(1, int(budget_frac * n_pairs)),
+                                replace=False)
+        keep = np.concatenate([[2 * j, 2 * j + 1] for j in keep_pairs])
+        X = np.concatenate([XA[keep], XB])
+        y = np.concatenate([yA[keep], yB])
+        h = fit_max_margin(X, y)
+        # evaluate on the full instance: the targeted pair decides
+        err = h.error(np.concatenate([XA, XB]), np.concatenate([yA, yB]))
+        wrong += err > 0
+    return wrong / trials, total_pairs
+
+
+def two_way_same_instances(eps: float = 0.05, trials: int = 10):
+    """MEDIAN on the indexing instances: solves them with tiny cost."""
+    costs, errs = [], []
+    for t in range(trials):
+        (XA, yA), (XB, yB), _ = datasets.indexing_instance(eps, seed=t)
+        r = two_way.iterative_support_median([(XA, yA), (XB, yB)], eps=eps)
+        X = np.concatenate([XA, XB])
+        y = np.concatenate([yA, yB])
+        errs.append(r.classifier.error(X, y))
+        costs.append(r.comm["points"])
+    return float(np.mean(errs)), float(np.mean(costs))
+
+
+def noise_detection(n: int = 200, trials: int = 30, budget_frac: float = 0.3):
+    """App B: sketching o(n) of A's points cannot decide separability."""
+    missed = 0
+    for t in range(trials):
+        rng = np.random.default_rng(t)
+        i = int(rng.integers(1, n // 2))
+        has_blocker = bool(rng.integers(0, 2))
+        A_vals = set(rng.choice(np.arange(1, n + 1), size=n // 2, replace=False) * 2)
+        if has_blocker:
+            A_vals.add(2 * i)
+        else:
+            A_vals.discard(2 * i)
+        # B checks a random o(n) subset of A's points (the one-way sketch)
+        sketch = rng.choice(sorted(A_vals), size=int(budget_frac * len(A_vals)),
+                            replace=False)
+        decided_separable = 2 * i not in set(sketch)
+        truly_separable = not has_blocker
+        missed += decided_separable != truly_separable
+    return missed / trials
+
+
+def main() -> List[str]:
+    csv = []
+    t0 = time.time()
+    err_rate, n_pairs = one_way_indexing()
+    csv.append(f"lower_bound/one_way_indexing,{(time.time() - t0) * 1e6:.0f},"
+               f"err_rate={err_rate:.2f};pairs={n_pairs}")
+    print(f"App A one-way, 25% of the Ω(1/ε) pairs shipped: "
+          f"{100 * err_rate:.0f}% of instances misclassified (need ~0% to win)")
+    t0 = time.time()
+    err, cost = two_way_same_instances()
+    csv.append(f"lower_bound/two_way_median,{(time.time() - t0) * 1e6:.0f},"
+               f"err={err:.4f};cost={cost:.1f}")
+    print(f"Two-way MEDIAN on the same instances: mean err {err:.4f}, "
+          f"mean cost {cost:.1f} points (vs Ω(1/ε)={1 / 0.05:.0f} one-way)")
+    t0 = time.time()
+    miss = noise_detection()
+    csv.append(f"lower_bound/noise_detection,{(time.time() - t0) * 1e6:.0f},"
+               f"miss_rate={miss:.2f}")
+    print(f"App B noise detection with 30% sketch: {100 * miss:.0f}% wrong "
+          f"(Ω(|D_A|) is required)")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun JSONL files.
+
+Usage: PYTHONPATH=src python -m benchmarks.render_experiments \
+    benchmarks/results/dryrun_baseline.jsonl benchmarks/results/dryrun_optimized.jsonl
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def load(path):
+    out = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt(x):
+    if x >= 100:
+        return f"{x:.0f}s"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}µs"
+
+
+def dryrun_summary(recs):
+    rows = ["| arch | shape | mesh | status | lower | compile | fits HBM | coll bytes/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(recs.items()):
+        if r["status"] == "skipped":
+            rows.append(f"| {a} | {s} | {m} | SKIP ({r['reason'][:40]}…) | — | — | — | — |")
+            continue
+        rf = r["roofline"]
+        rows.append(f"| {a} | {s} | {m} | ok | {r['lower_s']}s | {r['compile_s']}s | "
+                    f"{'✓' if rf['fits_hbm'] else '✗'} | {rf['collective_bytes'] / 1e9:.1f}GB |")
+    return "\n".join(rows)
+
+
+def roofline_table(base, opt, mesh="single"):
+    rows = ["| arch | shape | base c/m/x (dom) | opt c/m/x (dom) | dom speedup | useful b→o |",
+            "|---|---|---|---|---|---|"]
+    doms = defaultdict(int)
+    for (a, s, m) in sorted(base):
+        if m != mesh:
+            continue
+        rb = base[(a, s, m)]
+        ro = opt.get((a, s, m))
+        if rb["status"] != "ok":
+            rows.append(f"| {a} | {s} | skipped | skipped | — | — |")
+            continue
+        fb = rb["roofline"]
+        fo = ro["roofline"] if ro and ro["status"] == "ok" else None
+        base_dom = max(fb["compute_s"], fb["memory_s"], fb["collective_s"])
+        b = f"{fmt(fb['compute_s'])}/{fmt(fb['memory_s'])}/{fmt(fb['collective_s'])} ({fb['dominant'][:4]})"
+        if fo:
+            opt_dom = max(fo["compute_s"], fo["memory_s"], fo["collective_s"])
+            o = f"{fmt(fo['compute_s'])}/{fmt(fo['memory_s'])}/{fmt(fo['collective_s'])} ({fo['dominant'][:4]})"
+            sp = f"{base_dom / opt_dom:.2f}×"
+            ub = fb.get("useful_ratio")
+            uo = fo.get("useful_ratio")
+            us = f"{ub:.2f}→{uo:.2f}" if ub is not None and uo is not None else "—"
+            doms[fo["dominant"]] += 1
+        else:
+            o, sp, us = "ERROR", "—", "—"
+        rows.append(f"| {a} | {s} | {b} | {o} | {sp} | {us} |")
+    rows.append("")
+    rows.append(f"Optimized dominant-term census ({mesh}): {dict(doms)}")
+    return "\n".join(rows)
+
+
+def main():
+    base = load(sys.argv[1])
+    opt = load(sys.argv[2]) if len(sys.argv) > 2 else base
+    print("## Dry-run (optimized build)\n")
+    print(dryrun_summary(opt))
+    print("\n## Roofline — single-pod (256 chips), baseline vs optimized\n")
+    print(roofline_table(base, opt, "single"))
+    print("\n## Roofline — multi-pod (512 chips), baseline vs optimized\n")
+    print(roofline_table(base, opt, "multi"))
+
+
+if __name__ == "__main__":
+    main()

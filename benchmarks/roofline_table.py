@@ -1,0 +1,93 @@
+"""Roofline table from the dry-run records (EXPERIMENTS.md §Roofline source).
+
+Reads benchmarks/results/dryrun.jsonl (written by repro.launch.dryrun),
+prints the per-(arch × shape × mesh) three-term roofline with the dominant
+bottleneck, the MODEL_FLOPS/HLO_FLOPs useful-compute ratio, and per-case
+one-line "what would move the dominant term" notes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from collections import defaultdict
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
+
+# what would move the dominant term down, by (dominant, kind)
+_NOTES = {
+    ("memory", "train"): "raise arithmetic intensity: larger microbatch per device, bf16 master-less optimizer, fuse norms",
+    ("memory", "prefill"): "KV/MLA cache layout + flash tiling (less HBM re-traffic)",
+    ("memory", "decode"): "decode is weight-streaming-bound: quantize/shrink weights per chip or batch more requests",
+    ("compute", "train"): "near roofline: only model/pipeline rebalance or kernel fusion helps",
+    ("compute", "prefill"): "near roofline: attention kernel fusion (flash) to cut redundant FLOPs",
+    ("compute", "decode"): "batch more requests per chip",
+    ("collective", "train"): "shard differently: move all-reduce to reduce-scatter+all-gather (ZeRO), overlap with compute",
+    ("collective", "prefill"): "cut tensor-parallel gathers: wider data axis, narrower model axis",
+    ("collective", "decode"): "decode all-gathers dominate: replicate small weights, shrink model axis",
+}
+
+
+def load(mesh: str = "single") -> List[Dict]:
+    recs = []
+    with open(RESULTS) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("mesh") == mesh:
+                recs.append(r)
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}µs"
+
+
+def kind_of(shape: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}[shape]
+
+
+def main(mesh: str = "single") -> List[str]:
+    recs = load(mesh)
+    csv: List[str] = []
+    rows = [f"### Roofline — {mesh} mesh ({'512' if mesh == 'multi' else '256'} chips)",
+            "| arch | shape | compute | memory | collective | dominant | useful | note |",
+            "|---|---|---|---|---|---|---|---|"]
+    dom_count = defaultdict(int)
+    for r in recs:
+        a, s = r["arch"], r["shape"]
+        if r["status"] == "skipped":
+            rows.append(f"| {a} | {s} | — | — | — | skipped | — | {r['reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {a} | {s} | — | — | — | ERROR | — | {r['error'][:60]} |")
+            continue
+        rf = r["roofline"]
+        dom = rf["dominant"]
+        dom_count[dom] += 1
+        useful = rf.get("useful_ratio")
+        note = _NOTES.get((dom, kind_of(s)), "")
+        rows.append(
+            f"| {a} | {s} | {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} | "
+            f"{fmt_s(rf['collective_s'])} | **{dom}** | "
+            f"{useful:.2f} | {note[:60]} |" if useful is not None else
+            f"| {a} | {s} | {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} | "
+            f"{fmt_s(rf['collective_s'])} | **{dom}** | — | {note[:60]} |")
+        csv.append(f"roofline/{a}/{s}/{mesh},0,"
+                   f"compute_s={rf['compute_s']:.4g};memory_s={rf['memory_s']:.4g};"
+                   f"collective_s={rf['collective_s']:.4g};dominant={dom};"
+                   f"useful={useful if useful is not None else ''}")
+    rows.append("")
+    rows.append(f"Dominant-term census: {dict(dom_count)}")
+    print("\n".join(rows))
+    return csv
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "single")

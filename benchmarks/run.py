@@ -1,0 +1,59 @@
+"""Benchmark aggregator — one section per paper table/figure + system perf.
+
+Sections:
+  paper_tables    Tables 2 / 3 / 4 (accuracy + communication cost)
+  comm_scaling    Table 1 rate claims: cost vs ε and vs k
+  lower_bound     Appendix A (Ω(1/ε)) and Appendix B (Ω(|D_A|)) constructions
+  kernel_bench    data-plane hot-loop timings
+  roofline_table  §Roofline terms from the dry-run artifacts (if present)
+
+Prints a final ``name,us_per_call,derived`` CSV block.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+from typing import List
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import comm_scaling, kernel_bench, lower_bound, paper_tables
+from benchmarks import roofline_table
+
+
+def main() -> None:
+    csv: List[str] = []
+    sections = [
+        ("paper tables (2/3/4)", paper_tables.main),
+        ("communication scaling (Table 1 rates)", comm_scaling.main),
+        ("lower bounds (App A/B)", lower_bound.main),
+        ("kernel micro-bench", kernel_bench.main),
+    ]
+    for title, fn in sections:
+        print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
+        try:
+            csv += fn() or []
+        except Exception:  # noqa: BLE001 — keep the suite running
+            traceback.print_exc()
+            csv.append(f"{title},0,ERROR")
+    if os.path.exists(roofline_table.RESULTS):
+        for mesh in ("single", "multi"):
+            print(f"\n{'=' * 72}\n== roofline ({mesh})\n{'=' * 72}")
+            try:
+                csv += roofline_table.main(mesh) or []
+            except Exception:
+                traceback.print_exc()
+    else:
+        print("\n(no dryrun.jsonl — run `python -m repro.launch.dryrun` for the "
+              "roofline section)")
+
+    print(f"\n{'=' * 72}\n== CSV\n{'=' * 72}")
+    print("name,us_per_call,derived")
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Noisy-setting demo (paper §8.2, implemented): labels flipped at 5 %/10 %,
+the noise-tolerant protocol still recovers a near-clean separator with
+two-orders-less communication than centralizing the noisy data.
+
+Run:  PYTHONPATH=src python examples/noisy_protocol.py
+"""
+
+import numpy as np
+
+from repro.core import datasets
+from repro.core.protocols import baselines, two_way
+
+
+def main():
+    for rate in (0.05, 0.10):
+        shards = datasets.data3(n_per_node=500, k=2, seed=0)
+        noisy = datasets.add_label_noise(shards, rate=rate)
+        r = two_way.iterative_support_noisy(noisy, eps=0.05)
+        nv = baselines.naive(noisy)
+        Xc = np.concatenate([s[0] for s in shards])
+        yc = np.concatenate([s[1] for s in shards])
+        yn = np.concatenate([s[1] for s in noisy])
+        print(f"noise {100 * rate:.0f}%:")
+        print(f"  noisy-MAXMARG: clean-label acc "
+              f"{100 * np.mean(r.classifier.predict(Xc) == yc):5.1f}%  "
+              f"noisy-label acc {100 * np.mean(r.classifier.predict(Xc) == yn):5.1f}%  "
+              f"cost {r.comm['points']} points")
+        print(f"  NAIVE:         clean-label acc "
+              f"{100 * np.mean(nv.classifier.predict(Xc) == yc):5.1f}%  "
+              f"cost {nv.comm['points']} points")
+
+
+if __name__ == "__main__":
+    main()

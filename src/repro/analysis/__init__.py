@@ -1,0 +1,1 @@
+from repro.analysis.roofline import RooflineReport, analyze_compiled, parse_collectives  # noqa: F401

@@ -1,0 +1,16 @@
+# The paper's primary contribution: communication-metered protocols for
+# learning classifiers on adversarially-partitioned data.
+from repro.core import classifiers, comm, datasets, geometry, sampling  # noqa: F401
+from repro.core.protocols import baselines, kparty, one_way, two_way  # noqa: F401
+
+__all__ = [
+    "classifiers",
+    "comm",
+    "datasets",
+    "geometry",
+    "sampling",
+    "one_way",
+    "two_way",
+    "kparty",
+    "baselines",
+]

@@ -1,0 +1,232 @@
+"""Hypothesis classes from the paper.
+
+Thresholds (R^1), intervals (R^1), axis-aligned rectangles (R^d), and linear
+separators (R^d).  Each provides ``fit`` (0-error learner under the noiseless
+assumption), ``predict`` and ``error``.  The linear-separator max-margin
+solver is a jit'd JAX routine (Pegasos-style projected subgradient on the
+hard-margin objective with margin renormalization); support points are the
+active-margin points — exactly what the protocols ship.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Thresholds (predict +1 iff x < t)  — paper Lemma 3.1
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Threshold:
+    t: float
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        x = np.asarray(X).reshape(-1)
+        return np.where(x < self.t, 1, -1)
+
+    def error(self, X: np.ndarray, y: np.ndarray) -> float:
+        return float(np.mean(self.predict(X) != y)) if len(y) else 0.0
+
+    @staticmethod
+    def fit(X: np.ndarray, y: np.ndarray) -> "Threshold":
+        """Any 0-error threshold on (X, y); assumes separability."""
+        x = np.asarray(X).reshape(-1)
+        pos = x[y == 1]
+        neg = x[y == -1]
+        lo = pos.max() if len(pos) else -np.inf  # t must exceed all positives
+        hi = neg.min() if len(neg) else np.inf   # and be below all negatives
+        if not lo < hi:
+            raise ValueError("not separable by a threshold")
+        if np.isinf(lo) and np.isinf(hi):
+            t = 0.0
+        elif np.isinf(lo):
+            t = hi - 1.0
+        elif np.isinf(hi):
+            t = lo + 1.0
+        else:
+            t = 0.5 * (lo + hi)
+        return Threshold(float(t))
+
+
+# ---------------------------------------------------------------------------
+# Intervals (predict +1 iff a <= x <= b) — paper Lemma 3.2
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Interval:
+    a: float
+    b: float
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        x = np.asarray(X).reshape(-1)
+        return np.where((x >= self.a) & (x <= self.b), 1, -1)
+
+    def error(self, X: np.ndarray, y: np.ndarray) -> float:
+        return float(np.mean(self.predict(X) != y)) if len(y) else 0.0
+
+    @staticmethod
+    def fit(X: np.ndarray, y: np.ndarray) -> "Interval":
+        """Minimal enclosing interval of the positives (paper's choice: 'as
+        small as possible'); assumes noiseless separability."""
+        x = np.asarray(X).reshape(-1)
+        pos = x[y == 1]
+        if len(pos) == 0:
+            return Interval(0.0, -1.0)  # empty interval
+        a, b = float(pos.min()), float(pos.max())
+        neg = x[y == -1]
+        if len(neg) and np.any((neg >= a) & (neg <= b)):
+            raise ValueError("not separable by an interval")
+        return Interval(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Axis-aligned rectangles in R^d — paper Theorem 3.2
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AxisAlignedRectangle:
+    lo: np.ndarray  # (d,)
+    hi: np.ndarray  # (d,)
+    positive_inside: bool = True
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.atleast_2d(X)
+        inside = np.all((X >= self.lo) & (X <= self.hi), axis=1)
+        lab = np.where(inside, 1, -1)
+        return lab if self.positive_inside else -lab
+
+    def error(self, X: np.ndarray, y: np.ndarray) -> float:
+        return float(np.mean(self.predict(X) != y)) if len(y) else 0.0
+
+    @staticmethod
+    def minimal(X: np.ndarray) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Minimum enclosing rectangle (the 2d values A ships, Thm 3.2);
+        None plays the paper's ∅ sentinel."""
+        X = np.atleast_2d(X)
+        if X.shape[0] == 0:
+            return None
+        return X.min(axis=0), X.max(axis=0)
+
+    @staticmethod
+    def merge(
+        r1: Optional[Tuple[np.ndarray, np.ndarray]],
+        r2: Optional[Tuple[np.ndarray, np.ndarray]],
+    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Coordinate-wise merge: R^+_{A∪B} from R^+_A and R^+_B."""
+        if r1 is None:
+            return r2
+        if r2 is None:
+            return r1
+        return np.minimum(r1[0], r2[0]), np.maximum(r1[1], r2[1])
+
+    @staticmethod
+    def from_bounds(
+        rect: Tuple[np.ndarray, np.ndarray], positive_inside: bool = True
+    ) -> "AxisAlignedRectangle":
+        return AxisAlignedRectangle(np.asarray(rect[0]), np.asarray(rect[1]), positive_inside)
+
+
+# ---------------------------------------------------------------------------
+# Linear separators — jit'd max-margin solver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LinearSeparator:
+    w: np.ndarray  # (d,)
+    b: float
+    margin: float = 0.0  # geometric margin on the fit set
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        return np.where(np.atleast_2d(X) @ self.w + self.b > 0, 1, -1)
+
+    def decision(self, X: np.ndarray) -> np.ndarray:
+        return np.atleast_2d(X) @ self.w + self.b
+
+    def error(self, X: np.ndarray, y: np.ndarray) -> float:
+        return float(np.mean(self.predict(X) != y)) if len(y) else 0.0
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _svm_solve(X: jnp.ndarray, y: jnp.ndarray, lam: jnp.ndarray, steps: int = 2000):
+    """Pegasos projected subgradient on  λ/2 ||w||² + mean hinge(w·x+b)."""
+    n, d = X.shape
+
+    def body(i, carry):
+        w, b = carry
+        eta = 1.0 / (lam * (i + 2.0))
+        m = y * (X @ w + b)
+        viol = (m < 1.0).astype(X.dtype)
+        gw = lam * w - (viol * y) @ X / n
+        gb = -jnp.sum(viol * y) / n
+        w = w - eta * gw
+        b = b - eta * gb
+        # pegasos projection onto ball of radius 1/sqrt(lam)
+        nrm = jnp.linalg.norm(w)
+        scale = jnp.minimum(1.0, (1.0 / jnp.sqrt(lam)) / (nrm + 1e-12))
+        return w * scale, b * scale
+
+    w0 = jnp.zeros((d,), X.dtype)
+    b0 = jnp.zeros((), X.dtype)
+    w, b = jax.lax.fori_loop(0, steps, body, (w0, b0))
+    return w, b
+
+
+def fit_max_margin(
+    X: np.ndarray,
+    y: np.ndarray,
+    steps: int = 4000,
+    lam: float = 1e-3,
+    refine: int = 2,
+) -> LinearSeparator:
+    """Approximate hard-margin SVM.
+
+    Pegasos with decreasing λ (hard-margin annealing): the paper's protocols
+    need a 0-training-error max-margin separator on separable data.  We solve
+    at successively smaller λ until 0 error, then renormalize so that
+    min margin = 1 (canonical form).
+    """
+    Xj = jnp.asarray(X, dtype=jnp.float32)
+    yj = jnp.asarray(y, dtype=jnp.float32)
+    best = None
+    cur_lam = lam
+    for _ in range(refine + 1):
+        w, b = _svm_solve(Xj, yj, jnp.float32(cur_lam), steps)
+        m = np.asarray(yj * (Xj @ w + b))
+        best = (np.asarray(w, dtype=np.float64), float(b))
+        if m.min() > 0:
+            break
+        cur_lam /= 10.0
+    w, b = best
+    margins = y * (X @ w + b)
+    mmin = margins.min()
+    if mmin > 0:  # canonicalize: functional margin 1 at the support points
+        w = w / mmin
+        b = b / mmin
+    geo = (y * (X @ w + b)).min() / (np.linalg.norm(w) + 1e-30)
+    return LinearSeparator(w, float(b), margin=float(geo))
+
+
+def support_points(
+    clf: LinearSeparator, X: np.ndarray, y: np.ndarray, rtol: float = 0.15, max_support: int = 8
+) -> np.ndarray:
+    """Indices of active-margin points (functional margin within (1+rtol) of
+    the minimum).  These are the points MAXMARG ships each round."""
+    m = y * (X @ clf.w + clf.b)
+    mmin = max(m.min(), 1e-12)
+    idx = np.where(m <= mmin * (1.0 + rtol))[0]
+    if len(idx) > max_support:  # keep the tightest ones from each class
+        order = np.argsort(m[idx])
+        keep = []
+        for i in order:
+            keep.append(idx[i])
+            if len(keep) >= max_support:
+                break
+        idx = np.asarray(sorted(keep))
+    return idx

@@ -1,0 +1,1 @@
+from repro.core.protocols import baselines, kparty, one_way, two_way  # noqa: F401

@@ -1,0 +1,94 @@
+"""Baselines from the paper's experiments (§7) plus parameter-mixing (§8.1).
+
+* NAIVE   — ship every point to the last node, learn centrally.
+* VOTING  — each node learns locally; predictions are majority-voted with
+            confidence tie-break (paper's (b)).
+* RANDOM  — one-way ε-net sample (paper's (c); == protocols.one_way.random_sampling
+            with the paper's (d/ε)log(d/ε) size).
+* MIXING  — parameter averaging of local linear classifiers (McDonald et al.,
+            Mann et al.; the paper's §8.1 comparison point).
+"""
+
+from __future__ import annotations
+
+from typing import Any, List
+
+import numpy as np
+
+from repro.core import classifiers as clf
+from repro.core.comm import make_nodes
+from repro.core.protocols.one_way import ProtocolResult, random_sampling
+
+
+def naive(shards, fit=clf.fit_max_margin) -> ProtocolResult:
+    nodes, log = make_nodes(shards)
+    last = nodes[-1]
+    for nd in nodes[:-1]:
+        nd.send_points(last, nd.X, nd.y, tag="naive-all")
+    X, y = last.all_known()
+    h = fit(X, y)
+    return ProtocolResult(h, log.summary(), rounds=1, converged=True)
+
+
+class _VotingClassifier:
+    def __init__(self, parts: List[clf.LinearSeparator]):
+        self.parts = parts
+
+    def decision(self, X):
+        return np.stack([h.decision(X) for h in self.parts], axis=0)
+
+    def predict(self, X):
+        dec = self.decision(X)
+        votes = np.sign(dec)
+        s = votes.sum(axis=0)
+        # confidence tie-break: label whose prediction has higher |margin|
+        conf = dec[np.argmax(np.abs(dec), axis=0), np.arange(dec.shape[1])]
+        out = np.where(s != 0, np.sign(s), np.sign(conf))
+        return np.where(out == 0, 1, out).astype(np.int32)
+
+    def error(self, X, y):
+        return float(np.mean(self.predict(np.atleast_2d(X)) != y)) if len(y) else 0.0
+
+
+def voting(shards, fit=clf.fit_max_margin) -> ProtocolResult:
+    """Local classifiers + majority vote.  Communication: every node ships its
+    points' predictions?  No — the paper charges VOTING the full dataset cost
+    (Tables 2-4 list Cost = all points), since evaluating the vote on D
+    requires the data (or equivalently shipping every local classifier to
+    every datum).  We meter it the same way."""
+    nodes, log = make_nodes(shards)
+    parts = [fit(nd.X, nd.y) for nd in nodes]
+    last = nodes[-1]
+    for nd in nodes[:-1]:
+        nd.send_points(last, nd.X, nd.y, tag="voting-eval")
+    h = _VotingClassifier(parts)
+    return ProtocolResult(h, log.summary(), rounds=1, converged=True)
+
+
+def random(shards, eps: float = 0.05, seed: int = 0) -> ProtocolResult:
+    """Paper's RANDOM: an ε-net of size (d/ε)log(d/ε) sent one-way."""
+    d = shards[0][0].shape[1]
+    return random_sampling(shards, eps=eps, vc_dim=d, seed=seed, c=1.0)
+
+
+class _MixedClassifier(clf.LinearSeparator):
+    pass
+
+
+def mixing(shards, fit=clf.fit_max_margin) -> ProtocolResult:
+    """Parameter averaging: each node ships (w_i, b_i); coordinator averages.
+    Communication: k·(d+1) scalars — cheap, but no error guarantee under
+    adversarial partitions (paper §8.1)."""
+    nodes, log = make_nodes(shards)
+    last = nodes[-1]
+    ws, bs = [], []
+    for nd in nodes:
+        h = fit(nd.X, nd.y)
+        wn = h.w / (np.linalg.norm(h.w) + 1e-12)
+        bn = h.b / (np.linalg.norm(h.w) + 1e-12)
+        ws.append(wn)
+        bs.append(bn)
+        if nd is not last:
+            nd.send_scalars(last, np.concatenate([wn, [bn]]), tag="mixing-params")
+    h = _MixedClassifier(np.mean(ws, axis=0), float(np.mean(bs)))
+    return ProtocolResult(h, log.summary(), rounds=1, converged=True)

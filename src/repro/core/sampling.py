@@ -1,0 +1,62 @@
+"""Sampling utilities: reservoir sampling (Vitter 1985) and ε-net sizes.
+
+Used by the one-way k-party sampling protocol (paper Thm 6.1): player P_i
+maintains a reservoir R_i of size s_ε over ∪_{j<=i} D_j and forwards it down
+the chain.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def epsilon_net_size(eps: float, vc_dim: int, c: float = 1.0) -> int:
+    """s_ε = O((ν/ε) log(ν/ε)) — paper Thm 3.1 (noiseless ε-net bound)."""
+    assert 0 < eps < 1
+    r = vc_dim / eps
+    return max(1, int(math.ceil(c * r * max(1.0, math.log(max(r, 2.0))))))
+
+
+def epsilon_sample_size(eps: float, vc_dim: int, c: float = 0.5) -> int:
+    """s = O(ν/ε²) — the noisy-setting ε-sample bound (paper §3/§8)."""
+    assert 0 < eps < 1
+    return max(1, int(math.ceil(c * vc_dim / (eps * eps))))
+
+
+class Reservoir:
+    """Classic reservoir sampler over a stream of labeled points.
+
+    Supports merging a downstream node's data into an upstream reservoir with
+    the correct inclusion probabilities (weighted by stream position), which
+    is what the chain protocol needs.
+    """
+
+    def __init__(self, capacity: int, dim: int, rng: Optional[np.random.Generator] = None):
+        self.capacity = int(capacity)
+        self.X = np.zeros((capacity, dim))
+        self.y = np.zeros((capacity,), dtype=np.int32)
+        self.seen = 0
+        self.filled = 0
+        self.rng = rng or np.random.default_rng(0)
+
+    def add(self, x: np.ndarray, label: int) -> None:
+        self.seen += 1
+        if self.filled < self.capacity:
+            self.X[self.filled] = x
+            self.y[self.filled] = label
+            self.filled += 1
+            return
+        j = self.rng.integers(0, self.seen)
+        if j < self.capacity:
+            self.X[j] = x
+            self.y[j] = label
+
+    def add_batch(self, X: np.ndarray, y: np.ndarray) -> None:
+        for xi, yi in zip(np.atleast_2d(X), np.atleast_1d(y)):
+            self.add(xi, int(yi))
+
+    def sample(self) -> Tuple[np.ndarray, np.ndarray]:
+        return self.X[: self.filled].copy(), self.y[: self.filled].copy()

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, make_batch_specs, synthetic_stream  # noqa: F401

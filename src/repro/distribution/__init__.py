@@ -1,0 +1,6 @@
+from repro.distribution.sharding import (  # noqa: F401
+    batch_shardings,
+    cache_shardings,
+    opt_shardings,
+    param_shardings,
+)

@@ -1,0 +1,78 @@
+"""Activation sharding constraints, mesh-optional.
+
+Model code calls :func:`constrain` with a logical spec; under a jit that
+carries a mesh (the production lowering path) the constraint pins GSPMD's
+propagation (batch dim stays on the data axes through microbatch slicing,
+MoE dispatch and attention).  With no ambient mesh (CPU smoke tests) it is a
+no-op, so the model stays mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _mesh_axes() -> Optional[Tuple[str, ...]]:
+    m = jax.sharding.get_abstract_mesh()
+    if m is None or not m.axis_names:
+        return None
+    return tuple(m.axis_names)
+
+
+_DP_OVERRIDE: Optional[Tuple[str, ...]] = None
+
+
+def set_dp_axes(axes: Optional[Tuple[str, ...]]) -> None:
+    """Override which mesh axes count as data-parallel (the launcher sets
+    ("pod","data","model") for pure-DP small-model policies)."""
+    global _DP_OVERRIDE
+    _DP_OVERRIDE = axes
+
+
+def batch_axes() -> Optional[Any]:
+    axes = _mesh_axes()
+    if axes is None:
+        return None
+    wanted = _DP_OVERRIDE if _DP_OVERRIDE is not None else ("pod", "data")
+    dp = tuple(a for a in wanted if a in axes)
+    if not dp:
+        return None
+    return dp if len(dp) > 1 else dp[0]
+
+
+def model_axis_size() -> int:
+    """Size of the "model" mesh axis (0 when absent / no mesh)."""
+    m = jax.sharding.get_abstract_mesh()
+    if m is None or not m.axis_names or "model" not in m.axis_names:
+        return 0
+    if _DP_OVERRIDE and "model" in _DP_OVERRIDE:
+        return 0  # pure-DP: the model axis is spent on the batch
+    return m.shape["model"]
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint that degrades to identity without a mesh."""
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:  # noqa: BLE001 — no mesh / axis absent: stay agnostic
+        return x
+
+
+def constrain_batch_dim(x, bdim: int = 0):
+    """Pin x's ``bdim`` to the data-parallel axes (if the dim divides)."""
+    dp = batch_axes()
+    if dp is None:
+        return x
+    names = dp if isinstance(dp, tuple) else (dp,)
+    m = jax.sharding.get_abstract_mesh()
+    total = 1
+    for a in names:
+        total *= m.shape[a]
+    if x.shape[bdim] % total != 0 or x.shape[bdim] < total:
+        return x
+    spec = [None] * x.ndim
+    spec[bdim] = dp
+    return constrain(x, *spec)

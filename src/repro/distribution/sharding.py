@@ -1,0 +1,249 @@
+"""Sharding rules: param/optimizer/cache/batch pytrees → NamedShardings.
+
+Scheme (Megatron-style tensor parallel on the "model" axis + data parallel
+on ("pod","data") + ZeRO-1 optimizer-state sharding):
+
+* column-parallel (shard output dim): wq/wk/wv/wi/up-projections, router,
+  expert dim of MoE weights (expert parallel) when divisible;
+* row-parallel (shard input dim): wo/down-projections;
+* embeddings shard the vocab dim (fallback d_model when vocab % model != 0,
+  e.g. whisper's 51865);
+* stacked-period leading axes are never sharded;
+* anything non-divisible falls back to the next divisible dim, else
+  replication — this is what absorbs head counts (9, 12, 40, 48) that do not
+  divide the 16-way model axis;
+* optimizer moments inherit the param spec plus "data" on the largest
+  remaining free dim (ZeRO-1) — required for the 398B/314B configs to fit
+  16 GB/chip;
+* decode caches shard batch on "data" ("pod","data" multi-pod); the batch=1
+  long-context shape shards the cache *sequence* dim on "data" instead
+  (cache sequence parallelism).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import InputShape, ModelConfig
+
+# param keys that are column-parallel (shard LAST dim) / row-parallel (shard
+# first non-stack dim).  Keys not listed fall back to shape-driven choice.
+_COL = {"wq", "wk", "wv", "wi", "wg", "wgate", "wup", "wr", "wdq", "wuq",
+        "wdkv", "wuk", "wuv", "wkr", "in_x", "in_z", "dt_proj",
+        "shared_wg", "shared_wu", "router", "wA", "wB",
+        "bq", "bk", "bv", "conv_b", "dt_bias", "D"}
+_ROW = {"wo", "out_proj", "shared_wo"}
+# MoE expert weights: shard expert dim when divisible (expert parallel)
+_EXPERT = {"we_g", "we_u", "we_o"}
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def _spec_for(path: Tuple, shape: Tuple[int, ...], model: int) -> P:
+    keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+    name = keys[-1]
+    stacked = "blocks" in "/".join(keys)  # leading n_periods axis
+    nd = len(shape)
+    lead = 1 if (stacked and nd >= 2) else 0
+    spec = [None] * nd
+
+    def try_dim(i: int) -> bool:
+        if i < nd and _div(shape[i], model):
+            spec[i] = "model"
+            return True
+        return False
+
+    if name in _EXPERT and nd >= 3:
+        # (L, E, d, f) or (E, d, f): expert dim first after stack
+        if try_dim(lead):
+            return P(*spec)
+        # fallback: Megatron TP inside experts — up-projections shard their
+        # OUTPUT dim (f, last), the down-projection its CONTRACTING dim
+        # (ffe, second-to-last).  Sharding we_o's output dim instead forces
+        # an all-gather of the full (B, E, cap, ffe) intermediate (observed
+        # 20 TB/device on grok-1 — EXPERIMENTS.md §Perf iteration 1).
+        if name == "we_o":
+            if try_dim(nd - 2) or try_dim(nd - 1):
+                return P(*spec)
+        else:
+            if try_dim(nd - 1) or try_dim(nd - 2):
+                return P(*spec)
+        return P(*spec)
+    if name == "embed":
+        if try_dim(0) or try_dim(1):
+            return P(*spec)
+        return P(*spec)
+    if name == "lm_head":
+        if try_dim(1) or try_dim(0):
+            return P(*spec)
+        return P(*spec)
+    if name in _COL:
+        for i in range(nd - 1, lead - 1, -1):
+            if try_dim(i):
+                return P(*spec)
+        return P(*spec)
+    if name in _ROW:
+        if try_dim(lead) or try_dim(nd - 1):
+            return P(*spec)
+        return P(*spec)
+    # fallback for 2D+: prefer last dim, then earlier ones
+    if nd - lead >= 2:
+        for i in range(nd - 1, lead - 1, -1):
+            if try_dim(i):
+                return P(*spec)
+    elif nd - lead == 1 and shape[lead] >= 4096 and _div(shape[lead], model):
+        spec[lead] = "model"
+    return P(*spec)
+
+
+def param_shardings(mesh: Mesh, param_tree: Any, fsdp: bool = False,
+                    pure_dp: bool = False) -> Any:
+    """NamedSharding tree for a param (or param-shape) pytree.
+
+    ``fsdp=True`` additionally shards the largest remaining free dim over
+    "data" (fully-sharded weights; GSPMD all-gathers per layer).  Required
+    for the 100B+ configs — 16-way tensor parallel alone leaves >16 GB of
+    weights per chip.
+
+    ``pure_dp=True`` replicates all weights (no tensor parallelism) — the
+    right choice for models whose head counts do not divide the model axis
+    (e.g. smollm's 9 heads vs 16 ranks replicate the whole attention
+    computation 16× under TP; EXPERIMENTS.md §Perf iteration 2).
+    """
+    model = mesh.shape.get("model", 1)
+    data = mesh.shape.get("data", 1)
+
+    def f(path, leaf):
+        spec = [None] * len(leaf.shape) if pure_dp else \
+            list(_spec_for(path, leaf.shape, model))
+        if fsdp:
+            free = [i for i, s in enumerate(spec) if s is None]
+            free.sort(key=lambda i: -leaf.shape[i])
+            for i in free:
+                if _div(leaf.shape[i], data) and leaf.shape[i] >= data * 8:
+                    spec[i] = "data"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(f, param_tree)
+
+
+def opt_shardings(mesh: Mesh, opt_tree: Any, fsdp: bool = False,
+                  pure_dp: bool = False) -> Any:
+    """Moments: param spec + ZeRO-1 "data" sharding on the largest free dim
+    (skipped when FSDP already spent the data axis on that leaf)."""
+    model = mesh.shape.get("model", 1)
+    data = mesh.shape.get("data", 1)
+
+    def f(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        if keys and keys[-1] == "step":
+            return NamedSharding(mesh, P())
+        # strip the leading "mu"/"nu" path element for rule lookup
+        sub = tuple(k for k in path if str(getattr(k, "key", "")) not in ("mu", "nu"))
+        spec = [None] * len(leaf.shape) if pure_dp else \
+            list(_spec_for(sub or path, leaf.shape, model))
+        free = [i for i, s in enumerate(spec) if s is None]
+        free.sort(key=lambda i: -leaf.shape[i])
+        for i in free:
+            if _div(leaf.shape[i], data) and leaf.shape[i] >= data * 8:
+                spec[i] = "data"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(f, opt_tree)
+
+
+def batch_shardings(mesh: Mesh, batch_tree: Any, shape: InputShape,
+                    pure_dp: bool = False) -> Any:
+    """Batch dim over ("pod","data") when divisible; batch=1 long-context
+    replicates (its parallelism lives in the cache sequence dim).
+
+    ``pure_dp=True`` additionally folds the idle "model" axis into the batch
+    axes (the whole mesh becomes data-parallel)."""
+    wanted = ("pod", "data", "model") if pure_dp else ("pod", "data")
+    axes = [a for a in wanted if a in mesh.shape]
+    dp = 1
+    for a in axes:
+        dp *= mesh.shape[a]
+    dp_axes = tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)
+
+    def f(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        nd = len(leaf.shape)
+        bdim = 1 if keys and keys[-1] == "rope_pos" else 0  # (3, B, S)
+        spec = [None] * nd
+        if leaf.shape[bdim] % dp == 0 and leaf.shape[bdim] >= dp:
+            spec[bdim] = dp_axes
+        elif "data" in mesh.shape and leaf.shape[bdim] % mesh.shape["data"] == 0 \
+                and leaf.shape[bdim] >= mesh.shape["data"]:
+            spec[bdim] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(f, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, cache_tree: Any, shape: InputShape,
+                    cfg: ModelConfig, pure_dp: bool = False) -> Any:
+    """Decode caches.  Leaf layouts (with stacked period lead dim L):
+    k/v (L,B,S,KV,hd) · ckv (L,B,S,kvl) · krope (L,B,S,r) · mamba h
+    (L,B,di,ds) · conv (L,B,dc-1,di) · rwkv wkv (L,B,H,hd,hd) · shifts
+    (L,B,d) · cross k/v (L,B,Se,KV,hd)."""
+    model = 0 if pure_dp else mesh.shape.get("model", 1)  # 0: _div() rejects
+    data = mesh.shape.get("data", 1)
+    wanted = ("pod", "data", "model") if pure_dp else ("pod", "data")
+    axes = [a for a in wanted if a in mesh.shape]
+    dp = 1
+    for a in axes:
+        dp *= mesh.shape[a]
+    dp_axes = tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)
+    B = shape.global_batch
+    seq_shard = B == 1  # long-context single stream: shard the cache seq dim
+
+    def f(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        name = keys[-1]
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        # batch dim is axis 1 (stack lead at 0); fall back to smaller axis
+        # subsets when the batch does not divide the full dp product
+        if not seq_shard and nd >= 2:
+            for cand in (axes, axes[:-1], axes[:1]):
+                cdp = 1
+                for a in cand:
+                    cdp *= mesh.shape[a]
+                if cand and _div(leaf.shape[1], cdp) and leaf.shape[1] >= cdp:
+                    spec[1] = tuple(cand) if len(cand) > 1 else cand[0]
+                    break
+        if name in ("k", "v", "cross_k", "cross_v"):  # (L,B,S,KV,hd)
+            if seq_shard and _div(leaf.shape[2], data):
+                spec[2] = "data"
+            if _div(leaf.shape[3], model):
+                spec[3] = "model"
+            elif _div(leaf.shape[4], model):
+                spec[4] = "model"
+        elif name in ("ckv", "krope"):  # (L,B,S,lat)
+            if seq_shard and _div(leaf.shape[2], data):
+                spec[2] = "data"
+            if _div(leaf.shape[3], model):
+                spec[3] = "model"
+        elif name == "h":  # (L,B,di,ds)
+            if _div(leaf.shape[2], model):
+                spec[2] = "model"
+        elif name == "conv":  # (L,B,dc-1,di)
+            if _div(leaf.shape[3], model):
+                spec[3] = "model"
+        elif name == "tmix_wkv":  # (L,B,H,hd,hd)
+            if _div(leaf.shape[2], model):
+                spec[2] = "model"
+        elif name in ("tmix_shift", "cmix_shift"):  # (L,B,d)
+            if _div(leaf.shape[2], model):
+                spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(f, cache_tree)

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Four kernels, each with the ``<name>.py`` (pl.pallas_call + BlockSpec) /
+``ops.py`` (jit'd padding + dispatch wrapper) / ``ref.py`` (pure-jnp oracle)
+layout:
+
+  flash_attention  tiled online-softmax GQA attention (causal/sliding-window)
+  rwkv6            chunked closed-form WKV recurrence (Finch)
+  mamba            blocked selective scan
+  support_margin   the paper's data-plane hot loop: fused direction×point
+                   projection with masked range / any reductions
+
+All are validated on CPU via ``interpret=True`` against the oracles
+(tests/test_kernels.py); the BlockSpec tilings target TPU v5e VMEM/MXU.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.mamba import mamba_scan  # noqa: F401
+from repro.kernels.rwkv6 import rwkv6_chunked  # noqa: F401
+from repro.kernels.support_margin import threshold_ranges, uncertain_mask  # noqa: F401

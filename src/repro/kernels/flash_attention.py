@@ -1,0 +1,132 @@
+"""Pallas TPU flash attention (GQA, causal, sliding-window).
+
+Online-softmax tiling after Rabe-Staats / FlashAttention, adapted to the TPU
+memory hierarchy: the (block_q, head_dim) query tile and the (block_k,
+head_dim) key/value tiles live in VMEM, the running (m, l, acc) statistics in
+SMEM-resident scratch, and every contraction is MXU-shaped (block sizes are
+multiples of 128 where the head dim allows).  GQA never materializes the
+broadcast K/V: the kv-head index is folded into the BlockSpec ``index_map``
+so each q-head grid step streams its shared kv head straight from HBM.
+
+Grid: (batch, q_heads, num_q_blocks, num_k_blocks) — the k dimension is the
+innermost (sequential on TPU) axis, so the scratch accumulators carry across
+k-blocks of one q-block and are re-initialized when ``k_idx == 0``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  block_q: int, block_k: int, num_k_blocks: int,
+                  kv_valid: Optional[int]):
+    """One (q-block, k-block) step of the online-softmax recursion."""
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bk, hdv)
+
+    s = (q * scale) @ k.T                        # (bq, bk) — MXU
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    if kv_valid is not None:
+        mask &= cols < kv_valid
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (bq,)
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)              # rescale of old stats
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_cur
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)          # fully-masked rows -> 0 output
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "kv_valid", "block_q", "block_k",
+                     "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,                # (B, Sq, H, hd)
+    k: jnp.ndarray,                # (B, Skv, KV, hd)
+    v: jnp.ndarray,                # (B, Skv, KV, hdv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_valid: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Tiled exact attention.  Returns (B, Sq, H, hdv)."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, hdv = v.shape
+    G = H // KV
+    assert H % KV == 0, (H, KV)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, block_q, Skv, block_k)
+    nq, nk = Sq // block_q, Skv // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    # head-major layout so each (b, h) grid step reads a contiguous stripe
+    qt = q.transpose(0, 2, 1, 3)   # (B, H, Sq, hd)
+    kt = k.transpose(0, 2, 1, 3)   # (B, KV, Skv, hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, num_k_blocks=nk, kv_valid=kv_valid)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hdv), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hdv), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hdv), q.dtype),
+        scratch_shapes=[
+            # (m, l, acc) online-softmax carries; VMEM-resident, persist
+            # across the sequential innermost k grid dimension
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hdv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)  # (B, Sq, H, hdv)

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel for the Mamba-1 selective scan.
+
+TPU adaptation: the GPU reference is a warp-parallel sequential scan with the
+state in registers.  Here the inner-dim (d_inner) axis is blocked so each
+grid step owns a (block_di, d_state) state tile resident in VMEM scratch, and
+time is the innermost sequential grid dimension processed one chunk at a
+time.  Within a chunk the recurrence stays a fori_loop (d_state = 16 makes
+the per-step work a (block_di, 16) VPU elementwise op — the MXU has nothing
+to chew on, which is exactly why Mamba papers report it memory-bound), but
+chunking amortizes HBM↔VMEM traffic: Δ/B/C/x tiles stream in once per chunk
+and y streams out once, instead of per-token round trips.
+
+Grid: (B, num_di_blocks, num_chunks) — chunks innermost/sequential.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(delta_ref, x_ref, A_ref, B_ref, C_ref, y_ref, hT_ref,
+                  h_ref, *, chunk: int, num_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    delta = delta_ref[0].astype(jnp.float32)     # (T, bdi)
+    x = x_ref[0].astype(jnp.float32)             # (T, bdi)
+    A = A_ref[...].astype(jnp.float32)           # (bdi, ds)
+    Bs = B_ref[0].astype(jnp.float32)            # (T, ds)
+    Cs = C_ref[0].astype(jnp.float32)            # (T, ds)
+
+    def step(t, carry):
+        h, ys = carry
+        d_t = delta[t]                           # (bdi,)
+        dA = jnp.exp(d_t[:, None] * A)           # (bdi, ds)
+        dBx = (d_t * x[t])[:, None] * Bs[t][None, :]
+        h = dA * h + dBx
+        y_t = h @ Cs[t]                          # (bdi,)
+        ys = jax.lax.dynamic_update_slice(ys, y_t[None, :], (t, 0))
+        return h, ys
+
+    h0 = h_ref[...]
+    ys0 = jnp.zeros_like(y_ref[0], jnp.float32)
+    hT, ys = jax.lax.fori_loop(0, chunk, step, (h0, ys0))
+    y_ref[0, :, :] = ys.astype(y_ref.dtype)
+    h_ref[...] = hT
+
+    @pl.when(ci == num_chunks - 1)
+    def _emit_state():
+        hT_ref[0, :, :] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_di", "interpret"))
+def mamba_scan(
+    xc: jnp.ndarray,               # (B, S, di) conv'd+silu'd inputs
+    delta: jnp.ndarray,            # (B, S, di)
+    A: jnp.ndarray,                # (di, ds) negative
+    Bs: jnp.ndarray,               # (B, S, ds)
+    Cs: jnp.ndarray,               # (B, S, ds)
+    *,
+    chunk: int = 64,
+    block_di: int = 256,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Selective scan.  Returns (y (B,S,di), final state (B,di,ds))."""
+    B, S, di = xc.shape
+    ds = A.shape[1]
+    chunk = min(chunk, S)
+    block_di = min(block_di, di)
+    assert S % chunk == 0 and di % block_di == 0, (S, chunk, di, block_di)
+    nc, nd = S // chunk, di // block_di
+
+    kernel = functools.partial(_mamba_kernel, chunk=chunk, num_chunks=nc)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(B, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_di), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, block_di), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((block_di, ds), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, d, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_di), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, block_di, ds), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di), xc.dtype),
+            jax.ShapeDtypeStruct((B, di, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_di, ds), jnp.float32)],
+        interpret=interpret,
+    )(delta, xc, A, Bs, Cs)
+    return y, hT

@@ -1,0 +1,163 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each wrapper: (a) pads inputs to kernel tile boundaries, (b) dispatches to
+``interpret=True`` automatically off-TPU (this container is CPU-only; the
+kernel body then runs as a Python/XLA emulation, proving correctness while
+the BlockSpec tiling stays the TPU deployment artifact), (c) restores the
+caller's shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba as _mamba
+from repro.kernels import rwkv6 as _rwkv6
+from repro.kernels import support_margin as _sm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def attention(
+    q: jnp.ndarray,                # (B, Sq, H, hd)
+    k: jnp.ndarray,                # (B, Skv, KV, hd)
+    v: jnp.ndarray,                # (B, Skv, KV, hdv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_valid: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Flash attention; pads Sq/Skv to block multiples (padding keys are
+    masked out via ``kv_valid``)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Skv, 8))
+    qp = _pad_to(q, 1, bq)
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    if kp.shape[1] != Skv and kv_valid is None:
+        kv_valid = Skv
+    out = _fa.flash_attention(qp, kp, vp, causal=causal, window=window,
+                              kv_valid=kv_valid, block_q=bq, block_k=bk,
+                              interpret=interpret)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+
+def rwkv6(
+    r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+    u: jnp.ndarray, *, chunk: int = 32, interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV; pads S to the chunk multiple (w=1, k=0 padding steps are
+    state no-ops)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        r = _pad_to(r, 1, chunk)
+        k = _pad_to(k, 1, chunk)
+        v = _pad_to(v, 1, chunk)
+        w = _pad_to(w, 1, chunk, value=1.0)   # decay 1.0 ⇒ state unchanged
+    y, sT = _rwkv6.rwkv6_chunked(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    return y[:, :S], sT
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+
+def selective_scan(
+    xc: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
+    Bs: jnp.ndarray, Cs: jnp.ndarray, *,
+    chunk: int = 64, block_di: int = 256, interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Selective scan; pads S to the chunk multiple (Δ=0 steps are state
+    no-ops) and d_inner to the block multiple."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, S, di = xc.shape
+    chunk = min(chunk, S)
+    block_di = min(block_di, di)
+    xp = _pad_to(_pad_to(xc, 1, chunk), 2, block_di)
+    dp = _pad_to(_pad_to(delta, 1, chunk), 2, block_di)
+    Ap = _pad_to(A, 0, block_di)
+    Bp = _pad_to(Bs, 1, chunk)
+    Cp = _pad_to(Cs, 1, chunk)
+    y, hT = _mamba.mamba_scan(xp, dp, Ap, Bp, Cp, chunk=chunk,
+                              block_di=block_di, interpret=interpret)
+    return y[:, :S, :di], hT[:, :di]
+
+
+# ---------------------------------------------------------------------------
+# support margin (paper data plane)
+# ---------------------------------------------------------------------------
+
+_LANE = 8  # contraction padding for the tiny-d protocol geometry
+
+
+def support_ranges(
+    V: jnp.ndarray, Xw: jnp.ndarray, yw: jnp.ndarray, *,
+    block_m: int = 256, block_n: int = 512, interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Consistent-threshold (lo, hi) per direction; pads m/n/d (padding
+    points get label 0 and are ignored by the masked reductions)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    m, n = V.shape[0], Xw.shape[0]
+    bm = min(block_m, max(m, 8))
+    bn = min(block_n, max(n, 8))
+    Vp = _pad_to(_pad_to(V, 0, bm), 1, _LANE)
+    Xp = _pad_to(_pad_to(Xw, 0, bn), 1, _LANE)
+    yp = _pad_to(yw.astype(jnp.float32), 0, bn)
+    lo, hi = _sm.threshold_ranges(Vp, Xp, yp, block_m=bm, block_n=bn,
+                                  interpret=interpret)
+    return lo[:m], hi[:m]
+
+
+def support_uncertain(
+    V: jnp.ndarray, dir_ok: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+    X: jnp.ndarray, y: jnp.ndarray, *,
+    block_m: int = 256, block_n: int = 512, interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """SOU membership mask (bool, (n,)); pads m (dir_ok=0) and n."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    m, n = V.shape[0], X.shape[0]
+    bm = min(block_m, max(m, 8))
+    bn = min(block_n, max(n, 8))
+    Vp = _pad_to(_pad_to(V, 0, bm), 1, _LANE)
+    okp = _pad_to(dir_ok.astype(jnp.float32), 0, bm)
+    lop = _pad_to(lo, 0, bm)
+    hip = _pad_to(hi, 0, bm, value=-1.0)  # padded dirs: empty interval
+    Xp = _pad_to(_pad_to(X, 0, bn), 1, _LANE)
+    yp = _pad_to(y.astype(jnp.float32), 0, bn)
+    out = _sm.uncertain_mask(Vp, okp, lop, hip, Xp, yp, block_m=bm,
+                             block_n=bn, interpret=interpret)
+    return out[:n] > 0.5

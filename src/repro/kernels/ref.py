@@ -1,0 +1,139 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the direct, unblocked mathematical definition — no tiling,
+no online rescaling — used by the per-kernel ``assert_allclose`` sweeps in
+``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,                # (B, Sq, H, hd)
+    k: jnp.ndarray,                # (B, Skv, KV, hd)
+    v: jnp.ndarray,                # (B, Skv, KV, hdv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_valid: Optional[int] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Dense softmax attention with GQA broadcast."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, hdv = v.shape
+    G = H // KV
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    rows = q_offset + jnp.arange(Sq)
+    cols = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= cols[None, :] <= rows[:, None]
+    if window is not None:
+        mask &= cols[None, :] > rows[:, None] - window
+    if kv_valid is not None:
+        mask &= cols[None, :] < kv_valid
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqs,bshd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_ref(
+    r: jnp.ndarray,                # (B, S, H, hd)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,                # data-dependent decay in (0, 1)
+    u: jnp.ndarray,                # (H, hd) bonus
+    S0: Optional[jnp.ndarray] = None,  # (B, H, hd, hd)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential RWKV-6 recurrence (the Finch time-mix WKV loop).
+
+      y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ);  S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    """
+    B, S, H, hd = r.shape
+    Sst = jnp.zeros((B, H, hd, hd), jnp.float32) if S0 is None else S0.astype(jnp.float32)
+
+    def step(Swkv, t):
+        r_t, k_t, v_t, w_t = t
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, Swkv + u.astype(jnp.float32)[..., :, None] * kv)
+        Swkv = w_t[..., :, None] * Swkv + kv
+        return Swkv, y
+
+    xs = tuple(a.astype(jnp.float32).transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    ST, ys = jax.lax.scan(step, Sst, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), ST
+
+
+def mamba_ref(
+    xc: jnp.ndarray,               # (B, S, di) conv'd+silu'd inputs
+    delta: jnp.ndarray,            # (B, S, di) softplus'd step sizes
+    A: jnp.ndarray,                # (di, ds) negative
+    Bs: jnp.ndarray,               # (B, S, ds)
+    Cs: jnp.ndarray,               # (B, S, ds)
+    h0: Optional[jnp.ndarray] = None,  # (B, di, ds)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential Mamba-1 selective scan.
+
+      h_t = exp(Δ_t A) h_{t-1} + (Δ_t x_t) B_t;   y_t = h_t C_tᵀ
+    """
+    B, S, di = xc.shape
+    ds = A.shape[1]
+    h_init = jnp.zeros((B, di, ds), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        d_t, B_t, C_t, x_t = t
+        dA = jnp.exp(d_t[..., None].astype(jnp.float32) * A.astype(jnp.float32))
+        dBx = (d_t * x_t)[..., None].astype(jnp.float32) * B_t[:, None, :].astype(jnp.float32)
+        h = dA * h + dBx
+        y_t = jnp.einsum("bds,bs->bd", h, C_t.astype(jnp.float32))
+        return h, y_t
+
+    xs = (delta.transpose(1, 0, 2), Bs.transpose(1, 0, 2),
+          Cs.transpose(1, 0, 2), xc.transpose(1, 0, 2))
+    hT, ys = jax.lax.scan(step, h_init, xs)
+    return ys.transpose(1, 0, 2).astype(xc.dtype), hT
+
+
+def threshold_ranges_ref(
+    V: jnp.ndarray,                # (m, d) directions
+    Xw: jnp.ndarray,               # (n, d) transcript points
+    yw: jnp.ndarray,               # (n,) ±1
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-direction consistent-threshold interval (lo, hi).
+
+    Convention matches ``repro.core.geometry.consistent_threshold_ranges``:
+    predict +1 iff v·x < t, so lo = max over positives, hi = min over negatives.
+    """
+    proj = V @ Xw.T
+    big = jnp.inf
+    pos = yw == 1
+    lo = jnp.max(jnp.where(pos[None, :], proj, -big), axis=1, initial=-big)
+    hi = jnp.min(jnp.where(~pos[None, :], proj, big), axis=1, initial=big)
+    return lo, hi
+
+
+def uncertain_mask_ref(
+    V: jnp.ndarray,                # (m, d)
+    dir_ok: jnp.ndarray,           # (m,) bool
+    lo: jnp.ndarray,               # (m,)
+    hi: jnp.ndarray,               # (m,)
+    X: jnp.ndarray,                # (n, d)
+    y: jnp.ndarray,                # (n,) ±1
+) -> jnp.ndarray:
+    """Set-of-uncertainty membership for each point of (X, y)."""
+    nonempty = (lo < hi) & dir_ok
+    proj = V @ X.T                 # (m, n)
+    pos_risk = proj > lo[:, None]
+    neg_risk = proj < hi[:, None]
+    at_risk = jnp.where((y == 1)[None, :], pos_risk, neg_risk)
+    return jnp.any(at_risk & nonempty[:, None], axis=0)

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel for the RWKV-6 (Finch) WKV recurrence.
+
+TPU adaptation (recorded in DESIGN.md): instead of a step-per-token VPU loop
+(the GPU CUDA kernel's shape), the sequence is processed in chunks with the
+*closed-form intra-chunk expansion*, which turns the recurrence into three
+MXU matmuls per chunk plus one rank-1 state update:
+
+  P_t   = prod_{s<=t} w_s                      (cumulative decay, per k-dim)
+  y_t   = (r_t ⊙ P_{t-1}) · S_chunk0
+          + Σ_{s<t} [(r_t ⊙ P_{t-1}/P_s) · k_s] v_s
+          + (r_t ⊙ u) · k_t  v_t
+  S_next = diag(P_T) S_chunk0 + Σ_s diag(P_T/P_s) k_s v_sᵀ
+
+The (chunk, chunk) inner term is a strictly-lower-triangular masked matmul —
+exactly a flash-attention-shaped tile.  The running state S (hd × hd per
+head) persists in VMEM scratch across the innermost sequential chunk grid
+dimension.  Division by P_s is the standard chunked-linear-attention
+normalization; chunks are kept short (<=64) and all math is f32 so the
+decay ratio stays in range (w ∈ (0,1), so P is monotone decreasing and
+P_{t-1}/P_s <= 1 for s <= t-1; k_s/P_s can grow but only over one chunk).
+
+Grid: (B, H, num_chunks) — chunks innermost/sequential.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sT_ref, S_ref, *,
+                  chunk: int, num_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        S_ref[...] = jnp.zeros_like(S_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)          # (T, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)             # (hd,)
+    S = S_ref[...]                               # (hd, hd) state, k-major
+
+    logw = jnp.log(w)                            # w ∈ (0,1) ⇒ logw < 0
+    P = jnp.exp(jnp.cumsum(logw, axis=0))        # (T, hd)  P_t
+    Pprev = jnp.exp(jnp.cumsum(logw, axis=0) - logw)  # P_{t-1} (P_0 = 1)
+
+    # inter-chunk: y_t += (r_t ⊙ P_{t-1}) @ S
+    y = (r * Pprev) @ S                          # (T, hd) — MXU
+
+    # intra-chunk: A[t,s] = (r_t ⊙ P_{t-1}) · (k_s / P_s)   for s < t
+    #              A[t,t] = (r_t ⊙ u) · k_t
+    kscaled = k / P                              # (T, hd)
+    A = (r * Pprev) @ kscaled.T                  # (T, T) — MXU
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    A = jnp.where(s_idx < t_idx, A, 0.0)
+    diag = jnp.sum((r * u) * k, axis=-1)         # (T,)
+    A = A + jnp.where(s_idx == t_idx, diag[:, None], 0.0)
+    y = y + A @ v                                # (T, hd) — MXU
+
+    y_ref[0, 0, :, :] = y.astype(y_ref.dtype)
+
+    # state update: S' = diag(P_T) S + (k ⊙ P_T/P)ᵀ v
+    PT = P[-1]                                   # (hd,)
+    S_ref[...] = PT[:, None] * S + (kscaled * PT).T @ v
+
+    @pl.when(ci == num_chunks - 1)
+    def _emit_state():
+        sT_ref[0, 0, :, :] = S_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_chunked(
+    r: jnp.ndarray,                # (B, S, H, hd)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,                # decay ∈ (0,1)
+    u: jnp.ndarray,                # (H, hd)
+    *,
+    chunk: int = 32,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV pass.  Returns (y (B,S,H,hd), final state (B,H,hd,hd))."""
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    # head-major time stripes: (B, H, S, hd)
+    rt, kt, vt, wt = (a.transpose(0, 2, 1, 3) for a in (r, k, v, w))
+
+    kernel = functools.partial(_rwkv6_kernel, chunk=chunk, num_chunks=nc)
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, hd), r.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, wt, u)
+    return y.transpose(0, 2, 1, 3), sT

@@ -1,0 +1,169 @@
+"""Pallas TPU kernels for the paper's data-plane hot loop.
+
+The IterativeSupports protocol (paper §4–5) spends its cycles in two bulk
+scans over a node's local shard, both of the shape "project n points onto m
+candidate directions and reduce":
+
+  1. ``threshold_ranges``: per direction v, the consistent-threshold interval
+     (lo, hi) = (max_{y=+1} v·x, min_{y=-1} v·x) over the protocol transcript
+     — a (m, n) matmul with a masked row max/min fused in, never
+     materializing the (m, n) projection matrix in HBM.
+  2. ``uncertain_count``: given (lo, hi, dir_ok) per direction, decide for
+     every local point whether *some* consistent classifier can still
+     misclassify it (SOU membership, paper §4.1) — the same matmul shape
+     with an any-reduce over directions.
+
+On a v5e these tiles are MXU work: the d-dim contraction is zero-padded to
+the 128 lane width by the wrapper in ``ops.py`` (the paper's experiments are
+d=2..10; padding is free relative to restructuring).  Grid layout puts the
+reduction axis innermost/sequential so the running reduction lives in a VMEM
+scratch accumulator.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 1e30
+
+
+def _ranges_kernel(v_ref, x_ref, y_ref, lo_ref, hi_ref, acc_lo, acc_hi, *,
+                   num_n_blocks: int):
+    ni = pl.program_id(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        acc_lo[...] = jnp.full_like(acc_lo, -BIG)
+        acc_hi[...] = jnp.full_like(acc_hi, BIG)
+
+    V = v_ref[...].astype(jnp.float32)           # (bm, d)
+    X = x_ref[...].astype(jnp.float32)           # (bn, d)
+    y = y_ref[...].astype(jnp.float32)           # (bn,) ±1, 0 = padding
+    proj = V @ X.T                               # (bm, bn) — MXU
+    pos = (y == 1.0)[None, :]
+    neg = (y == -1.0)[None, :]
+    acc_lo[...] = jnp.maximum(acc_lo[...], jnp.where(pos, proj, -BIG).max(axis=1))
+    acc_hi[...] = jnp.minimum(acc_hi[...], jnp.where(neg, proj, BIG).min(axis=1))
+
+    @pl.when(ni == num_n_blocks - 1)
+    def _emit():
+        lo_ref[...] = acc_lo[...]
+        hi_ref[...] = acc_hi[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def threshold_ranges(
+    V: jnp.ndarray,                # (m, d) directions
+    Xw: jnp.ndarray,               # (n, d) transcript points
+    yw: jnp.ndarray,               # (n,) ±1 (0 = padding row)
+    *,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused (lo, hi) consistent-threshold ranges.  Shapes must tile evenly
+    (the ops.py wrapper pads)."""
+    m, d = V.shape
+    n = Xw.shape[0]
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    assert m % block_m == 0 and n % block_n == 0, (m, block_m, n, block_n)
+    nm, nn = m // block_m, n // block_n
+
+    kernel = functools.partial(_ranges_kernel, num_n_blocks=nn)
+    lo, hi = pl.pallas_call(
+        kernel,
+        grid=(nm, nn),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m,), lambda i, j: (i,)),
+            pl.BlockSpec((block_m,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_m,), jnp.float32),
+                        pltpu.VMEM((block_m,), jnp.float32)],
+        interpret=interpret,
+    )(V, Xw, yw)
+    return lo, hi
+
+
+def _uncertain_kernel(x_ref, y_ref, v_ref, ok_ref, lo_ref, hi_ref, out_ref,
+                      acc_ref, *, num_m_blocks: int):
+    mi = pl.program_id(1)
+
+    @pl.when(mi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    X = x_ref[...].astype(jnp.float32)           # (bn, d)
+    y = y_ref[...].astype(jnp.float32)           # (bn,)
+    V = v_ref[...].astype(jnp.float32)           # (bm, d)
+    lo = lo_ref[...]                             # (bm,)
+    hi = hi_ref[...]
+    ok = ok_ref[...]                             # (bm,) 1.0/0.0
+
+    proj = V @ X.T                               # (bm, bn) — MXU
+    nonempty = (lo < hi) & (ok != 0.0)           # (bm,)
+    pos_risk = proj > lo[:, None]
+    neg_risk = proj < hi[:, None]
+    at_risk = jnp.where((y == 1.0)[None, :], pos_risk, neg_risk)
+    hit = jnp.any(at_risk & nonempty[:, None], axis=0)  # (bn,)
+    acc_ref[...] = jnp.maximum(acc_ref[...], hit.astype(jnp.float32))
+
+    @pl.when(mi == num_m_blocks - 1)
+    def _emit():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def uncertain_mask(
+    V: jnp.ndarray,                # (m, d)
+    dir_ok: jnp.ndarray,           # (m,) float 1.0/0.0
+    lo: jnp.ndarray,               # (m,)
+    hi: jnp.ndarray,               # (m,)
+    X: jnp.ndarray,                # (n, d)
+    y: jnp.ndarray,                # (n,) ±1
+    *,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """SOU membership (float 1.0/0.0 per point; caller thresholds)."""
+    m, d = V.shape
+    n = X.shape[0]
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    assert m % block_m == 0 and n % block_n == 0, (m, block_m, n, block_n)
+    nm, nn = m // block_m, n // block_n
+
+    kernel = functools.partial(_uncertain_kernel, num_m_blocks=nm)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nn, nm),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_m, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_m,), lambda i, j: (j,)),
+            pl.BlockSpec((block_m,), lambda i, j: (j,)),
+            pl.BlockSpec((block_m,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_n,), jnp.float32)],
+        interpret=interpret,
+    )(X, y, V, dir_ok, lo, hi)
+    return out

@@ -1,0 +1,34 @@
+"""Production mesh definitions.
+
+Target: TPU v5e pods — 256 chips/pod in a (16, 16) ("data", "model") layout;
+multi-pod adds a leading "pod" axis (2 pods = 512 chips) used for data
+parallelism across pods (DCN-ish axis).  Built on demand — importing this
+module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    kinds = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=kinds)
+
+
+def make_host_mesh(model: int = 1, data: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    data = max(1, min(data, n // model))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW_PER_LINK = 50e9        # bytes/s/link
+CHIP_HBM_BYTES = 16e9         # 16 GB

@@ -1,0 +1,104 @@
+"""Training launcher: the cluster entry point.
+
+Builds the mesh from whatever devices exist (the production (16,16) /
+(2,16,16) meshes on a real pod; a 1×N host mesh on CPU), applies the same
+sharding rules and case policy the dry-run validates, and runs the jit'd
+train step with the synthetic pipeline.
+
+Examples:
+  # reduced smoke run on this host
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --reduced \
+      --steps 50 --batch 8 --seq 128
+  # full config on a pod (device count must match the mesh)
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b --steps 1000
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs import ARCHS, get_config
+from repro.data.pipeline import DataConfig, synthetic_stream
+from repro.distribution.sharding import batch_shardings, opt_shardings, param_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import InputShape
+from repro.models.model import init_lm
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train.trainer import TrainConfig, make_train_step
+
+
+def make_host_mesh() -> Mesh:
+    """Best mesh for the devices we actually have."""
+    devs = jax.devices()
+    n = len(devs)
+    if n >= 512:
+        return make_production_mesh(multi_pod=True)
+    if n >= 256:
+        return make_production_mesh(multi_pod=False)
+    import numpy as np
+    return Mesh(np.asarray(devs).reshape(1, n), ("data", "model"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-135m", choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    n_dev = mesh.devices.size
+    pure_dp = cfg.param_count() < 3e9
+    print(f"arch={cfg.name} params={cfg.param_count() / 1e6:.1f}M "
+          f"mesh={dict(mesh.shape)} pure_dp={pure_dp}")
+
+    tc = TrainConfig(steps=args.steps, warmup=max(5, args.steps // 20),
+                     log_every=max(1, args.steps // 20), ckpt_dir=args.ckpt,
+                     dtype=jnp.float32 if n_dev == 1 else jnp.bfloat16,
+                     microbatches=args.microbatches,
+                     optim=AdamWConfig(lr=args.lr))
+    dc = DataConfig(seq_len=args.seq, global_batch=args.batch)
+    shape = InputShape("cli", args.seq, args.batch, "train")
+
+    with jax.set_mesh(mesh):
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        opt = adamw_init(params)
+        psh = param_shardings(mesh, params, pure_dp=pure_dp)
+        osh = opt_shardings(mesh, opt, pure_dp=pure_dp)
+        params = jax.device_put(params, psh)
+        opt = jax.device_put(opt, osh)
+        step = jax.jit(make_train_step(cfg, tc),
+                       in_shardings=(psh, osh, None),
+                       out_shardings=(psh, osh, None),
+                       donate_argnums=(0, 1))
+        data = synthetic_stream(cfg, dc)
+        t0 = time.time()
+        last = {}
+        for i in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+            params, opt, metrics = step(params, opt, batch)
+            if i % tc.log_every == 0 or i == args.steps - 1:
+                last = {k: float(v) for k, v in metrics.items()}
+                print(f"step {i:5d} loss {last['loss']:.4f} "
+                      f"acc {last.get('acc', 0):.3f} ({time.time() - t0:.1f}s)")
+        if args.ckpt:
+            from repro.train.checkpoint import save_checkpoint
+            save_checkpoint(args.ckpt, params, opt, step=args.steps)
+            print(f"checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

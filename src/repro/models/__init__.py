@@ -1,0 +1,1 @@
+from repro.models import config, layers, model, moe, ssm, transformer  # noqa: F401

@@ -1,0 +1,413 @@
+"""Shared neural layers: norms, RoPE / M-RoPE, GQA + MLA attention, MLPs.
+
+Everything is functional: ``init_*`` builds a param dict, ``apply_*`` consumes
+it.  Attention uses a query-block online pass (``lax.map`` over q-blocks) so
+long-context prefill never materializes the full (Sq, Skv) score matrix —
+the XLA analogue of the Pallas flash kernel in ``repro.kernels``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd_rot: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for a rotary block of ``hd_rot`` dims."""
+    return 1.0 / (theta ** (jnp.arange(0, hd_rot, 2, dtype=jnp.float32) / hd_rot))
+
+
+def rope_apply(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mrope_sections: Optional[Tuple[int, int, int]] = None) -> jnp.ndarray:
+    """Rotate ``x`` (..., S, H, hd) by position-dependent angles.
+
+    positions: (B, S) for standard RoPE, (3, B, S) for M-RoPE where the three
+    planes are (temporal, height, width) ids and the frequency dims are split
+    into ``mrope_sections`` groups (Qwen2-VL §2.1).
+    """
+    *_, S, H, hd = x.shape
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    if mrope_sections is None:
+        pos = positions.astype(jnp.float32)  # (B, S)
+        ang = pos[..., None] * inv[None, None, :]  # (B, S, hd/2)
+    else:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) position ids"
+        sec = mrope_sections
+        assert sum(sec) == hd // 2, (sec, hd)
+        pos = positions.astype(jnp.float32)  # (3, B, S)
+        ang_full = pos[..., None] * inv[None, None, None, :]  # (3, B, S, hd/2)
+        parts = []
+        start = 0
+        for i, s in enumerate(sec):
+            parts.append(ang_full[i, :, :, start:start + s])
+            start += s
+        ang = jnp.concatenate(parts, axis=-1)  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]  # (B, S, 1, hd/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention core: query-block online pass
+# ---------------------------------------------------------------------------
+
+_ATTN_IMPL = "xla"  # "xla" (lax.map online pass) | "pallas" (repro.kernels)
+
+
+def set_attention_impl(impl: str) -> None:
+    """Select the attention backend for cache-less (train/prefill) paths.
+
+    "pallas" routes through the flash kernel in ``repro.kernels`` (on CPU it
+    runs interpret=True — correctness path; on TPU the compiled kernel).
+    Decode paths (cache writes, ragged validity) always use the XLA pass.
+    """
+    global _ATTN_IMPL
+    assert impl in ("xla", "pallas"), impl
+    _ATTN_IMPL = impl
+
+
+def attention_core(
+    q: jnp.ndarray,           # (B, Sq, H, hd)
+    k: jnp.ndarray,           # (B, Skv, KV, hd)
+    v: jnp.ndarray,           # (B, Skv, KV, hdv)
+    *,
+    causal: bool,
+    q_offset: int | jnp.ndarray = 0,
+    window: Optional[int] = None,
+    kv_valid_len: Optional[jnp.ndarray] = None,
+    block_q: int = 1024,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Exact attention, O(block_q · Skv) live memory.
+
+    ``q_offset``: absolute position of q[0] (decode: the cache index).
+    ``window``: sliding-window width (None = full).
+    ``kv_valid_len``: mask out cache slots >= this length (decode).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if (_ATTN_IMPL == "pallas" and kv_valid_len is None and scale is None
+            and isinstance(q_offset, int) and q_offset == 0
+            and q.shape[-1] == v.shape[-1]):
+        from repro.kernels import ops as _kops
+        return _kops.attention(q, k, v, causal=causal, window=window)
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, KV, G, hd)
+    kv_idx = jnp.arange(Skv)
+
+    # flash-style: the block body is rematerialized in the backward pass, so
+    # the (bq, Skv) score/prob tiles are never stored across blocks.
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def one_block(args):
+        qb, row0 = args  # (B, bq, KV, G, hd), scalar index of first row
+        bq = qb.shape[1]
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qb.astype(jnp.float32) * scale,
+                       k.astype(jnp.float32))
+        rows = row0 + jnp.arange(bq) + q_offset  # absolute positions
+        mask = jnp.ones((bq, Skv), dtype=bool)
+        if causal:
+            mask &= kv_idx[None, :] <= rows[:, None]
+        if window is not None:
+            mask &= kv_idx[None, :] > rows[:, None] - window
+        if kv_valid_len is not None:
+            mask &= kv_idx[None, :] < kv_valid_len
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+        return o.reshape(B, bq, H, -1)
+
+    if Sq <= block_q:
+        return one_block((qg, jnp.int32(0)))
+
+    nb = Sq // block_q
+    assert Sq % block_q == 0, (Sq, block_q)
+    qblocks = qg.reshape(B, nb, block_q, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    row0s = jnp.arange(nb, dtype=jnp.int32) * block_q
+    outs = jax.lax.map(one_block, (qblocks, row0s))  # (nb, B, bq, H, hdv)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, -1)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dtype),
+        "wk": dense_init(ks[1], d, KV * hd, dtype),
+        "wv": dense_init(ks[2], d, KV * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def apply_attention(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                      # (B, S, d)
+    positions: jnp.ndarray,              # (B, S) or (3, B, S)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    cache: Optional[Params] = None,      # {"k": (B,Sc,KV,hd), "v": ..., } decode
+    cache_index: Optional[jnp.ndarray] = None,
+    cross_y: Optional[jnp.ndarray] = None,           # encoder output (prefill)
+    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # cross-attn decode
+    block_q: int = 1024,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+    q = q.reshape(B, S, H, hd)
+
+    if cross_y is not None:
+        # cross-attention: keys/values from the encoder sequence, no RoPE
+        Se = cross_y.shape[1]
+        k = (cross_y @ p["wk"]).reshape(B, Se, KV, hd)
+        v = (cross_y @ p["wv"]).reshape(B, Se, KV, hd)
+        out = attention_core(q, k, v, causal=False, block_q=block_q)
+        out = out.reshape(B, S, H * hd) @ p["wo"]
+        return out, {"k": k, "v": v}  # static cross cache for decode
+    if kv_override is not None:
+        k, v = kv_override
+        out = attention_core(q, k, v, causal=False, block_q=block_q)
+        out = out.reshape(B, S, H * hd) @ p["wo"]
+        return out, None
+    # self-attention path
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.rope != "none":
+        sec = cfg.mrope_sections if cfg.rope == "mrope" else None
+        q = rope_apply(q, positions, cfg.rope_theta, sec)
+        k = rope_apply(k, positions, cfg.rope_theta, sec)
+
+    new_cache = None
+    if cache is not None:
+        # decode: write new k/v at cache_index, attend over the cache
+        ck, cv = cache["k"], cache["v"]
+        if window is not None:
+            slot = jnp.mod(cache_index, ck.shape[1])  # ring buffer
+        else:
+            slot = cache_index
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        k, v = ck, cv
+        new_cache = {"k": ck, "v": cv}
+        q_offset = cache_index
+        kv_valid = jnp.minimum(cache_index + S, ck.shape[1])
+        if window is not None:
+            # Ring buffer: it holds exactly the last `window` positions, so all
+            # filled slots are attendable and absolute-position masks don't apply.
+            causal_here = False
+        else:
+            causal_here = causal
+        q_offset = cache_index
+        out = attention_core(q, k, v, causal=causal_here, q_offset=q_offset,
+                             window=None, kv_valid_len=kv_valid, block_q=block_q)
+    else:
+        out = attention_core(q, k, v, causal=causal, window=window, block_q=block_q)
+
+    out = out.reshape(B, S, H * hd) @ p["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    p: Params = {}
+    if m.q_lora:
+        p["wdq"] = dense_init(ks[0], d, m.q_lora, dtype)
+        p["q_norm"] = jnp.ones((m.q_lora,), dtype)
+        p["wuq"] = dense_init(ks[1], m.q_lora, H * qk, dtype)
+    else:
+        p["wq"] = dense_init(ks[0], d, H * qk, dtype)
+    p["wdkv"] = dense_init(ks[2], d, m.kv_lora, dtype)
+    p["kv_norm"] = jnp.ones((m.kv_lora,), dtype)
+    # separate K-up / V-up weights (a fused (kvl, H·(nope+hdv)) weight makes
+    # the per-head nope/v split a cross-shard redistribution; see init_mlp)
+    kk, kv2 = jax.random.split(ks[3])
+    p["wuk"] = dense_init(kk, m.kv_lora, H * m.qk_nope_dim, dtype)
+    p["wuv"] = dense_init(kv2, m.kv_lora, H * m.v_head_dim, dtype)
+    p["wkr"] = dense_init(ks[4], d, m.qk_rope_dim, dtype)
+    p["wo"] = dense_init(ks[5], H * m.v_head_dim, d, dtype)
+    return p
+
+
+def _mla_q(p, cfg, x):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    if "wdq" in p:
+        q = rmsnorm(x @ p["wdq"], p["q_norm"], cfg.norm_eps) @ p["wuq"]
+    else:
+        q = x @ p["wq"]
+    return q.reshape(B, S, H, qk)
+
+
+def apply_mla(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    window: Optional[int] = None,
+    cache: Optional[Params] = None,      # {"ckv": (B,Sc,kv_lora), "krope": (B,Sc,rope)}
+    cache_index: Optional[jnp.ndarray] = None,
+    absorb: bool = False,
+    block_q: int = 1024,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.n_heads
+    nope, rope_d, hdv = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim
+    scale = 1.0 / math.sqrt(nope + rope_d)
+
+    q = _mla_q(p, cfg, x)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope_apply(q_rope, positions, cfg.rope_theta)
+
+    ckv = rmsnorm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)  # (B, S, kv_lora)
+    krope = rope_apply((x @ p["wkr"]).reshape(B, S, 1, rope_d), positions,
+                       cfg.rope_theta).reshape(B, S, rope_d)
+
+    new_cache = None
+    q_offset = 0
+    kv_valid = None
+    causal = True
+    if cache is not None:
+        if window is not None:
+            slot = jnp.mod(cache_index, cache["ckv"].shape[1])
+            causal = False
+        else:
+            slot = cache_index
+        cc = jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype),
+                                          (0, slot, 0))
+        cr = jax.lax.dynamic_update_slice(cache["krope"], krope.astype(cache["krope"].dtype),
+                                          (0, slot, 0))
+        ckv, krope = cc, cr
+        new_cache = {"ckv": cc, "krope": cr}
+        q_offset = cache_index
+        kv_valid = jnp.minimum(cache_index + S, cc.shape[1])
+
+    Skv = ckv.shape[1]
+    wuk = p["wuk"].reshape(m.kv_lora, H, nope)
+    wuv = p["wuv"].reshape(m.kv_lora, H, hdv)
+
+    if absorb:
+        # ---- absorbed decode (beyond-paper perf path) ----------------------
+        # score = q_nope·(ckv @ Wk)ᵀ = (q_nope @ Wkᵀ)·ckvᵀ : attention in the
+        # 512-dim latent space; V-side Wv is absorbed into the output proj.
+        wk = wuk                                    # (kvl, H, nope)
+        wv = wuv                                    # (kvl, H, hdv)
+        q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope.astype(jnp.float32),
+                           wk.astype(jnp.float32))  # (B,S,H,kvl)
+        kv_idx = jnp.arange(Skv)
+        s = jnp.einsum("bqhl,bsl->bhqs", q_lat * scale, ckv.astype(jnp.float32))
+        s += jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32) * scale,
+                        krope.astype(jnp.float32))
+        rows = q_offset + jnp.arange(S)
+        mask = jnp.ones((S, Skv), bool)
+        if causal:
+            mask &= kv_idx[None, :] <= rows[:, None]
+        if kv_valid is not None:
+            mask &= kv_idx[None, :] < kv_valid
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        pw = jax.nn.softmax(s, axis=-1)
+        pw = jnp.where(jnp.isnan(pw), 0.0, pw)
+        o_lat = jnp.einsum("bhqs,bsl->bqhl", pw, ckv.astype(jnp.float32))  # (B,S,H,kvl)
+        out = jnp.einsum("bqhl,lhv->bqhv", o_lat, wv.astype(jnp.float32))
+        out = out.reshape(B, S, H * hdv).astype(x.dtype) @ p["wo"]
+        return out, new_cache
+
+    # ---- faithful reconstruct path -----------------------------------------
+    k_nope = jnp.einsum("bsl,lhe->bshe", ckv, wuk.astype(ckv.dtype))  # (B,Skv,H,nope)
+    v = jnp.einsum("bsl,lhe->bshe", ckv, wuv.astype(ckv.dtype))       # (B,Skv,H,hdv)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                                  (B, Skv, H, rope_d)).astype(k_nope.dtype)],
+                        axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = attention_core(qfull, k, v, causal=causal, q_offset=q_offset,
+                         kv_valid_len=kv_valid, block_q=block_q, scale=scale)
+    out = out.reshape(B, S, H * hdv) @ p["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, kind: str = "mlp", dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "mlp":
+        # SwiGLU with SEPARATE gate/up weights: a fused (d, 2·d_ff) weight
+        # sharded on its last dim makes the later jnp.split a cross-shard
+        # redistribution (observed as TB-scale collective-permutes in the
+        # dry-run HLO — EXPERIMENTS.md §Perf); separate weights keep both
+        # halves column-sharded with zero comm.
+        return {"wgate": dense_init(k1, d, d_ff, dtype),
+                "wup": dense_init(k2, d, d_ff, dtype),
+                "wo": dense_init(k3, d_ff, d, dtype)}
+    return {"wi": dense_init(k1, d, d_ff, dtype), "wo": dense_init(k2, d_ff, d, dtype)}
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, kind: str = "mlp") -> jnp.ndarray:
+    if kind == "mlp":
+        return (jax.nn.silu(x @ p["wgate"]) * (x @ p["wup"])) @ p["wo"]
+    return jax.nn.gelu(x @ p["wi"]) @ p["wo"]

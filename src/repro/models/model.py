@@ -1,0 +1,227 @@
+"""Top-level language model: embedding → period stack → norm → head.
+
+Covers all six assigned families behind one functional API:
+
+* ``init_lm``            — parameter pytree (or its shape tree via eval_shape)
+* ``forward_train``      — tokens → loss (chunked vocab cross-entropy)
+* ``prefill``            — tokens → (last-position logits, filled caches)
+* ``decode_step``        — one token with caches (serve_step's core)
+* ``make_caches``        — decode-state pytree for a (cfg, batch, cache_len)
+
+VLM (qwen2-vl): precomputed patch embeddings are spliced over the first
+``n_vis`` token positions and M-RoPE takes (3, B, S) position ids.
+Audio (whisper): precomputed frame embeddings feed a bidirectional encoder;
+the decoder cross-attends (frontends stubbed per assignment carve-out).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.constraints import constrain_batch_dim
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+from repro.models.transformer import apply_stack, init_stack, stack_cache_init
+
+Params = Dict[str, Any]
+
+ENC_PERIOD = (("attn", "gelu_mlp"),)  # whisper encoder layers
+
+
+@dataclasses.dataclass(frozen=True)
+class RunFlags:
+    """Execution knobs (not architecture): set by launcher / perf configs."""
+    window: Optional[int] = None       # sliding-window attention (long_500k)
+    mla_absorb: bool = False           # MLA latent-space decode
+    block_q: int = 1024                # q-block size of the online attention
+    remat: bool = False                # activation checkpointing over periods
+    loss_chunk: int = 512              # seq chunk for vocab cross-entropy
+
+
+def cast_params(p: Params, dtype) -> Params:
+    """Mixed precision: compute in ``dtype`` against f32 master params.
+    The cast is differentiable, so grads flow back to the f32 leaves."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if a.dtype in (jnp.float32, jnp.bfloat16) else a, p)
+
+
+def sinusoid_pos(S: int, d: int, dtype) -> jnp.ndarray:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe.astype(dtype)
+
+
+def init_lm(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02).astype(dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "blocks": init_stack(ks[1], cfg, dtype, with_cross=cfg.enc_dec),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab, dtype, scale=0.02)
+    if cfg.enc_dec:
+        p["enc_blocks"] = init_stack(ks[3], cfg, dtype, period=ENC_PERIOD,
+                                     n_periods=cfg.n_enc_layers)
+        p["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def _embed(p: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+           vision_embed: Optional[jnp.ndarray], dtype) -> jnp.ndarray:
+    x = p["embed"][tokens].astype(dtype)
+    if vision_embed is not None:
+        nv = vision_embed.shape[1]
+        x = jnp.concatenate([vision_embed.astype(dtype), x[:, nv:, :]], axis=1)
+    return constrain_batch_dim(x)
+
+
+def _head(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    return x @ w.astype(x.dtype)
+
+
+def _encode(p: Params, cfg: ModelConfig, audio_embed: jnp.ndarray,
+            flags: RunFlags) -> jnp.ndarray:
+    x = audio_embed + sinusoid_pos(audio_embed.shape[1], cfg.d_model, audio_embed.dtype)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+    x, _, _ = apply_stack(p["enc_blocks"], cfg, x, pos, period=ENC_PERIOD,
+                          causal=False, block_q=flags.block_q, remat=flags.remat)
+    return rmsnorm(x, p["enc_norm"], cfg.norm_eps)
+
+
+def _positions(cfg: ModelConfig, batch: Dict[str, jnp.ndarray], B: int, S: int):
+    if cfg.rope == "mrope":
+        if "rope_pos" in batch:
+            return batch["rope_pos"]
+        base = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return jnp.broadcast_to(base[None], (3, B, S))
+    return jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+
+def forward_train(
+    p: Params,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    flags: RunFlags = RunFlags(),
+    dtype=jnp.bfloat16,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Returns (loss, metrics).  batch: tokens, targets [, vision_embed,
+    rope_pos, audio_embed]."""
+    p = cast_params(p, dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed(p, cfg, tokens, batch.get("vision_embed"), dtype)
+    cross_y = None
+    if cfg.enc_dec:
+        cross_y = _encode(p, cfg, batch["audio_embed"].astype(dtype), flags)
+        x = x + sinusoid_pos(S, cfg.d_model, x.dtype)
+    positions = _positions(cfg, batch, B, S)
+    x, _, aux = apply_stack(p["blocks"], cfg, x, positions, causal=True,
+                            cross_y=cross_y, block_q=flags.block_q,
+                            remat=flags.remat)
+    loss, metrics = chunked_ce_loss(p, cfg, x, batch["targets"], flags)
+    loss = loss + aux
+    metrics["aux_loss"] = aux
+    return loss, metrics
+
+
+def chunked_ce_loss(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                    targets: jnp.ndarray, flags: RunFlags):
+    """Cross-entropy without materializing (B, S, vocab) at once: lax.map
+    over sequence chunks keeps live logits at (B, chunk, vocab)."""
+    B, S, d = x.shape
+    chunk = min(flags.loss_chunk, S)
+    nb = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    xb = x.reshape(B, nb, chunk, d).transpose(1, 0, 2, 3)
+    tb = targets.reshape(B, nb, chunk).transpose(1, 0, 2)
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def one(args):
+        xc, tc = args
+        logits = _head(p, cfg, xc).astype(jnp.float32)  # (B, chunk, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return (lse - tgt).sum(), (logits.argmax(-1) == tc).sum()
+
+    losses, hits = jax.lax.map(one, (xb, tb))
+    n = B * S
+    return losses.sum() / n, {"acc": hits.sum() / n}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def make_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16,
+                enc_len: int = 0) -> Params:
+    return stack_cache_init(cfg, batch, cache_len, dtype,
+                            with_cross=cfg.enc_dec, enc_len=enc_len)
+
+
+def prefill(
+    p: Params,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    caches: Params,
+    flags: RunFlags = RunFlags(),
+    dtype=jnp.bfloat16,
+) -> Tuple[jnp.ndarray, Params]:
+    """Run the prompt through the model, filling ``caches`` from index 0.
+    Returns (logits at last position, caches)."""
+    p = cast_params(p, dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed(p, cfg, tokens, batch.get("vision_embed"), dtype)
+    cross_y = None
+    if cfg.enc_dec:
+        cross_y = _encode(p, cfg, batch["audio_embed"].astype(dtype), flags)
+        x = x + sinusoid_pos(S, cfg.d_model, x.dtype)
+    positions = _positions(cfg, batch, B, S)
+    x, new_caches, _ = apply_stack(
+        p["blocks"], cfg, x, positions, causal=True, window=flags.window,
+        caches=caches, cache_index=jnp.int32(0), cross_y=cross_y,
+        block_q=flags.block_q)
+    logits = _head(p, cfg, x[:, -1:, :])
+    return logits, new_caches
+
+
+def decode_step(
+    p: Params,
+    cfg: ModelConfig,
+    caches: Params,
+    tokens: jnp.ndarray,        # (B, 1)
+    pos: jnp.ndarray,           # scalar int32: absolute position
+    flags: RunFlags = RunFlags(),
+    dtype=jnp.bfloat16,
+) -> Tuple[jnp.ndarray, Params]:
+    """One decode step: logits for the new token, updated caches."""
+    B, S = tokens.shape
+    p = cast_params(p, dtype)
+    x = _embed(p, cfg, tokens, None, dtype)
+    if cfg.enc_dec:
+        # sinusoid at the (traced) absolute position — no table needed
+        dim = jnp.arange(0, cfg.d_model, 2, dtype=jnp.float32)[None, :]
+        ang = pos.astype(jnp.float32) / jnp.power(10000.0, dim / cfg.d_model)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + pe[None].astype(x.dtype)
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(pos[None, None], (B, 1))[None].repeat(3, 0)
+    else:
+        positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    x, new_caches, _ = apply_stack(
+        p["blocks"], cfg, x, positions, causal=True, window=flags.window,
+        caches=caches, cache_index=pos, mla_absorb=flags.mla_absorb,
+        block_q=flags.block_q)
+    logits = _head(p, cfg, x)
+    return logits, new_caches

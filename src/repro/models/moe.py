@@ -1,0 +1,193 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded sort-based dispatch,
+optional shared experts (DeepSeek-V2 style), load-balance auxiliary loss.
+
+Dispatch strategy (TPU adaptation): tokens are flattened, expanded top-k ways,
+sorted by expert id, and scattered into a dense (E, capacity, d) buffer that
+feeds one batched einsum per projection — so expert compute is
+``E · cap · d · d_ff`` real FLOPs (≈ tokens · top_k · d · d_ff), not the
+``· n_experts`` blow-up of a dense one-hot dispatch.  With experts sharded on
+the "model" mesh axis this layout is what GSPMD turns into the expert-parallel
+all-to-all.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.constraints import (batch_axes, constrain,
+                                            constrain_batch_dim,
+                                            model_axis_size)
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def _batch_spec_if_divisible(B: int):
+    """Data-parallel axes for a batch of B rows, or None when B does not
+    divide them (decode reshapes to B=1: forcing a shard is a pessimization)."""
+    dp = batch_axes()
+    if dp is None:
+        return None
+    import jax as _jax
+    m = _jax.sharding.get_abstract_mesh()
+    names = dp if isinstance(dp, tuple) else (dp,)
+    total = 1
+    for a in names:
+        total *= m.shape[a]
+    return dp if (B % total == 0 and B >= total) else None
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    mo = cfg.moe
+    if n_tokens * mo.top_k <= 256:
+        # tiny sequences (smoke tests, small decode batches): drop-free
+        # capacity so the dense dispatch agrees exactly with the gather path
+        return n_tokens * mo.top_k
+    cap = int(math.ceil(n_tokens * mo.top_k / mo.n_experts * mo.capacity_factor))
+    # round up to a lane-friendly multiple
+    return max(8, -(-cap // 8) * 8)
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    mo = cfg.moe
+    d, ffe, E = cfg.d_model, mo.d_expert, mo.n_experts
+    ks = jax.random.split(key, 4)
+    kg, ku = jax.random.split(ks[1])
+    p = {
+        "router": dense_init(ks[0], d, E, dtype, scale=0.02),
+        # separate gate/up per expert (see layers.init_mlp: fused + split =
+        # cross-shard redistribution); down: (E, ffe, d) row-parallel
+        "we_g": (jax.random.normal(kg, (E, d, ffe)) / math.sqrt(d)).astype(dtype),
+        "we_u": (jax.random.normal(ku, (E, d, ffe)) / math.sqrt(d)).astype(dtype),
+        "we_o": (jax.random.normal(ks[2], (E, ffe, d)) / math.sqrt(ffe)).astype(dtype),
+    }
+    if mo.n_shared:
+        k1, k2, k3 = jax.random.split(ks[3], 3)
+        p["shared_wg"] = dense_init(k1, d, ffe * mo.n_shared, dtype)
+        p["shared_wu"] = dense_init(k2, d, ffe * mo.n_shared, dtype)
+        p["shared_wo"] = dense_init(k3, ffe * mo.n_shared, d, dtype)
+    return p
+
+
+def apply_moe(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,d), aux load-balance loss scalar).
+
+    Dispatch is **per batch row**: each row sorts its own S·top_k slots into
+    an (E, cap, d) buffer.  Independent rows keep the batch dim shardable on
+    "data" (a global token sort would force GSPMD to replicate the whole
+    token stream — observed as 100+ GB/device temps before this change), and
+    the (B, E, cap, d) layout against experts sharded on "model" is what
+    lowers to the expert-parallel exchange.
+    """
+    mo = cfg.moe
+    B0, S0, d = x.shape
+    if S0 == 1 and B0 > 1:
+        # decode: the batch *is* the token stream — dispatch it as one row so
+        # expert buffers stay (E, cap≈B·K/E) instead of B separate buffers
+        x = x.reshape(1, B0, d)
+    B, S, _ = x.shape
+    E, K = mo.n_experts, mo.top_k
+    cap = moe_capacity(cfg, S)
+
+    if B * S <= 16:
+        out, aux = _moe_gather_path(p, cfg, x)
+        return out.reshape(B0, S0, d), aux
+
+    logits = (x @ p["router"]).astype(jnp.float32)             # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)            # (B, S, K)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # load-balance aux loss (Switch/GShard form), global means
+    me = probs.mean(axis=(0, 1))                               # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        1.0 / (B * S * K))
+    aux = E * jnp.sum(me * ce) * mo.router_aux_weight
+
+    # ---- per-row sort-based dispatch ---------------------------------------
+    TK = S * K
+    flat_e = expert_ids.reshape(B, TK)
+    flat_t = jnp.broadcast_to(jnp.repeat(jnp.arange(S), K)[None], (B, TK))
+    flat_g = gate_vals.reshape(B, TK)
+    order = jnp.argsort(flat_e, axis=1)                        # (B, TK) stable
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st = jnp.take_along_axis(flat_t, order, axis=1)
+    sg = jnp.take_along_axis(flat_g, order, axis=1)
+    # rank within expert segment, per row
+    seg_start = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(E)))(se)
+    pos_in_e = jnp.arange(TK)[None] - jnp.take_along_axis(seg_start, se, axis=1)
+    keep = pos_in_e < cap
+    dest = se * cap + jnp.where(keep, pos_in_e, 0)             # (B, TK)
+
+    xe = jnp.zeros((B, E * cap, d), x.dtype)
+    # keep the token gather purely local per data rank: if GSPMD lets the
+    # operand drift to a model-sharded layout the gather becomes a partial
+    # sum + 0.9 TB/device of all-reduces (deepseek-v2, §Perf).  All pins are
+    # divisibility-checked — decode reshapes to B=1 rows, where forcing a
+    # batch shard would be a pessimization (observed on grok decode).
+    x = constrain_batch_dim(x)
+    st = constrain_batch_dim(st)
+    src = jnp.take_along_axis(x, st[..., None], axis=1)        # (B, TK, d)
+    src = constrain_batch_dim(src)
+    xe = jax.vmap(lambda buf, idx, val: buf.at[idx].add(val))(
+        xe, dest, jnp.where(keep[..., None], src, 0))
+    # Pin the dispatch buffer: the vmap scatter is per-row independent, but
+    # GSPMD propagates the replicated zeros-init through it, making every
+    # data rank's expert buffer a PARTIAL sum — the downstream einsums then
+    # all-reduce (B,E,cap,f)-sized tensors over the data axis (observed
+    # 5 TB/device per einsum on grok-1; EXPERIMENTS.md §Perf).  When the
+    # expert count divides the model axis, additionally shard the flattened
+    # (E·cap) dim on "model" — expert parallelism; pinning it replicated
+    # instead costs 0.5 TB/device of gathers on deepseek-v2 (160 experts).
+    mdl = model_axis_size()
+    espec = "model" if (mdl and E % mdl == 0) else None
+    bspec = _batch_spec_if_divisible(B)
+    xe = constrain(xe, bspec, espec, None)
+    xe = xe.reshape(B, E, cap, d)
+    xe = constrain(xe, bspec, espec, None, None)
+
+    g = jnp.einsum("becd,edf->becf", xe, p["we_g"])            # (B, E, cap, ffe)
+    u = jnp.einsum("becd,edf->becf", xe, p["we_u"])
+    ye = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, p["we_o"])
+    ye = ye.reshape(B, E * cap, d)
+
+    contrib = jnp.take_along_axis(ye, dest[..., None], axis=1)
+    contrib = contrib * (sg * keep)[..., None].astype(ye.dtype)
+    out = jax.vmap(lambda buf, idx, val: buf.at[idx].add(val))(
+        jnp.zeros((B, S, d), x.dtype), st, contrib.astype(x.dtype))
+    out = constrain_batch_dim(out)  # same scatter-propagation hazard as xe
+
+    if mo.n_shared:
+        out = out + (jax.nn.silu(x @ p["shared_wg"]) * (x @ p["shared_wu"])) @ p["shared_wo"]
+    return out.reshape(B0, S0, d), aux
+
+
+def _moe_gather_path(p: Params, cfg: ModelConfig, x: jnp.ndarray):
+    """Few-token path (e.g. batch-1 long-context decode): gather the top-k
+    experts' weights per token instead of running the dense (E, cap) dispatch
+    — E/K× less FLOPs when almost every expert slot would be padding."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    E, K = mo.n_experts, mo.top_k
+    xt = x.reshape(B * S, d)
+    logits = (xt @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)            # (T, K)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+    aux = jnp.zeros((), jnp.float32)  # no load-balance pressure at decode
+
+    wg = p["we_g"][expert_ids]                                 # (T, K, d, ffe)
+    wu = p["we_u"][expert_ids]
+    wo = p["we_o"][expert_ids]                                 # (T, K, ffe, d)
+    g = jnp.einsum("td,tkdf->tkf", xt, wg)
+    u = jnp.einsum("td,tkdf->tkf", xt, wu)
+    ye = jnp.einsum("tkf,tkfd->tkd", jax.nn.silu(g) * u, wo)
+    out = jnp.einsum("tkd,tk->td", ye, gate_vals.astype(ye.dtype))
+    if mo.n_shared:
+        out = out + (jax.nn.silu(xt @ p["shared_wg"]) * (xt @ p["shared_wu"])) @ p["shared_wo"]
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,295 @@
+"""State-space / recurrent mixers: Mamba-1 selective SSM and RWKV-6 (Finch).
+
+Both offer a full-sequence ``apply_*`` (training/prefill; ``lax.scan`` over
+time carrying only the O(1)-per-token state, never materializing the
+(S, d_inner, d_state) tensor — the TPU-memory-hierarchy adaptation recorded
+in DESIGN.md) and a single-token ``*_decode_step`` used by ``serve_step``.
+Pallas chunked kernels for the same recurrences live in ``repro.kernels``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+
+Params = Dict[str, Any]
+
+
+def chunked_scan(step, carry, xs, chunk: int = 64):
+    """Two-level ``lax.scan`` with a rematerialized inner scan.
+
+    Backward through a plain length-S scan would store the O(d·d_state) carry
+    at every step (hundreds of GB for these mixers).  Chunking stores carries
+    only at chunk boundaries (S/chunk of them) and recomputes inside each
+    chunk — the standard linear-RNN memory/compute trade, matched to TPU HBM.
+    ``xs`` leaves are (S, ...) time-major; S must divide by ``chunk`` (the
+    caller pads or picks chunk accordingly).
+    """
+    S = jax.tree.leaves(xs)[0].shape[0]
+    if S <= chunk or S % chunk != 0:
+        return jax.lax.scan(step, carry, xs)
+    nb = S // chunk
+    xs_b = jax.tree.map(lambda a: a.reshape((nb, chunk) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(c, xb):
+        return jax.lax.scan(step, c, xb)
+
+    carry, ys_b = jax.lax.scan(outer, carry, xs_b)
+    ys = jax.tree.map(lambda a: a.reshape((S,) + a.shape[2:]), ys_b)
+    return carry, ys
+
+
+# ===========================================================================
+# Mamba-1 selective SSM (Jamba's mixer)
+# ===========================================================================
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    dtr = s.dt_rank or -(-cfg.d_model // 16)
+    return di, s.d_state, s.d_conv, dtr
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    di, ds, dc, dtr = mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    k_in_x, k_in_z = jax.random.split(ks[0])
+    return {
+        # separate x/z in-projections (fused + split = cross-shard
+        # redistribution when column-sharded; see layers.init_mlp)
+        "in_x": dense_init(k_in_x, d, di, dtype),
+        "in_z": dense_init(k_in_z, d, di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di)) / math.sqrt(dc)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * ds, dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(~0.01)
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _mamba_conv_full(xs: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Causal depthwise conv over time. xs: (B,S,di), w: (dc,di)."""
+    dc = w.shape[0]
+    pad = jnp.pad(xs, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xs)
+    for i in range(dc):  # dc is 4: unrolled adds, no conv primitive needed
+        out = out + pad[:, i:i + xs.shape[1], :] * w[i]
+    return out + b
+
+
+def _mamba_ssm_inputs(p: Params, cfg: ModelConfig, xc: jnp.ndarray):
+    """From conv'd activations to (Δ, B, C) selective parameters."""
+    di, ds, _, dtr = mamba_dims(cfg)
+    proj = xc @ p["x_proj"]
+    dt, Bs, Cs = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    delta = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"].astype(dt.dtype))
+    return delta, Bs, Cs
+
+
+def apply_mamba(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, S, d)
+    state: Optional[Params] = None,  # decode: {"conv": (B,dc-1,di), "h": (B,di,ds)}
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    B, S, d = x.shape
+    di, ds, dc, dtr = mamba_dims(cfg)
+    xin = x @ p["in_x"]
+    z = x @ p["in_z"]
+
+    if state is None or S > 1:
+        # training, or prefill continuing from a carried state
+        if state is not None:
+            pad = jnp.concatenate([state["conv"].astype(xin.dtype), xin], axis=1)
+            xc = _mamba_conv_full(pad, p["conv_w"], p["conv_b"])[:, dc - 1:, :]
+        else:
+            xc = _mamba_conv_full(xin, p["conv_w"], p["conv_b"])
+        xc = jax.nn.silu(xc)
+        delta, Bs, Cs = _mamba_ssm_inputs(p, cfg, xc)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, ds)
+
+        def step(h, t):
+            d_t, B_t, C_t, x_t = t  # (B,di) (B,ds) (B,ds) (B,di)
+            dA = jnp.exp(d_t[..., None].astype(jnp.float32) * A)         # (B,di,ds)
+            dBx = (d_t * x_t)[..., None] * B_t[:, None, :]               # (B,di,ds)
+            h = dA * h + dBx.astype(jnp.float32)
+            y_t = jnp.einsum("bds,bs->bd", h, C_t.astype(jnp.float32))
+            return h, y_t.astype(x.dtype)
+
+        h0 = jnp.zeros((B, di, ds), jnp.float32) if state is None else state["h"]
+        xs = (delta.transpose(1, 0, 2), Bs.transpose(1, 0, 2),
+              Cs.transpose(1, 0, 2), xc.transpose(1, 0, 2))
+        hT, ys = chunked_scan(step, h0, xs)
+        y = ys.transpose(1, 0, 2) + xc * p["D"].astype(xc.dtype)
+        out = (y * jax.nn.silu(z)) @ p["out_proj"]
+        new_state = None
+        if state is not None:
+            new_state = {"conv": jnp.concatenate([state["conv"].astype(xin.dtype), xin],
+                                                 axis=1)[:, -(dc - 1):, :].astype(state["conv"].dtype),
+                         "h": hT}
+        return out, new_state
+
+    # ---- decode: single token ------------------------------------------------
+    assert S == 1
+    conv_st = state["conv"]  # (B, dc-1, di)
+    window = jnp.concatenate([conv_st, xin], axis=1)  # (B, dc, di)
+    xc = jax.nn.silu(jnp.einsum("bci,ci->bi", window, p["conv_w"]) + p["conv_b"])[:, None, :]
+    delta, Bs, Cs = _mamba_ssm_inputs(p, cfg, xc)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    d_t, B_t, C_t, x_t = delta[:, 0], Bs[:, 0], Cs[:, 0], xc[:, 0]
+    h = state["h"]
+    dA = jnp.exp(d_t[..., None].astype(jnp.float32) * A)
+    dBx = (d_t * x_t)[..., None] * B_t[:, None, :]
+    h = dA * h + dBx.astype(jnp.float32)
+    y = jnp.einsum("bds,bs->bd", h, C_t.astype(jnp.float32)).astype(x.dtype)
+    y = y[:, None, :] + xc * p["D"].astype(xc.dtype)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    new_state = {"conv": window[:, 1:, :], "h": h}
+    return out, new_state
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    di, ds, dc, _ = mamba_dims(cfg)
+    return {"conv": jnp.zeros((batch, dc - 1, di), dtype),
+            "h": jnp.zeros((batch, di, ds), jnp.float32)}
+
+
+# ===========================================================================
+# RWKV-6 "Finch" time-mix + channel-mix
+# ===========================================================================
+
+def rwkv_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    hd = cfg.rwkv.head_dim
+    assert cfg.d_model % hd == 0
+    return cfg.d_model // hd, hd
+
+
+def init_rwkv_tmix(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    H, hd = rwkv_dims(cfg)
+    lora = cfg.rwkv.decay_lora
+    ks = jax.random.split(key, 8)
+    return {
+        # static token-shift mixing coefficients (Finch uses LoRA-dynamic ones;
+        # we keep the decay LoRA — the architecture's core novelty — and use
+        # static shift mixes; recorded in DESIGN.md)
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "wr": dense_init(ks[0], d, d, dtype), "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype), "wg": dense_init(ks[3], d, d, dtype),
+        "wo": dense_init(ks[4], d, d, dtype),
+        # data-dependent decay LoRA:  w_t = exp(-exp(w0 + tanh(x̃ A) B))
+        "w0": jnp.full((d,), -2.0, dtype),
+        "wA": dense_init(ks[5], d, lora, dtype),
+        "wB": dense_init(ks[6], lora, d, dtype, scale=0.01),
+        "u": (jax.random.normal(ks[7], (H, hd)) * 0.1).astype(dtype),
+        "ln_scale": jnp.ones((d,), dtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x_{t-1} stream: zeros (or carried last token) at t=0."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _rwkv_gates(p: Params, cfg: ModelConfig, x: jnp.ndarray, xprev: jnp.ndarray):
+    H, hd = rwkv_dims(cfg)
+    B, S, d = x.shape
+
+    def mix(mu):
+        return x + (xprev - x) * mu.astype(x.dtype)
+
+    r = (mix(p["mu_r"]) @ p["wr"]).reshape(B, S, H, hd)
+    k = (mix(p["mu_k"]) @ p["wk"]).reshape(B, S, H, hd)
+    v = (mix(p["mu_v"]) @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["wg"])
+    logw = p["w0"].astype(jnp.float32) + jnp.tanh(mix(p["mu_w"]).astype(jnp.float32)
+                                                  @ p["wA"].astype(jnp.float32)) @ p["wB"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw)).reshape(B, S, H, hd)  # data-dependent decay ∈ (0,1)
+    return r, k, v, g, w
+
+
+def apply_rwkv_tmix(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    state: Optional[Params] = None,  # {"shift": (B,d), "wkv": (B,H,hd,hd)}
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    B, S, d = x.shape
+    H, hd = rwkv_dims(cfg)
+    xprev = _token_shift(x, None if state is None else state["shift"])
+    r, k, v, g, w = _rwkv_gates(p, cfg, x, xprev)
+    u = p["u"].astype(jnp.float32)
+
+    def step(Swkv, t):
+        r_t, k_t, v_t, w_t = t  # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]           # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, Swkv + u[..., None] * kv)
+        Swkv = w_t[..., :, None] * Swkv + kv
+        return Swkv, y
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32) if state is None else state["wkv"]
+    xs = tuple(a.astype(jnp.float32).transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    ST, ys = chunked_scan(step, S0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, d)
+    # per-head group norm
+    y = rmsnorm(y.reshape(B, S, H, hd), jnp.ones((hd,), x.dtype), cfg.norm_eps).reshape(B, S, d)
+    y = y * p["ln_scale"].astype(x.dtype)
+    out = (y.astype(x.dtype) * g) @ p["wo"]
+    new_state = None
+    if state is not None:
+        new_state = {"shift": x[:, -1, :], "wkv": ST}
+    return out, new_state
+
+
+def rwkv_tmix_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    H, hd = rwkv_dims(cfg)
+    return {"shift": jnp.zeros((batch, cfg.d_model), dtype),
+            "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32)}
+
+
+def init_rwkv_cmix(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype), "mu_r": jnp.full((d,), 0.5, dtype),
+        "wk": dense_init(ks[0], d, ff, dtype),
+        "wv": dense_init(ks[1], ff, d, dtype),
+        "wr": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def apply_rwkv_cmix(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    state: Optional[Params] = None,  # {"shift": (B,d)}
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    xprev = _token_shift(x, None if state is None else state["shift"])
+
+    def mix(mu):
+        return x + (xprev - x) * mu.astype(x.dtype)
+
+    k = jnp.square(jax.nn.relu(mix(p["mu_k"]) @ p["wk"]))
+    r = jax.nn.sigmoid(mix(p["mu_r"]) @ p["wr"])
+    out = r * (k @ p["wv"])
+    new_state = None if state is None else {"shift": x[:, -1, :]}
+    return out, new_state
+
+
+def rwkv_cmix_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    return {"shift": jnp.zeros((batch, cfg.d_model), dtype)}

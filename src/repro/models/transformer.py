@@ -1,0 +1,265 @@
+"""Block assembly and the scan-over-periods stack.
+
+A *period* is a tuple of (mixer, ffn) descriptors (len 1 for homogeneous
+models, 8 for Jamba).  Parameters of all periods are stacked on a leading
+``n_periods`` axis and the stack is traversed with ``jax.lax.scan`` — one
+compiled period body regardless of depth, which keeps AOT compiles of
+60-80-layer models tractable and is the standard TPU deep-stack idiom.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.constraints import constrain_batch_dim
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_attention,
+    apply_mla,
+    apply_mlp,
+    init_attention,
+    init_mla,
+    init_mlp,
+    rmsnorm,
+)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, mixer: str, ffn: str, dtype, with_cross: bool = False) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    p: Params = {"mixer_norm": jnp.ones((d,), dtype), "ffn_norm": jnp.ones((d,), dtype)}
+    if mixer == "attn":
+        p["mixer"] = init_attention(k1, cfg, dtype)
+    elif mixer == "mla":
+        p["mixer"] = init_mla(k1, cfg, dtype)
+    elif mixer == "mamba":
+        p["mixer"] = ssm.init_mamba(k1, cfg, dtype)
+    elif mixer == "rwkv":
+        p["mixer"] = ssm.init_rwkv_tmix(k1, cfg, dtype)
+    else:
+        raise ValueError(mixer)
+    if ffn == "moe":
+        p["ffn"] = moe_mod.init_moe(k2, cfg, dtype)
+    elif ffn == "rwkv_cmix":
+        p["ffn"] = ssm.init_rwkv_cmix(k2, cfg, dtype)
+    elif ffn in ("mlp", "gelu_mlp"):
+        p["ffn"] = init_mlp(k2, d, cfg.d_ff, ffn, dtype)
+    else:
+        raise ValueError(ffn)
+    if with_cross:
+        p["cross"] = init_attention(k3, cfg, dtype)
+        p["cross_norm"] = jnp.ones((d,), dtype)
+    return p
+
+
+def layer_cache_init(cfg: ModelConfig, mixer: str, ffn: str, batch: int, cache_len: int,
+                     dtype, with_cross: bool = False, enc_len: int = 0) -> Params:
+    """Decode-time state for one layer (zeros; shapes are what matters)."""
+    c: Params = {}
+    if mixer == "attn":
+        c["k"] = jnp.zeros((batch, cache_len, cfg.n_kv, cfg.hd), dtype)
+        c["v"] = jnp.zeros((batch, cache_len, cfg.n_kv, cfg.hd), dtype)
+    elif mixer == "mla":
+        m = cfg.mla
+        c["ckv"] = jnp.zeros((batch, cache_len, m.kv_lora), dtype)
+        c["krope"] = jnp.zeros((batch, cache_len, m.qk_rope_dim), dtype)
+    elif mixer == "mamba":
+        c.update(ssm.mamba_state_init(cfg, batch, dtype))
+    elif mixer == "rwkv":
+        c.update({"tmix_" + k: v for k, v in ssm.rwkv_tmix_state_init(cfg, batch, dtype).items()})
+    if ffn == "rwkv_cmix":
+        c["cmix_shift"] = jnp.zeros((batch, cfg.d_model), dtype)
+    if with_cross:
+        c["cross_k"] = jnp.zeros((batch, enc_len, cfg.n_kv, cfg.hd), dtype)
+        c["cross_v"] = jnp.zeros((batch, enc_len, cfg.n_kv, cfg.hd), dtype)
+    return c
+
+
+def apply_layer(
+    p: Params,
+    cfg: ModelConfig,
+    mixer: str,
+    ffn: str,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    cache: Optional[Params] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+    cross_y: Optional[jnp.ndarray] = None,
+    mla_absorb: bool = False,
+    block_q: int = 1024,
+) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    """Pre-norm residual layer.  Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Params = {}
+
+    h = rmsnorm(x, p["mixer_norm"], cfg.norm_eps)
+    if mixer == "attn":
+        attn_cache = None
+        if cache is not None and "k" in cache:
+            attn_cache = {"k": cache["k"], "v": cache["v"]}
+        h, nc = apply_attention(p["mixer"], cfg, h, positions, causal=causal,
+                                window=window, cache=attn_cache,
+                                cache_index=cache_index, block_q=block_q)
+        if nc is not None:
+            new_cache.update(nc)
+    elif mixer == "mla":
+        mla_cache = None
+        if cache is not None and "ckv" in cache:
+            mla_cache = {"ckv": cache["ckv"], "krope": cache["krope"]}
+        h, nc = apply_mla(p["mixer"], cfg, h, positions, window=window,
+                          cache=mla_cache, cache_index=cache_index,
+                          absorb=mla_absorb, block_q=block_q)
+        if nc is not None:
+            new_cache.update(nc)
+    elif mixer == "mamba":
+        st = None
+        if cache is not None and "h" in cache:
+            st = {"conv": cache["conv"], "h": cache["h"]}
+        h, nst = ssm.apply_mamba(p["mixer"], cfg, h, st)
+        if nst is not None:
+            new_cache.update(nst)
+    elif mixer == "rwkv":
+        st = None
+        if cache is not None and "tmix_wkv" in cache:
+            st = {"shift": cache["tmix_shift"], "wkv": cache["tmix_wkv"]}
+        h, nst = ssm.apply_rwkv_tmix(p["mixer"], cfg, h, st)
+        if nst is not None:
+            new_cache.update({"tmix_" + k: v for k, v in nst.items()})
+    # pin the residual stream to (batch=data axes, seq/d replicated): without
+    # this GSPMD carries the row-parallel output's d-sharding into the FFN,
+    # and the MoE dispatch then all-reduces every (B,E,cap,f) partial —
+    # observed as the dominant 5 TB/device term on grok-1 (§Perf iteration 3)
+    x = constrain_batch_dim(x + h)
+
+    if "cross" in p:
+        h = rmsnorm(x, p["cross_norm"], cfg.norm_eps)
+        if cache is not None and "cross_k" in cache and cross_y is None:
+            h, _ = apply_attention(p["cross"], cfg, h, positions,
+                                   kv_override=(cache["cross_k"], cache["cross_v"]),
+                                   block_q=block_q)
+            new_cache["cross_k"] = cache["cross_k"]
+            new_cache["cross_v"] = cache["cross_v"]
+        else:
+            h, cc = apply_attention(p["cross"], cfg, h, positions, cross_y=cross_y,
+                                    block_q=block_q)
+            if cache is not None:
+                new_cache["cross_k"] = cc["k"].astype(cache["cross_k"].dtype) if cache else cc["k"]
+                new_cache["cross_v"] = cc["v"].astype(cache["cross_v"].dtype)
+        x = x + h
+
+    h = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
+    if ffn == "moe":
+        h, aux = moe_mod.apply_moe(p["ffn"], cfg, h)
+    elif ffn == "rwkv_cmix":
+        st = None
+        if cache is not None and "cmix_shift" in cache:
+            st = {"shift": cache["cmix_shift"]}
+        h, nst = ssm.apply_rwkv_cmix(p["ffn"], cfg, h, st)
+        if nst is not None:
+            new_cache["cmix_shift"] = nst["shift"]
+    else:
+        h = apply_mlp(p["ffn"], h, ffn)
+    x = constrain_batch_dim(x + h)
+    return x, (new_cache or None), aux
+
+
+# ---------------------------------------------------------------------------
+# stacked periods
+# ---------------------------------------------------------------------------
+
+def init_stack(key, cfg: ModelConfig, dtype, *, period=None, n_periods=None,
+               with_cross: bool = False) -> Params:
+    """Stacked params: {"pos0": tree, "pos1": ...}, leaves (n_periods, ...)."""
+    period = period if period is not None else cfg.period
+    n_periods = n_periods if n_periods is not None else cfg.n_layers // len(period)
+    keys = jax.random.split(key, n_periods * len(period)).reshape(n_periods, len(period), 2)
+    out: Params = {}
+    for j, (mixer, ffn) in enumerate(period):
+        per = [init_layer(jax.random.fold_in(key, i * 131 + j), cfg, mixer, ffn, dtype,
+                          with_cross=with_cross) for i in range(n_periods)]
+        out[f"pos{j}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    return out
+
+
+def stack_cache_init(cfg: ModelConfig, batch: int, cache_len: int, dtype, *,
+                     period=None, n_periods=None, with_cross=False, enc_len=0) -> Params:
+    period = period if period is not None else cfg.period
+    n_periods = n_periods if n_periods is not None else cfg.n_layers // len(period)
+    out: Params = {}
+    for j, (mixer, ffn) in enumerate(period):
+        one = layer_cache_init(cfg, mixer, ffn, batch, cache_len, dtype,
+                               with_cross=with_cross, enc_len=enc_len)
+        if one:
+            out[f"pos{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_periods,) + a.shape), one)
+    return out
+
+
+def apply_stack(
+    params: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    period=None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    caches: Optional[Params] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+    cross_y: Optional[jnp.ndarray] = None,
+    mla_absorb: bool = False,
+    block_q: int = 1024,
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    period = period if period is not None else cfg.period
+
+    def one_layer(j, mixer, ffn, layer_pj, h, c_j):
+        return apply_layer(
+            layer_pj, cfg, mixer, ffn, h, positions,
+            causal=causal, window=window, cache=c_j, cache_index=cache_index,
+            cross_y=cross_y, mla_absorb=mla_absorb, block_q=block_q)
+
+    def body(carry, xs):
+        h, aux = carry
+        h = constrain_batch_dim(h)  # keep batch pinned to the data axes
+        layer_p, layer_c = xs
+        new_c: Params = {}
+        for j, (mixer, ffn) in enumerate(period):
+            c_j = layer_c.get(f"pos{j}") if layer_c is not None else None
+            fn = functools.partial(one_layer, j, mixer, ffn)
+            if remat and len(period) > 1:
+                # per-layer remat inside the period: the backward pass holds
+                # one layer's internals at a time, not all 8 of Jamba's
+                fn = jax.checkpoint(fn)
+            h, nc, a = fn(layer_p[f"pos{j}"], h, c_j)
+            if nc:
+                new_c[f"pos{j}"] = nc
+            aux = aux + a
+        return (h, aux), (new_c or None)
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    xs = (params, caches) if caches is not None else (params, None)
+    if caches is None:
+        # scan needs a pytree with a leading axis; use params only
+        (x, aux), _ = jax.lax.scan(lambda c, p: body(c, (p, None)), (x, aux0), params)
+        return x, None, aux
+    (x, aux), new_caches = jax.lax.scan(body, (x, aux0), (params, caches))
+    return x, new_caches, aux

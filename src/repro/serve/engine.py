@@ -1,0 +1,70 @@
+"""Serving: jit'd serve_step (one token, batched requests) + a host engine.
+
+``make_serve_step`` is what the decode-shape dry-runs lower: one new token
+per request against caches of ``cache_len`` (KV, MLA-latent, or SSM state
+depending on the architecture).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import RunFlags, decode_step, make_caches, prefill
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int
+    cache_len: int
+    dtype: Any = jnp.bfloat16
+    flags: RunFlags = RunFlags()
+    enc_len: int = 0
+    temperature: float = 0.0  # greedy
+
+
+def make_serve_step(cfg: ModelConfig, sc: ServeConfig) -> Callable:
+    """Pure (params, caches, tokens (B,1), pos ()) -> (logits, caches)."""
+
+    def serve_step(params, caches, tokens, pos):
+        return decode_step(params, cfg, caches, tokens, pos, sc.flags, dtype=sc.dtype)
+
+    return serve_step
+
+
+class ServingEngine:
+    """Minimal batched greedy decoder over the functional model API."""
+
+    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig, jit: bool = True):
+        self.cfg, self.params, self.sc = cfg, params, sc
+        self.caches = make_caches(cfg, sc.batch, sc.cache_len, sc.dtype,
+                                  enc_len=sc.enc_len)
+        step = make_serve_step(cfg, sc)
+        self.step = jax.jit(step, donate_argnums=(1,)) if jit else step
+        self.prefill_fn = jax.jit(
+            lambda p, b, c: prefill(p, cfg, b, c, sc.flags, dtype=sc.dtype)) if jit else (
+            lambda p, b, c: prefill(p, cfg, b, c, sc.flags, dtype=sc.dtype))
+        self.pos = 0
+
+    def prefill_prompt(self, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        logits, self.caches = self.prefill_fn(self.params, batch, self.caches)
+        self.pos = batch["tokens"].shape[1]
+        return logits
+
+    def generate(self, first_token: jnp.ndarray, n_tokens: int) -> np.ndarray:
+        """Greedy-decode ``n_tokens`` for every request in the batch."""
+        tok = first_token.reshape(self.sc.batch, 1).astype(jnp.int32)
+        out: List[np.ndarray] = []
+        for _ in range(n_tokens):
+            logits, self.caches = self.step(self.params, self.caches, tok,
+                                            jnp.int32(self.pos))
+            tok = logits[:, -1, :].argmax(-1).astype(jnp.int32).reshape(-1, 1)
+            out.append(np.asarray(tok))
+            self.pos += 1
+        return np.concatenate(out, axis=1)

@@ -1,0 +1,2 @@
+from repro.train.checkpoint import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.train.trainer import TrainConfig, Trainer, make_train_step  # noqa: F401

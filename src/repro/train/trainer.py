@@ -1,0 +1,124 @@
+"""Training loop: jit'd train_step (loss + grad + AdamW) and a host driver.
+
+``make_train_step`` is the function the multi-pod dry-run lowers — it takes
+(params, opt_state, batch) and returns (params, opt_state, metrics), pure and
+donate-safe.  The ``Trainer`` adds the host-side loop: data, logging,
+checkpoints, eval.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import RunFlags, forward_train, init_lm
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 200
+    warmup: int = 20
+    log_every: int = 10
+    ckpt_every: int = 0          # 0 = only at end
+    ckpt_dir: Optional[str] = None
+    seed: int = 0
+    dtype: Any = jnp.bfloat16
+    microbatches: int = 1        # gradient accumulation (activation memory ÷ mb)
+    optim: AdamWConfig = AdamWConfig()
+    flags: RunFlags = RunFlags()
+
+
+def _split_micro(batch: Dict, mb: int) -> Dict:
+    """(B, ...) leaves -> (mb, B/mb, ...); rope_pos has batch at axis 1."""
+    def f(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        bdim = 1 if name == "rope_pos" else 0
+        B = leaf.shape[bdim]
+        assert B % mb == 0, (name, B, mb)
+        new = leaf.shape[:bdim] + (mb, B // mb) + leaf.shape[bdim + 1:]
+        out = leaf.reshape(new)
+        if bdim != 0:
+            out = jnp.moveaxis(out, bdim, 0)
+        return out
+    return {k: f((jax.tree_util.DictKey(k),), v) for k, v in batch.items()}
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig) -> Callable:
+    """Pure (params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With ``microbatches > 1`` the loss/grad pass runs as a rematerialized
+    ``lax.scan`` over microbatches, accumulating f32 grads — activation
+    footprint scales with the microbatch, not the global batch.
+    """
+
+    def loss_fn(p, batch):
+        loss, metrics = forward_train(p, cfg, batch, tc.flags, dtype=tc.dtype)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if tc.microbatches > 1:
+            micro = _split_micro(batch, tc.microbatches)
+
+            def acc(carry, mbatch):
+                g_acc, l_acc, a_acc = carry
+                (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mbatch)
+                g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (g_acc, l_acc + loss, a_acc + metrics["acc"]), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, acc_sum), _ = jax.lax.scan(
+                acc, (g0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / tc.microbatches, grads)
+            loss = loss / tc.microbatches
+            metrics = {"acc": acc_sum / tc.microbatches}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        lr_scale = cosine_schedule(opt_state["step"], tc.warmup, tc.steps)
+        params, opt_state, om = adamw_update(tc.optim, params, grads, opt_state, lr_scale)
+        metrics = dict(metrics, loss=loss, lr_scale=lr_scale, **om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, data: Iterator[Dict],
+                 params=None, jit: bool = True):
+        self.cfg, self.tc, self.data = cfg, tc, data
+        key = jax.random.PRNGKey(tc.seed)
+        self.params = params if params is not None else init_lm(key, cfg, jnp.float32)
+        self.opt_state = adamw_init(self.params, tc.optim.moment_dtype)
+        step_fn = make_train_step(cfg, tc)
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1)) if jit else step_fn
+        self.history = []
+
+    def run(self, steps: Optional[int] = None) -> Dict[str, float]:
+        steps = steps or self.tc.steps
+        t0 = time.time()
+        last = {}
+        for i in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in next(self.data).items()}
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            if i % self.tc.log_every == 0 or i == steps - 1:
+                last = {k: float(v) for k, v in metrics.items()}
+                last["step"] = i
+                last["wall_s"] = time.time() - t0
+                self.history.append(last)
+                print(f"step {i:5d} loss {last['loss']:.4f} acc {last.get('acc', 0):.3f} "
+                      f"gnorm {last['grad_norm']:.3f} ({last['wall_s']:.1f}s)")
+        if self.tc.ckpt_dir:
+            from repro.train.checkpoint import save_checkpoint
+            save_checkpoint(self.tc.ckpt_dir, self.params, self.opt_state,
+                            step=int(self.opt_state["step"]))
+        return last

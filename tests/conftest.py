@@ -1,0 +1,17 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; only launch/dryrun.py forces 512 placeholders.
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def global_err(clf, shards) -> float:
+    X = np.concatenate([s[0] for s in shards])
+    y = np.concatenate([s[1] for s in shards])
+    return float(np.mean(clf.predict(X) != y))

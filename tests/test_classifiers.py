@@ -1,0 +1,116 @@
+"""Hypothesis-class unit + property tests (thresholds, intervals,
+rectangles, max-margin linear separators)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra.numpy import arrays
+
+from repro.core import classifiers as clf
+
+
+# ---------------------------------------------------------------------------
+# thresholds
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(-100, 100), min_size=2, max_size=50, unique=True),
+       st.floats(-100, 100))
+@settings(max_examples=50, deadline=None)
+def test_threshold_fit_zero_error_when_separable(xs, t):
+    x = np.asarray(xs)
+    y = np.where(x < t, 1, -1)
+    if len(np.unique(y)) == 0:
+        return
+    h = clf.Threshold.fit(x, y)
+    assert h.error(x, y) == 0.0
+
+
+def test_threshold_not_separable_raises():
+    x = np.array([0.0, 1.0, 2.0])
+    y = np.array([-1, 1, -1])
+    with pytest.raises(ValueError):
+        clf.Threshold.fit(x, y)
+
+
+# ---------------------------------------------------------------------------
+# intervals
+# ---------------------------------------------------------------------------
+
+@given(st.floats(-50, 50), st.floats(0.1, 20),
+       st.lists(st.floats(-100, 100), min_size=1, max_size=60))
+@settings(max_examples=50, deadline=None)
+def test_interval_fit_zero_error(a, width, xs):
+    b = a + width
+    x = np.asarray(xs)
+    y = np.where((x >= a) & (x <= b), 1, -1)
+    h = clf.Interval.fit(x, y)
+    assert h.error(x, y) == 0.0
+
+
+def test_interval_all_negative_gives_empty():
+    x = np.array([1.0, 2.0])
+    y = np.array([-1, -1])
+    h = clf.Interval.fit(x, y)
+    assert np.all(h.predict(x) == -1)
+
+
+# ---------------------------------------------------------------------------
+# axis-aligned rectangles
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 5), st.integers(5, 40), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_rectangle_merge_is_global_minimal(d, n, seed):
+    rng = np.random.default_rng(seed)
+    X1, X2 = rng.normal(size=(n, d)), rng.normal(size=(n, d))
+    r = clf.AxisAlignedRectangle.merge(
+        clf.AxisAlignedRectangle.minimal(X1), clf.AxisAlignedRectangle.minimal(X2))
+    both = np.concatenate([X1, X2])
+    assert np.allclose(r[0], both.min(0)) and np.allclose(r[1], both.max(0))
+
+
+def test_rectangle_merge_empty_sentinel():
+    r = clf.AxisAlignedRectangle.minimal(np.zeros((0, 3)))
+    assert r is None
+    r2 = clf.AxisAlignedRectangle.minimal(np.ones((2, 3)))
+    assert clf.AxisAlignedRectangle.merge(r, r2) == r2
+
+
+# ---------------------------------------------------------------------------
+# max-margin linear separator
+# ---------------------------------------------------------------------------
+
+def _linearly_separable(n, d, seed, gap=0.3):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=d)
+    w /= np.linalg.norm(w)
+    X = rng.normal(size=(n, d))
+    m = X @ w
+    X = X[np.abs(m) > gap]
+    y = np.where(X @ w > 0, 1, -1)
+    return X, y
+
+
+@pytest.mark.parametrize("d", [2, 5, 10])
+def test_max_margin_zero_training_error(d):
+    X, y = _linearly_separable(200, d, seed=d)
+    h = clf.fit_max_margin(X, y)
+    assert h.error(X, y) == 0.0
+    assert h.margin > 0
+
+
+def test_max_margin_canonical_form():
+    X, y = _linearly_separable(100, 2, seed=1)
+    h = clf.fit_max_margin(X, y)
+    m = y * (X @ h.w + h.b)
+    assert m.min() == pytest.approx(1.0, rel=1e-3)
+
+
+def test_support_points_on_margin():
+    X, y = _linearly_separable(300, 2, seed=2)
+    h = clf.fit_max_margin(X, y)
+    idx = clf.support_points(h, X, y)
+    assert 1 <= len(idx) <= 8
+    m = y * (X @ h.w + h.b)
+    assert np.all(m[idx] <= m.min() * 1.15 + 1e-9)

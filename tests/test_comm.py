@@ -1,0 +1,58 @@
+"""Communication accounting invariants (the paper's Cost columns)."""
+
+import numpy as np
+import pytest
+
+from repro.core.comm import CommLog, Node, make_nodes
+
+
+def _shards(k=2, n=20, d=2, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(k):
+        X = rng.normal(size=(n, d))
+        y = np.where(rng.random(n) < 0.5, 1, -1)
+        out.append((X, y))
+    return out
+
+
+def test_point_metering_exact():
+    nodes, log = make_nodes(_shards())
+    a, b = nodes
+    a.send_points(b, a.X[:5], a.y[:5], tag="t")
+    a.send_points(b, a.X[:3], a.y[:3], tag="t")
+    assert log.cost_points() == 8
+    assert log.stats.messages == 2
+    assert b.recv_X.shape == (8, 2)
+
+
+def test_bytes_formula():
+    nodes, log = make_nodes(_shards(d=3))
+    a, b = nodes
+    a.send_points(b, a.X[:4], a.y[:4])
+    a.send_scalars(b, np.zeros(6))
+    a.send_bit(b, 1)
+    s = log.summary()
+    assert s["points"] == 4 and s["scalars"] == 6 and s["bits"] == 1
+    # 4 points * (3 dims + label) * 4B + 6 scalars * 4B + 1 bit -> 1 byte
+    assert s["bytes"] == 4 * 4 * 4 + 6 * 4 + 1
+
+
+def test_empty_message_costs_no_points():
+    nodes, log = make_nodes(_shards())
+    a, b = nodes
+    a.send_points(b, np.zeros((0, 2)), np.zeros((0,), np.int32))
+    assert log.cost_points() == 0
+    assert log.stats.messages == 1
+
+
+def test_labels_validated():
+    with pytest.raises(AssertionError):
+        make_nodes([(np.zeros((2, 2)), np.array([0, 1]))])
+
+
+def test_rounds_counter():
+    nodes, log = make_nodes(_shards())
+    log.new_round()
+    log.new_round()
+    assert log.stats.rounds == 2

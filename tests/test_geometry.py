@@ -1,0 +1,93 @@
+"""Geometry primitive tests (hulls, projections, medians, SOU mask)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import geometry as geo
+
+
+@given(st.integers(3, 60), st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_hull_contains_all_points(n, seed):
+    rng = np.random.default_rng(seed)
+    P = rng.normal(size=(n, 2))
+    idx = geo.convex_hull_2d(P)
+    hull = P[idx]
+    # every point is inside the hull: all cross products for CCW edges >= 0
+    for q in P:
+        a = hull
+        b = np.roll(hull, -1, axis=0)
+        cross = (b[:, 0] - a[:, 0]) * (q[1] - a[:, 1]) - (b[:, 1] - a[:, 1]) * (q[0] - a[:, 0])
+        assert np.all(cross >= -1e-9)
+
+
+def test_hull_ccw_order():
+    P = np.array([[0, 0], [1, 0], [1, 1], [0, 1], [0.5, 0.5]])
+    idx = geo.convex_hull_2d(P)
+    hull = P[idx]
+    # shoelace area positive for CCW
+    x, y = hull[:, 0], hull[:, 1]
+    area = 0.5 * np.sum(x * np.roll(y, -1) - np.roll(x, -1) * y)
+    assert area > 0
+    assert 4 not in idx  # interior point excluded
+
+
+def test_edge_normals_outward():
+    P = np.array([[0, 0], [2, 0], [2, 2], [0, 2]], dtype=float)
+    idx = geo.convex_hull_2d(P)
+    edges = geo.hull_edges(P, idx)
+    normals = geo.edge_normals(edges)
+    centroid = P.mean(0)
+    mid = edges.mean(1)
+    assert np.all(np.sum((mid - centroid) * normals, axis=1) > 0)
+
+
+@given(st.integers(1, 50))
+@settings(max_examples=30, deadline=None)
+def test_weighted_median(n):
+    rng = np.random.default_rng(n)
+    w = rng.random(n)
+    i = geo.weighted_median_index(w)
+    c = np.cumsum(w)
+    assert c[i] >= c[-1] / 2
+    if i > 0:
+        assert c[i - 1] < c[-1] / 2
+
+
+def test_project_to_hull_boundary():
+    P = np.array([[0, 0], [4, 0], [4, 4], [0, 4]], dtype=float)
+    idx = geo.convex_hull_2d(P)
+    edges = geo.hull_edges(P, idx)
+    # a point near the bottom edge maps to the bottom edge
+    q = np.array([[2.0, 0.1]])
+    e = geo.project_to_hull_boundary(q, edges)[0]
+    seg = edges[e]
+    assert np.allclose(seg[:, 1], 0)  # bottom edge has y == 0
+
+
+def test_classification_error_jax():
+    X = jnp.array([[1.0, 0.0], [-1.0, 0.0]])
+    y = jnp.array([1.0, -1.0])
+    w = jnp.array([1.0, 0.0])
+    assert float(geo.classification_error(w, jnp.array(0.0), X, y)) == 0.0
+    assert float(geo.classification_error(-w, jnp.array(0.0), X, y)) == 1.0
+
+
+def test_uncertain_mask_shrinks_with_transcript():
+    """More transcript points can only shrink the SOU (monotonicity)."""
+    rng = np.random.default_rng(3)
+    V = np.asarray(geo.direction_grid(256))
+    X = rng.normal(size=(200, 2))
+    w = np.array([1.0, 0.4])
+    y = np.where(X @ w > 0, 1, -1)
+    ok = jnp.ones(256, bool)
+    m1 = geo.uncertain_mask(V, ok, jnp.asarray(X[:5]), jnp.asarray(y[:5]),
+                            jnp.asarray(X), jnp.asarray(y))
+    m2 = geo.uncertain_mask(V, ok, jnp.asarray(X[:50]), jnp.asarray(y[:50]),
+                            jnp.asarray(X), jnp.asarray(y))
+    assert int(m2.sum()) <= int(m1.sum())
+    # transcript points with both labels on a fixed direction set leave
+    # fewer uncertain than the full shard
+    assert int(m2.sum()) < X.shape[0]

@@ -1,0 +1,180 @@
+"""Per-kernel allclose sweeps: every Pallas kernel (interpret=True on CPU)
+against its ref.py pure-jnp oracle over shapes × dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba import mamba_scan
+from repro.kernels.rwkv6 import rwkv6_chunked
+from repro.kernels.support_margin import threshold_ranges, uncertain_mask
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 8, 2, 64),     # GQA 4:1
+    (1, 512, 4, 1, 32),     # MQA
+    (2, 128, 6, 3, 128),    # odd head count
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(B, S, H, KV, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(B * S + H), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=128, block_k=128, interpret=True)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 32))
+    k = jax.random.normal(ks[1], (1, 256, 2, 32))
+    v = jax.random.normal(ks[2], (1, 256, 2, 32))
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    exp = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_kv_valid():
+    """Decode-style: only the first kv_valid cache slots are real."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32))
+    k = jax.random.normal(ks[1], (2, 256, 4, 32))
+    v = jax.random.normal(ks[2], (2, 256, 4, 32))
+    out = flash_attention(q, k, v, causal=False, kv_valid=100, interpret=True)
+    exp = ref.attention_ref(q, k, v, causal=False, kv_valid=100)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-4, atol=2e-4)
+
+
+def test_attention_ops_ragged_padding():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 100, 4, 32))
+    k = jax.random.normal(ks[1], (1, 100, 2, 32))
+    v = jax.random.normal(ks[2], (1, 100, 2, 32))
+    out = ops.attention(q, k, v, causal=True, interpret=True)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,hd,chunk", [
+    (1, 64, 2, 32, 16),
+    (2, 128, 3, 64, 32),
+    (1, 96, 1, 16, 32),     # S not a multiple of chunk -> ops pads
+])
+def test_rwkv6_chunked_matches_scan(B, S, H, hd, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(S + hd), 5)
+    r = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, hd))) * 0.98 + 0.01
+    u = jax.random.normal(ks[4], (H, hd)) * 0.1
+    y, sT = ops.rwkv6(r, k, v, w, u, chunk=chunk, interpret=True)
+    ye, sTe = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sTe), rtol=1e-3, atol=1e-3)
+
+
+def test_rwkv6_decay_extremes():
+    """Near-0 and near-1 decays must both stay numerically sane."""
+    B, S, H, hd = 1, 64, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    r = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    u = jnp.zeros((H, hd))
+    for wval in (0.02, 0.999):
+        w = jnp.full((B, S, H, hd), wval)
+        y, _ = rwkv6_chunked(r, k, v, w, u, chunk=16, interpret=True)
+        ye, _ = ref.rwkv6_ref(r, k, v, w, u)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ye), rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,di,ds,chunk,bdi", [
+    (1, 64, 32, 16, 16, 32),
+    (2, 128, 64, 16, 32, 32),
+    (1, 100, 48, 8, 32, 16),   # ragged S and di -> ops pads
+])
+def test_mamba_scan_matches(B, S, di, ds, chunk, bdi):
+    ks = jax.random.split(jax.random.PRNGKey(S * di), 5)
+    xc = jax.random.normal(ks[0], (B, S, di))
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (B, S, di)) - 2)
+    A = -jnp.exp(jax.random.normal(ks[2], (di, ds)) * 0.5)
+    Bs = jax.random.normal(ks[3], (B, S, ds))
+    Cs = jax.random.normal(ks[4], (B, S, ds))
+    y, hT = ops.selective_scan(xc, delta, A, Bs, Cs, chunk=chunk, block_di=bdi,
+                               interpret=True)
+    ye, hTe = ref.mamba_ref(xc, delta, A, Bs, Cs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hTe), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# support margin (paper data plane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,d", [(64, 512, 2), (100, 333, 2), (256, 1024, 10),
+                                   (7, 13, 3)])
+def test_support_margin_vs_geometry_oracle(m, n, d):
+    ks = jax.random.split(jax.random.PRNGKey(m + n), 4)
+    V = jax.random.normal(ks[0], (m, d))
+    V = V / jnp.linalg.norm(V, axis=1, keepdims=True)
+    Xw = jax.random.normal(ks[1], (n, d))
+    yw = jnp.where(jax.random.bernoulli(ks[2], 0.5, (n,)), 1, -1)
+    X = jax.random.normal(ks[3], (n, d))
+    ok = jax.random.bernoulli(ks[2], 0.8, (m,))
+
+    lo, hi = ops.support_ranges(V, Xw, yw, interpret=True)
+    loe, hie = ref.threshold_ranges_ref(V, Xw, yw)
+    fin = np.isfinite(np.asarray(loe))
+    np.testing.assert_allclose(np.asarray(lo)[fin], np.asarray(loe)[fin], rtol=1e-5)
+    mask = ops.support_uncertain(V, ok, lo, hi, X, yw, interpret=True)
+    maske = ref.uncertain_mask_ref(V, ok, loe, hie, X, yw)
+    assert bool(jnp.all(mask == maske))
+
+
+def test_support_margin_one_class_only():
+    """All-positive transcript: hi stays +BIG (no negative constraint)."""
+    V = jnp.eye(2)
+    Xw = jnp.array([[1.0, 0.0], [2.0, 0.0]])
+    yw = jnp.array([1, 1])
+    lo, hi = ops.support_ranges(V, Xw, yw, interpret=True)
+    assert float(lo[0]) == pytest.approx(2.0)
+    assert float(hi[0]) >= 1e29
+
+
+def test_geometry_consistency_with_kernel():
+    """geometry.consistent_threshold_ranges (XLA path) == Pallas path."""
+    from repro.core import geometry as geo
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    V = np.asarray(geo.direction_grid(128))
+    Xw = jax.random.normal(ks[0], (50, 2))
+    yw = jnp.where(jax.random.bernoulli(ks[1], 0.5, (50,)), 1, -1)
+    lo_g, hi_g = geo.consistent_threshold_ranges(jnp.asarray(V), Xw, yw)
+    lo_k, hi_k = ops.support_ranges(jnp.asarray(V), Xw, yw, interpret=True)
+    fin = np.isfinite(np.asarray(lo_g))
+    np.testing.assert_allclose(np.asarray(lo_k)[fin], np.asarray(lo_g)[fin], rtol=1e-5)
+    fin = np.isfinite(np.asarray(hi_g))
+    np.testing.assert_allclose(np.asarray(hi_k)[fin], np.asarray(hi_g)[fin], rtol=1e-5)

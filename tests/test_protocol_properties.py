@@ -1,0 +1,81 @@
+"""Hypothesis property tests on the protocol-system invariants."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import datasets
+from repro.core.protocols import kparty, two_way
+
+from conftest import global_err
+
+
+def _random_separable(n, k, seed, gap=0.25):
+    """Random linearly separable 2-D instance, random angular partition."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 2)) * rng.uniform(0.5, 2.0, size=2)
+    w = rng.normal(size=2)
+    w /= np.linalg.norm(w)
+    b = rng.normal() * 0.5
+    m = X @ w + b
+    X, m = X[np.abs(m) > gap], m[np.abs(m) > gap]
+    y = np.where(m > 0, 1, -1).astype(np.int32)
+    if len(np.unique(y)) < 2 or len(y) < 4 * k:
+        return None
+    mode = seed % 3
+    if mode == 0:      # iid split
+        order = rng.permutation(len(y))
+    elif mode == 1:    # angular sectors
+        order = np.argsort(np.arctan2(X[:, 1], X[:, 0]))
+    else:              # sorted along the separator normal (adversarial)
+        order = np.argsort(m)
+    return [(X[c], y[c]) for c in np.array_split(order, k)]
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_two_party_median_always_reaches_eps(seed):
+    """Invariant: on ANY noiseless separable instance the MEDIAN protocol
+    reaches ε-error (the Thm 5.1 guarantee, property-tested)."""
+    shards = _random_separable(300, 2, seed)
+    if shards is None:
+        return
+    r = two_way.iterative_support_median(shards, eps=0.05)
+    assert global_err(r.classifier, shards) <= 0.05
+
+
+@given(st.integers(0, 10_000), st.integers(2, 5))
+@settings(max_examples=20, deadline=None)
+def test_kparty_median_always_reaches_eps(seed, k):
+    shards = _random_separable(80 * k, k, seed)
+    if shards is None:
+        return
+    r = kparty.iterative_support_kparty(shards, eps=0.05, selector="median")
+    assert global_err(r.classifier, shards) <= 0.05
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_median_invariant_under_translation(seed):
+    """Shifting all data by a constant must not change convergence (the
+    protocol is affine-equivariant via its threshold offsets)."""
+    shards = _random_separable(200, 2, seed)
+    if shards is None:
+        return
+    t = np.asarray([37.5, -12.25])
+    shifted = [(X + t, y) for X, y in shards]
+    r = two_way.iterative_support_median(shifted, eps=0.05)
+    assert global_err(r.classifier, shifted) <= 0.05
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_comm_cost_never_exceeds_naive(seed):
+    """Sanity invariant: the protocol never ships more points than NAIVE
+    would (the whole smaller shard)."""
+    shards = _random_separable(300, 2, seed)
+    if shards is None:
+        return
+    r = two_way.iterative_support_median(shards, eps=0.05)
+    n_naive = min(len(s[1]) for s in shards)
+    assert r.comm["points"] <= max(n_naive, 64)

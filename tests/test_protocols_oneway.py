@@ -1,0 +1,123 @@
+"""One-way protocol tests: paper Lemma 3.1/3.2, Theorems 3.1/3.2/6.1/6.2."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import datasets
+from repro.core.protocols import one_way
+
+from conftest import global_err
+
+
+# ---------------------------------------------------------------------------
+# thresholds (Lemma 3.1 + Thm 6.2 k-party): 0 error, <= 2 points per hop
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 6), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_threshold_zero_error_constant_comm(k, seed):
+    shards = datasets.threshold_instance(n=50 * k, k=k, seed=seed)
+    r = one_way.threshold_protocol(shards)
+    assert global_err(r.classifier, shards) == 0.0
+    assert r.comm["points"] <= 2 * (k - 1)  # paper: 2k one-way communication
+
+
+# ---------------------------------------------------------------------------
+# intervals (Lemma 3.2): 0 error, <= 4 points per hop
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 5), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_interval_zero_error_constant_comm(k, seed):
+    shards = datasets.interval_instance(n=50 * k, k=k, seed=seed)
+    r = one_way.interval_protocol(shards)
+    assert global_err(r.classifier, shards) == 0.0
+    assert r.comm["points"] <= 4 * (k - 1)
+
+
+def test_interval_empty_case():
+    """A has only negatives (the paper's ∅ branch)."""
+    rng = np.random.default_rng(0)
+    XA = rng.uniform(2, 3, size=(20, 1))
+    yA = -np.ones(20, dtype=np.int32)
+    XB = rng.uniform(0, 1, size=(20, 1))
+    yB = np.where((XB[:, 0] > 0.3) & (XB[:, 0] < 0.6), 1, -1)
+    r = one_way.interval_protocol([(XA, yA), (XB, yB)])
+    assert global_err(r.classifier, [(XA, yA), (XB, yB)]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# rectangles (Thm 3.2 / 6.2): 0 error, O(d) per hop
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 6), st.integers(2, 4), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_rectangle_zero_error(d, k, seed):
+    shards = datasets.rectangle_instance(n=60 * k, k=k, d=d, seed=seed)
+    r = one_way.rectangle_protocol(shards)
+    assert global_err(r.classifier, shards) == 0.0
+    # paper: 4d values = 4 corner points per hop in our point-encoding
+    assert r.comm["points"] <= 4 * (k - 1)
+
+
+# ---------------------------------------------------------------------------
+# ε-net sampling (Thm 3.1 / 6.1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_random_sampling_eps_error(k):
+    eps = 0.1
+    fails = 0
+    for seed in range(5):
+        shards = datasets.data1(n_per_node=300, k=k, seed=seed)
+        r = one_way.random_sampling(shards, eps=eps, seed=seed)
+        if global_err(r.classifier, shards) > eps:
+            fails += 1
+    assert fails <= 1  # 'with constant probability'
+    assert r.extra["sample_size"] < 300  # actually cheaper than naive
+
+
+def test_local_only_no_comm():
+    shards = datasets.data1(n_per_node=200, k=2, seed=0)
+    # random partition: re-shuffle the union so iid holds (paper Thm 2.1)
+    X = np.concatenate([s[0] for s in shards])
+    y = np.concatenate([s[1] for s in shards])
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(len(y))
+    half = len(y) // 2
+    iid = [(X[perm[:half]], y[perm[:half]]), (X[perm[half:]], y[perm[half:]])]
+    r = one_way.local_only(iid)
+    assert r.comm["points"] == 0
+    assert global_err(r.classifier, iid) <= 0.05
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_threshold_single_class_shards(seed):
+    """Adversarial sorted split gives node 0 only positives — the ∅ case."""
+    rng = np.random.default_rng(seed)
+    x = np.sort(rng.uniform(-1, 1, size=60))
+    t = rng.uniform(-0.5, 0.5)
+    y = np.where(x < t, 1, -1).astype(np.int32)
+    half = len(x) // 2
+    shards = [(x[:half].reshape(-1, 1), y[:half]),
+              (x[half:].reshape(-1, 1), y[half:])]
+    r = one_way.threshold_protocol(shards)
+    assert global_err(r.classifier, shards) == 0.0
+
+
+@given(st.integers(1, 4), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_rectangle_one_class_missing(d, seed):
+    """One node holds only negatives (outside points) — ∅ sentinel path."""
+    rng = np.random.default_rng(seed)
+    lo, hi = -0.4 * np.ones(d), 0.4 * np.ones(d)
+    Xin = rng.uniform(-0.35, 0.35, size=(30, d))
+    Xout = rng.uniform(0.6, 1.0, size=(30, d)) * rng.choice([-1, 1], size=(30, d))
+    shards = [(Xout[:15], -np.ones(15, np.int32)),
+              (np.concatenate([Xin, Xout[15:]]),
+               np.concatenate([np.ones(30, np.int32), -np.ones(15, np.int32)]))]
+    r = one_way.rectangle_protocol(shards)
+    assert global_err(r.classifier, shards) == 0.0

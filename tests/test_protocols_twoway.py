@@ -1,0 +1,138 @@
+"""Two-way protocol tests: IterativeSupports (paper §4-5) + k-party (§6.2)
++ the baselines it is compared against (§7)."""
+
+import numpy as np
+import pytest
+
+from repro.core import datasets
+from repro.core.protocols import baselines, kparty, two_way
+
+from conftest import global_err
+
+EPS = 0.05
+
+
+@pytest.mark.parametrize("gen", [datasets.data1, datasets.data2, datasets.data3])
+@pytest.mark.parametrize("fn", [two_way.iterative_support_median,
+                                two_way.iterative_support_maxmarg])
+def test_two_party_converges_to_eps(gen, fn):
+    shards = gen(n_per_node=250, k=2, seed=0)
+    r = fn(shards, eps=EPS)
+    assert r.converged
+    assert global_err(r.classifier, shards) <= EPS
+
+
+@pytest.mark.parametrize("gen", [datasets.data1, datasets.data3])
+def test_two_way_beats_naive_on_communication(gen):
+    shards = gen(n_per_node=250, k=2, seed=0)
+    naive_cost = baselines.naive(shards).comm["points"]
+    for fn in (two_way.iterative_support_median, two_way.iterative_support_maxmarg):
+        assert fn(shards, eps=EPS).comm["points"] < naive_cost / 5
+
+
+def test_median_logarithmic_rounds():
+    """Thm 5.1: rounds = O(log 1/eps); eps 0.1 -> 0.0125 may add ~3 rounds."""
+    shards = datasets.data3(n_per_node=400, k=2, seed=1)
+    r_coarse = two_way.iterative_support_median(shards, eps=0.1)
+    r_fine = two_way.iterative_support_median(shards, eps=0.0125)
+    assert r_fine.rounds <= r_coarse.rounds + 6
+    assert global_err(r_fine.classifier, shards) <= 0.0125
+
+
+def test_voting_fails_on_adversarial_data3():
+    """Paper Table 2: VOTING is ~50% on Data3 while the protocols reach eps."""
+    shards = datasets.data3(n_per_node=250, k=2, seed=0)
+    v = baselines.voting(shards)
+    assert global_err(v.classifier, shards) >= 0.3
+    m = two_way.iterative_support_median(shards, eps=EPS)
+    assert global_err(m.classifier, shards) <= EPS
+
+
+def test_random_baseline_eps_but_expensive():
+    shards = datasets.data3(n_per_node=250, k=2, seed=0)
+    r = baselines.random(shards, eps=EPS)
+    assert global_err(r.classifier, shards) <= EPS + 0.02
+    med = two_way.iterative_support_median(shards, eps=EPS)
+    assert med.comm["points"] < r.comm["points"]
+
+
+@pytest.mark.parametrize("gen", [datasets.data1, datasets.data2, datasets.data3])
+def test_kparty_converges(gen):
+    shards = gen(n_per_node=150, k=4, seed=0)
+    r = kparty.iterative_support_kparty(shards, eps=EPS, selector="median")
+    assert global_err(r.classifier, shards) <= EPS
+
+
+def test_kparty_maxmarg_converges():
+    shards = datasets.data1(n_per_node=150, k=4, seed=0)
+    r = kparty.iterative_support_kparty(shards, eps=EPS, selector="maxmarg")
+    assert global_err(r.classifier, shards) <= EPS
+
+
+def test_higher_dim_maxmarg():
+    """Paper Table 3: the MAXMARG heuristic works in d=10."""
+    shards = datasets.data1(n_per_node=250, k=2, seed=0)
+    shards = datasets.lift_dim(shards, d=10, seed=7)
+    r = two_way.iterative_support_maxmarg(shards, eps=EPS)
+    assert global_err(r.classifier, shards) <= EPS
+    assert r.comm["points"] < 100
+
+
+def test_mixing_baseline_runs():
+    shards = datasets.data1(n_per_node=100, k=2, seed=0)
+    r = baselines.mixing(shards)
+    assert r.comm["points"] == 0  # parameter mixing ships no raw points
+    assert global_err(r.classifier, shards) <= 0.5
+
+
+def test_single_class_shard_not_poisoned():
+    """Regression: a node holding only one class must not ship a mislabeled
+    stand-in point (the ∅ band edge); protocol still converges."""
+    rng = np.random.default_rng(5)
+    Xp = rng.normal(size=(120, 2)) + np.array([0.0, 2.5])
+    Xn = rng.normal(size=(120, 2)) + np.array([0.0, -2.5])
+    # node A: positives only; node B: everything else
+    shards = [(Xp[:60], np.ones(60, np.int32)),
+              (np.concatenate([Xp[60:], Xn]),
+               np.concatenate([np.ones(60, np.int32), -np.ones(120, np.int32)]))]
+    r = two_way.iterative_support_median(shards, eps=0.05)
+    assert global_err(r.classifier, shards) <= 0.05
+
+
+def test_kparty_sector_partition():
+    """Regression: angular-sector adversarial partition (some nodes nearly
+    single-class) converges with certified pivot pruning."""
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(800, 2)) * np.array([1.5, 1.0])
+    w = np.array([0.8, -0.6])
+    m = X @ w
+    X, m = X[np.abs(m) > 0.2], m[np.abs(m) > 0.2]
+    y = np.where(m > 0, 1, -1).astype(np.int32)
+    ang = np.arctan2(X[:, 1], X[:, 0])
+    order = np.argsort(ang)
+    shards = [(X[c], y[c]) for c in np.array_split(order, 4)]
+    r = kparty.iterative_support_kparty(shards, eps=0.05, selector="median")
+    assert global_err(r.classifier, shards) <= 0.05
+    naive_pts = sum(len(s[1]) for s in shards[:-1])
+    assert r.comm["points"] < naive_pts / 4
+
+
+def test_noisy_setting_recovers_clean_separator():
+    """Paper §8.2 extension: with 5% flipped labels the noise-tolerant
+    protocol still finds a separator that is ~clean-optimal."""
+    shards = datasets.data3(n_per_node=250, k=2, seed=0)
+    noisy = datasets.add_label_noise(shards, rate=0.05)
+    r = two_way.iterative_support_noisy(noisy, eps=0.05)
+    clean_err = global_err(r.classifier, shards)
+    assert clean_err <= 0.05
+    assert r.comm["points"] <= 60  # still two orders below NAIVE
+
+
+def test_noisy_protocol_noise_floor():
+    """Error on the NOISY labels cannot beat the noise floor; the protocol
+    should sit near it, not chase it."""
+    shards = datasets.data1(n_per_node=250, k=2, seed=1)
+    noisy = datasets.add_label_noise(shards, rate=0.1, seed=3)
+    r = two_way.iterative_support_noisy(noisy, eps=0.05)
+    noisy_err = global_err(r.classifier, noisy)
+    assert 0.05 <= noisy_err <= 0.2  # ~the 10% floor

@@ -1,0 +1,46 @@
+"""Reservoir sampling (Vitter) + ε-net size tests."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import sampling
+
+
+def test_epsilon_net_size_monotone():
+    s1 = sampling.epsilon_net_size(0.1, vc_dim=3)
+    s2 = sampling.epsilon_net_size(0.05, vc_dim=3)
+    s3 = sampling.epsilon_net_size(0.05, vc_dim=6)
+    assert s2 > s1 and s3 > s2
+
+
+@given(st.integers(1, 30), st.integers(50, 400), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_reservoir_size_and_membership(size, n, seed):
+    rng = np.random.default_rng(seed)
+    res = sampling.Reservoir(size, dim=2, rng=rng)
+    X = rng.normal(size=(n, 2))
+    y = np.where(rng.random(n) < 0.5, 1, -1)
+    res.add_batch(X, y)
+    RX, Ry = res.sample()
+    assert RX.shape[0] == min(size, n)
+    # every sampled point is a real input point
+    for r in RX:
+        assert np.any(np.all(np.isclose(X, r), axis=1))
+
+
+def test_reservoir_uniformity():
+    """Chi-square-ish sanity: each of n items lands in a k-reservoir with
+    probability ~k/n."""
+    n, k, trials = 40, 8, 1500
+    counts = np.zeros(n)
+    for t in range(trials):
+        rng = np.random.default_rng(t)
+        res = sampling.Reservoir(k, dim=1, rng=rng)
+        X = np.arange(n, dtype=float).reshape(-1, 1)
+        y = np.ones(n, dtype=np.int32)
+        res.add_batch(X, y)
+        RX, _ = res.sample()
+        counts[RX.reshape(-1).astype(int)] += 1
+    freq = counts / trials
+    assert np.all(np.abs(freq - k / n) < 0.05)
