@@ -43,6 +43,17 @@ def main() -> List[str]:
         us = _time(geo.uncertain_mask, V, ok, X[:64], y[:64], X, y)
         print(f"uncertain_mask n={n:>7d} m={m}: {us:10.1f} µs")
         csv.append(f"kernel/uncertain_mask/n={n},{us:.0f},m={m}")
+    print("### batched sweep data plane (jitted XLA, CPU)")
+    from repro.kernels import ref
+    for B in (8, 32):
+        m, n = 1024, 4096
+        ks = jax.random.split(jax.random.fold_in(key, B), 3)
+        V = geo.direction_grid(m)
+        Xw = jax.random.normal(ks[0], (B, n, 2))
+        yw = jnp.where(jax.random.bernoulli(ks[1], 0.5, (B, n)), 1, -1)
+        us = _time(ref.threshold_ranges_batch_ref, V, Xw, yw)
+        print(f"threshold_ranges_batch B={B:>3d} n={n} m={m}: {us:10.1f} µs")
+        csv.append(f"kernel/threshold_ranges_batch/B={B},{us:.0f},n={n};m={m}")
     print("### Pallas interpret-mode (correctness-scale)")
     ks = jax.random.split(key, 3)
     q = jax.random.normal(ks[0], (1, 256, 4, 64))

@@ -1,0 +1,149 @@
+"""Pre-engine host-loop MEDIAN baseline (benchmark + differential oracle).
+
+This is the certified-pivot k-party MEDIAN exactly as it executed before the
+batched engine landed: a host-side Python loop over turns, numpy control
+plane, and a device round-trip per round for the jit'd geometry scans.  It is
+kept verbatim for two reasons only:
+
+* ``benchmarks/engine_sweep.py`` measures the engine's speedup against the
+  execution model it replaced (this one);
+* it doubles as a differential-testing oracle for the engine's protocol
+  logic (same selector, same pivot rule, float64 host arithmetic).
+
+Production code paths must use :mod:`repro.engine` — do not import this from
+``src/``.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import classifiers as clf
+from repro.core import geometry as geo
+from repro.core.comm import Node, make_nodes
+from repro.core.protocols.one_way import ProtocolResult
+from repro.core.protocols.two_way import (
+    _pick_median_direction,
+    _risk_matrix,
+    _support_along,
+    _transcript,
+)
+
+
+def _extremes_along(node: Node, v: np.ndarray, Wx, Wy):
+    """Node's extreme band points along v over (own ∪ transcript)."""
+    X = np.concatenate([node.X, Wx])
+    y = np.concatenate([node.y, Wy])
+    proj = X @ v
+    pos = y == 1
+    p = X[int(np.argmax(np.where(pos, proj, -np.inf)))] if pos.any() else None
+    q = X[int(np.argmin(np.where(~pos, proj, np.inf)))] if (~pos).any() else None
+    return p, q
+
+
+def kparty_median_hostloop(
+    shards,
+    eps: float = 0.05,
+    max_epochs: int = 48,
+    n_angles: int = 1024,
+) -> ProtocolResult:
+    """The pre-refactor per-instance execution path (host Python round loop)."""
+    nodes, log = make_nodes(shards)
+    k = len(nodes)
+    n_total = sum(nd.n for nd in nodes)
+    budget = int(np.floor(eps * n_total))
+
+    V = np.asarray(geo.direction_grid(n_angles))
+    dir_ok = np.ones(n_angles, dtype=bool)
+    sent = {nd.name: ([], []) for nd in nodes}
+
+    h: Optional[clf.LinearSeparator] = None
+    for epoch in range(max_epochs):
+        for ci in range(k):
+            log.new_round()
+            coord = nodes[ci]
+            others = [nd for nd in nodes if nd is not coord]
+
+            # --- coordinator: median direction of its SOU + support band ----
+            Wx_c, Wy_c = _transcript(coord, *sent[coord.name])
+            risk = _risk_matrix(coord, V, dir_ok, Wx_c, Wy_c)
+            v_idx = _pick_median_direction(risk, dir_ok)
+            v = V[v_idx]
+            S_X, S_y, lo_c, hi_c = _support_along(coord, v, Wx_c, Wy_c)
+            for nd in others:
+                coord.send_points(nd, S_X, S_y, tag="kparty-support")
+                coord.send_scalars(nd, np.concatenate([v, [lo_c, hi_c]]),
+                                   tag="kparty-direction")
+            sent[coord.name][0].extend(list(S_X))
+            sent[coord.name][1].extend(list(S_y))
+
+            # --- ε-early-exit: try the coordinator's band midpoint ----------
+            if np.isfinite(lo_c) and np.isfinite(hi_c) and lo_c < hi_c:
+                cand = clf.LinearSeparator(-v, 0.5 * (lo_c + hi_c))
+                err_tot = 0
+                for nd in nodes:
+                    e = int(round(cand.error(nd.X, nd.y) * nd.n))
+                    err_tot += e
+                    if nd is not coord:
+                        nd.send_scalars(coord, np.asarray([float(e)]),
+                                        tag="kparty-err")
+                if err_tot <= budget:
+                    return ProtocolResult(cand, log.summary(),
+                                          rounds=epoch + 1, converged=True)
+                h = cand
+
+            # --- replies: extreme band points along v (2 points each) -------
+            best_p, best_q = None, None
+            lo_g, hi_g = -np.inf, np.inf
+            for nd in nodes:
+                if nd is coord:
+                    Wx_d, Wy_d = Wx_c, Wy_c
+                else:
+                    Wx_d, Wy_d = _transcript(nd, *sent[nd.name])
+                p, q = _extremes_along(nd, v, Wx_d, Wy_d)
+                pts, labs = [], []
+                if p is not None:
+                    if p @ v > lo_g:
+                        lo_g, best_p = p @ v, p
+                    pts.append(p); labs.append(1)
+                if q is not None:
+                    if q @ v < hi_g:
+                        hi_g, best_q = q @ v, q
+                    pts.append(q); labs.append(-1)
+                if nd is not coord and pts:
+                    nd.send_points(coord, np.stack(pts),
+                                   np.asarray(labs, np.int32),
+                                   tag="kparty-extremes")
+                    sent[nd.name][0].extend(pts)
+                    sent[nd.name][1].extend(labs)
+
+            if lo_g < hi_g:
+                if not np.isfinite(lo_g):      # no positives at all
+                    lo_g = hi_g - 2.0
+                if not np.isfinite(hi_g):      # no negatives at all
+                    hi_g = lo_g + 2.0
+                t_star = 0.5 * (lo_g + hi_g)
+                cand = clf.LinearSeparator(-v, t_star)
+                for nd in others:
+                    nd.send_bit(coord, 1, tag="kparty-accept")
+                return ProtocolResult(cand, log.summary(), rounds=epoch + 1,
+                                      converged=True)
+
+            # --- empty band: certified pivot prune (paper Fig. 2 right) -----
+            constraint = V @ (best_q - best_p)
+            new_ok = dir_ok & (constraint > 1e-12)
+            for nd in others:
+                coord.send_points(nd, np.stack([best_p, best_q]),
+                                  np.asarray([1, -1], np.int32),
+                                  tag="kparty-pivot")
+            sent[coord.name][0].extend([best_p, best_q])
+            sent[coord.name][1].extend([1, -1])
+            if new_ok.any():
+                dir_ok = new_ok
+            if h is None:
+                t_fb = 0.5 * (lo_c + hi_c) if (np.isfinite(lo_c) and
+                                               np.isfinite(hi_c)) else 0.0
+                h = clf.LinearSeparator(-v, t_fb)
+    return ProtocolResult(h, log.summary(), rounds=max_epochs, converged=False)

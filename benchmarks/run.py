@@ -3,6 +3,8 @@
 Sections:
   paper_tables    Tables 2 / 3 / 4 (accuracy + communication cost)
   comm_scaling    Table 1 rate claims: cost vs ε and vs k
+  engine_sweep    batched engine vs sequential per-instance sweeps
+                  (writes BENCH_engine.json at the repo root)
   lower_bound     Appendix A (Ω(1/ε)) and Appendix B (Ω(|D_A|)) constructions
   kernel_bench    data-plane hot-loop timings
   roofline_table  §Roofline terms from the dry-run artifacts (if present)
@@ -19,8 +21,8 @@ from typing import List
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks import comm_scaling, kernel_bench, lower_bound, paper_tables
-from benchmarks import roofline_table
+from benchmarks import comm_scaling, engine_sweep, kernel_bench, lower_bound
+from benchmarks import paper_tables, roofline_table
 
 
 def main() -> None:
@@ -28,6 +30,7 @@ def main() -> None:
     sections = [
         ("paper tables (2/3/4)", paper_tables.main),
         ("communication scaling (Table 1 rates)", comm_scaling.main),
+        ("engine sweep (batched vs sequential)", engine_sweep.main),
         ("lower bounds (App A/B)", lower_bound.main),
         ("kernel micro-bench", kernel_bench.main),
     ]

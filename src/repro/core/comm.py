@@ -24,6 +24,13 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 
+def wire_bytes(points: int, scalars: int, bits: int, dim: int) -> int:
+    """Canonical float32 wire size: a labeled point is d+1 floats, a scalar is
+    one float, control bits are packed.  Single source of truth for every
+    accounting path (Message, CommStats, and the engine's BatchCommLog)."""
+    return points * (dim + 1) * 4 + scalars * 4 + math.ceil(bits / 8)
+
+
 @dataclasses.dataclass
 class Message:
     """One transmission between two nodes."""
@@ -37,7 +44,7 @@ class Message:
     payload: Any = None
 
     def nbytes(self, dim: int) -> int:
-        return self.points * (dim + 1) * 4 + self.scalars * 4 + math.ceil(self.bits / 8)
+        return wire_bytes(self.points, self.scalars, self.bits, dim)
 
 
 @dataclasses.dataclass
@@ -49,7 +56,7 @@ class CommStats:
     rounds: int = 0
 
     def nbytes(self, dim: int) -> int:
-        return self.points * (dim + 1) * 4 + self.scalars * 4 + math.ceil(self.bits / 8)
+        return wire_bytes(self.points, self.scalars, self.bits, dim)
 
 
 class CommLog:

@@ -139,8 +139,9 @@ def consistent_threshold_ranges(
     proj = V @ Xw.T  # (m, n)
     big = jnp.inf
     pos = yw == 1
+    neg = yw == -1   # explicit: label-0 padding rows constrain neither side
     lo = jnp.max(jnp.where(pos[None, :], proj, -big), axis=1, initial=-big)
-    hi = jnp.min(jnp.where(~pos[None, :], proj, big), axis=1, initial=big)
+    hi = jnp.min(jnp.where(neg[None, :], proj, big), axis=1, initial=big)
     return lo, hi
 
 

@@ -22,38 +22,21 @@ certified outcomes follow (noiseless setting):
 An ε-early-exit check (1 scalar per node) runs each turn so the protocol can
 also stop at ε-error before exact separation, per §4.3.  Communication per
 turn is O(k) points; an epoch of k turns is O(k²) — Thm 6.3.
+
+The MEDIAN data plane lives in :mod:`repro.engine`: one turn is a pure
+jitted ``step(state) -> state`` advanced under ``lax.while_loop``, batched
+over independent instances.  This module is the thin single-instance entry
+point (an engine sweep with B=1); the MAXMARG selector (and d≠2) keeps its
+host-side loop because it needs per-round SVM refits.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
-
 import numpy as np
-import jax.numpy as jnp
 
 from repro.core import classifiers as clf
-from repro.core import geometry as geo
-from repro.core.comm import Node, make_nodes
+from repro.core.comm import make_nodes
 from repro.core.protocols.one_way import ProtocolResult
-from repro.core.protocols.two_way import (
-    _pick_median_direction,
-    _risk_matrix,
-    _support_along,
-    _transcript,
-)
-
-
-def _extremes_along(node: Node, v: np.ndarray, Wx, Wy):
-    """Node's extreme band points along v over (own ∪ transcript):
-    (positive argmax-projection, negative argmin-projection); either may be
-    None if that class is absent."""
-    X = np.concatenate([node.X, Wx])
-    y = np.concatenate([node.y, Wy])
-    proj = X @ v
-    pos = y == 1
-    p = X[int(np.argmax(np.where(pos, proj, -np.inf)))] if pos.any() else None
-    q = X[int(np.argmin(np.where(~pos, proj, np.inf)))] if (~pos).any() else None
-    return p, q
 
 
 def iterative_support_kparty(
@@ -63,112 +46,17 @@ def iterative_support_kparty(
     n_angles: int = 1024,
     selector: str = "median",
 ) -> ProtocolResult:
-    nodes, log = make_nodes(shards)
-    k = len(nodes)
-    d = nodes[0].d
-    n_total = sum(nd.n for nd in nodes)
-    budget = int(np.floor(eps * n_total))
-
+    d = shards[0][0].shape[1]
     if selector == "maxmarg" or d != 2:
+        nodes, log = make_nodes(shards)
+        n_total = sum(nd.n for nd in nodes)
+        budget = int(np.floor(eps * n_total))
         return _kparty_maxmarg(nodes, log, budget, max_epochs)
 
-    V = np.asarray(geo.direction_grid(n_angles))
-    dir_ok = np.ones(n_angles, dtype=bool)   # shared: transcript is broadcast
-    sent = {nd.name: ([], []) for nd in nodes}
-
-    h: Optional[clf.LinearSeparator] = None
-    for epoch in range(max_epochs):
-        for ci in range(k):
-            log.new_round()
-            coord = nodes[ci]
-            others = [nd for nd in nodes if nd is not coord]
-
-            # --- coordinator: median direction of its SOU + support band ----
-            Wx_c, Wy_c = _transcript(coord, *sent[coord.name])
-            risk = _risk_matrix(coord, V, dir_ok, Wx_c, Wy_c)
-            v_idx = _pick_median_direction(risk, dir_ok)
-            v = V[v_idx]
-            S_X, S_y, lo_c, hi_c = _support_along(coord, v, Wx_c, Wy_c)
-            for nd in others:
-                coord.send_points(nd, S_X, S_y, tag="kparty-support")
-                coord.send_scalars(nd, np.concatenate([v, [lo_c, hi_c]]),
-                                   tag="kparty-direction")
-            sent[coord.name][0].extend(list(S_X))
-            sent[coord.name][1].extend(list(S_y))
-
-            # --- ε-early-exit: try the coordinator's band midpoint ----------
-            if np.isfinite(lo_c) and np.isfinite(hi_c) and lo_c < hi_c:
-                cand = clf.LinearSeparator(-v, 0.5 * (lo_c + hi_c))
-                err_tot = 0
-                for nd in nodes:
-                    e = int(round(cand.error(nd.X, nd.y) * nd.n))
-                    err_tot += e
-                    if nd is not coord:
-                        nd.send_scalars(coord, np.asarray([float(e)]),
-                                        tag="kparty-err")
-                if err_tot <= budget:
-                    return ProtocolResult(cand, log.summary(),
-                                          rounds=epoch + 1, converged=True)
-                h = cand
-
-            # --- replies: extreme band points along v (2 points each) -------
-            best_p, best_q = None, None   # global argmax-positive / argmin-neg
-            lo_g, hi_g = -np.inf, np.inf
-            all_pts: List[Tuple[np.ndarray, int, Node]] = []
-            for nd in nodes:
-                if nd is coord:
-                    Wx_d, Wy_d = Wx_c, Wy_c
-                else:
-                    Wx_d, Wy_d = _transcript(nd, *sent[nd.name])
-                p, q = _extremes_along(nd, v, Wx_d, Wy_d)
-                pts, labs = [], []
-                if p is not None:
-                    if p @ v > lo_g:
-                        lo_g, best_p = p @ v, p
-                    pts.append(p); labs.append(1)
-                if q is not None:
-                    if q @ v < hi_g:
-                        hi_g, best_q = q @ v, q
-                    pts.append(q); labs.append(-1)
-                if nd is not coord and pts:
-                    nd.send_points(coord, np.stack(pts),
-                                   np.asarray(labs, np.int32),
-                                   tag="kparty-extremes")
-                    sent[nd.name][0].extend(pts)
-                    sent[nd.name][1].extend(labs)
-                all_pts += [(x, l, nd) for x, l in zip(pts, labs)]
-
-            if lo_g < hi_g:
-                # global band non-empty ⇒ 0 error on every node's points
-                if not np.isfinite(lo_g):      # no positives at all
-                    lo_g = hi_g - 2.0
-                if not np.isfinite(hi_g):      # no negatives at all
-                    hi_g = lo_g + 2.0
-                t_star = 0.5 * (lo_g + hi_g)
-                cand = clf.LinearSeparator(-v, t_star)
-                for nd in others:
-                    nd.send_bit(coord, 1, tag="kparty-accept")
-                return ProtocolResult(cand, log.summary(), rounds=epoch + 1,
-                                      converged=True)
-
-            # --- empty band: certified pivot prune (paper Fig. 2 right) -----
-            # every consistent direction must put q* strictly above p*
-            constraint = V @ (best_q - best_p)        # (n_angles,)
-            new_ok = dir_ok & (constraint > 1e-12)
-            # rebroadcast the violating pair so every player prunes identically
-            for nd in others:
-                coord.send_points(nd, np.stack([best_p, best_q]),
-                                  np.asarray([1, -1], np.int32),
-                                  tag="kparty-pivot")
-            sent[coord.name][0].extend([best_p, best_q])
-            sent[coord.name][1].extend([1, -1])
-            if new_ok.any():
-                dir_ok = new_ok
-            if h is None:
-                t_fb = 0.5 * (lo_c + hi_c) if (np.isfinite(lo_c) and
-                                               np.isfinite(hi_c)) else 0.0
-                h = clf.LinearSeparator(-v, t_fb)
-    return ProtocolResult(h, log.summary(), rounds=max_epochs, converged=False)
+    from repro import engine
+    return engine.run_instances(
+        [engine.ProtocolInstance(shards, eps)],
+        n_angles=n_angles, max_epochs=max_epochs)[0]
 
 
 def _kparty_maxmarg(nodes, log, budget: int, max_epochs: int) -> ProtocolResult:

@@ -149,7 +149,6 @@ def _pick_median_direction(risk: np.ndarray, dir_ok: np.ndarray) -> int:
     whichever side the receiver's bit discards, ≥ that many points leave the
     SOU.
     """
-    m = risk.shape[0]
     idxs = np.where(dir_ok)[0]
     if len(idxs) <= 1:
         return int(idxs[0]) if len(idxs) else 0
@@ -157,17 +156,14 @@ def _pick_median_direction(risk: np.ndarray, dir_ok: np.ndarray) -> int:
     csum = np.cumsum(sub, axis=0)
     total = csum[-1]
     active = total > 0
-    # point's arc entirely below cut i  <=>  csum[i] == total (no risk above)
-    best_i, best_score = 0, -1
-    # evaluate a subsample of cuts for speed
-    stride = max(1, len(idxs) // 128)
-    for i in range(0, len(idxs), stride):
-        below = int(np.sum((csum[i] == total) & active))  # arc entirely ≤ cut
-        above = int(np.sum((csum[i] == 0) & active))      # arc entirely > cut
-        score = min(below, above)
-        if score > best_score:
-            best_score, best_i = score, i
-    return int(idxs[best_i])
+    # point's arc entirely below cut i  <=>  csum[i] == total (no risk above);
+    # entirely above  <=>  csum[i] == 0.  Full vectorized scan over every
+    # allowed cut (a strided subsample can miss the true halving cut once
+    # more than ~128 directions remain).
+    below = np.sum((csum == total[None, :]) & active[None, :], axis=1)
+    above = np.sum((csum == 0) & active[None, :], axis=1)
+    score = np.minimum(below, above)
+    return int(idxs[int(np.argmax(score))])
 
 
 def _support_along(node: Node, v: np.ndarray, Wx, Wy):
@@ -230,7 +226,8 @@ def iterative_support_median(
     The certified variant replies with the receiver's extreme band points —
     the paper's own §5.2 pivoting rule — which provably never discards a
     consistent direction.  Two-party is the k=2 instance of the k-party
-    epoch protocol.
+    epoch protocol, which executes on the batched engine (``repro.engine``)
+    with B=1.
     """
     from repro.core.protocols.kparty import iterative_support_kparty
     return iterative_support_kparty(shards[:2], eps=eps,

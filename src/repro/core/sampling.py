@@ -55,8 +55,37 @@ class Reservoir:
             self.y[j] = label
 
     def add_batch(self, X: np.ndarray, y: np.ndarray) -> None:
-        for xi, yi in zip(np.atleast_2d(X), np.atleast_1d(y)):
-            self.add(xi, int(yi))
+        """Vectorized ingest of a whole shard — one RNG draw and two fancy
+        assignments instead of O(n) Python-level ``add`` calls.
+
+        Identical process to repeated :meth:`add`: the item at global stream
+        position t draws j ~ U[0, t) and replaces slot j iff j < capacity.
+        Later items overwrite earlier ones on slot collisions (numpy fancy
+        assignment keeps the last write), matching sequential order, so
+        inclusion probabilities are exactly Vitter's k/t.
+        """
+        X = np.atleast_2d(np.asarray(X, dtype=np.float64))
+        y = np.atleast_1d(np.asarray(y))
+        n = X.shape[0]
+        if n == 0:
+            return
+        start = 0
+        if self.filled < self.capacity:
+            take = min(self.capacity - self.filled, n)
+            self.X[self.filled:self.filled + take] = X[:take]
+            self.y[self.filled:self.filled + take] = y[:take]
+            self.filled += take
+            self.seen += take
+            start = take
+        rest = n - start
+        if rest == 0:
+            return
+        positions = self.seen + 1 + np.arange(rest)   # 1-based stream counts
+        j = self.rng.integers(0, positions)           # j ~ U[0, t) per item
+        hit = j < self.capacity
+        self.X[j[hit]] = X[start:][hit]
+        self.y[j[hit]] = y[start:][hit]
+        self.seen += rest
 
     def sample(self) -> Tuple[np.ndarray, np.ndarray]:
         return self.X[: self.filled].copy(), self.y[: self.filled].copy()

@@ -1,0 +1,41 @@
+"""Batched protocol engine: full scenario sweeps as one compiled dispatch.
+
+The paper's experiments are sweeps — ε × partition × dataset × protocol —
+and every instance is independent, so the data plane batches them: a
+:class:`ProtocolState` pytree with a leading instance axis, one pure jitted
+``step`` advanced under ``lax.while_loop`` (fused inline scans plus
+append-time threshold-range maintenance), and vectorized on-device
+communication accounting (:class:`BatchCommLog`) lowered to the classic
+``CommLog.summary`` dicts at the end.  The batch-grid Pallas kernels for the
+bulk scans live in :mod:`repro.kernels.support_margin` and are reachable via
+:mod:`repro.engine.dataplane` (SOU diagnostics and the rescan oracle that
+cross-checks the incremental ranges).
+
+The single-instance protocol API (``iterative_support_median``,
+``iterative_support_kparty``) delegates here with B=1, so batched and
+sequential execution are the same compiled program — parity by construction.
+"""
+
+from repro.engine.state import (
+    BatchCommLog,
+    EngineData,
+    ProtocolInstance,
+    ProtocolState,
+    pack_instances,
+    transcript_capacity,
+)
+from repro.engine.median import run_compiled, run_instances, step
+from repro.engine import dataplane
+
+__all__ = [
+    "BatchCommLog",
+    "EngineData",
+    "ProtocolInstance",
+    "ProtocolState",
+    "dataplane",
+    "pack_instances",
+    "run_compiled",
+    "run_instances",
+    "step",
+    "transcript_capacity",
+]

@@ -1,0 +1,72 @@
+"""Batched bulk scans over sweep state: Pallas on TPU / jitted JAX on CPU.
+
+The two shapes are exactly the single-instance kernels' with a leading batch
+axis:
+
+* ``ranges``: per-instance consistent-threshold intervals over a transcript
+  — (B, m, cap) masked matmul-reduce;
+* ``uncertain``: per-instance SOU membership — (B, m, n) masked matmul-any.
+
+On TPU both dispatch to the batch-grid Pallas kernels
+(``repro.kernels.support_margin.{threshold_ranges_batched,
+uncertain_mask_batched}``); elsewhere to the jitted pure-jnp oracles in
+``repro.kernels.ref`` (interpret-mode Pallas inside a hot loop would be
+pathologically slow).  Outputs are normalized to ±inf sentinels.
+
+Note these are the *bulk-scan* entry points — SOU diagnostics over final
+sweep state, and the rescan oracle that validates the engine's incremental
+ranges (tests/test_engine.py).  The engine's in-loop data plane is the fused
+inline pipeline in ``median.step`` plus append-time range maintenance; it
+does not route through this module (see DESIGN.md §data plane).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.support_margin import BIG
+
+
+def use_pallas_default() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ranges(
+    V: jnp.ndarray,      # (m, d) shared directions
+    Wx: jnp.ndarray,     # (B, cap, d) transcripts
+    Wy: jnp.ndarray,     # (B, cap) i32 labels, 0 = empty/padding
+    *,
+    use_pallas: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-direction consistent-threshold intervals (lo, hi), each (B, m);
+    a missing class yields -inf/+inf."""
+    if use_pallas:
+        lo, hi = ops.support_ranges_batch(V, Wx, Wy)
+        lo = jnp.where(lo <= -BIG / 2, -jnp.inf, lo)
+        hi = jnp.where(hi >= BIG / 2, jnp.inf, hi)
+    else:
+        lo, hi = ref.threshold_ranges_batch_ref(V, Wx, Wy)
+    return lo, hi
+
+
+def uncertain(
+    V: jnp.ndarray,       # (m, d)
+    dir_ok: jnp.ndarray,  # (B, m) bool
+    lo: jnp.ndarray,      # (B, m)
+    hi: jnp.ndarray,      # (B, m)
+    X: jnp.ndarray,       # (B, n, d)
+    y: jnp.ndarray,       # (B, n) i32, 0 = padding
+    *,
+    use_pallas: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Batched SOU membership, bool (B, n); padding rows report False."""
+    use_pallas = use_pallas_default() if use_pallas is None else use_pallas
+    if use_pallas:
+        mask = ops.support_uncertain_batch(V, dir_ok, lo, hi, X, y)
+    else:
+        mask = ref.uncertain_mask_batch_ref(V, dir_ok, lo, hi, X, y)
+    return mask & (y != 0)

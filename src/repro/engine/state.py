@@ -1,0 +1,178 @@
+"""Batched protocol state: pytrees + packing/lowering for the sweep engine.
+
+A *sweep* is B independent MEDIAN/k-party protocol instances (same party
+count k, possibly different datasets, shard sizes, error budgets and seeds)
+advanced in lock-step by one compiled ``step``.  Everything lives in fixed
+static shapes:
+
+* shards are padded to a common ``n_max`` with **label-0 rows** (the same
+  zero-label padding convention the Pallas kernels use — padding rows are
+  inert in every masked reduction);
+* per-node transcript buffers have static capacity ``cap`` plus a fill
+  counter; rows at or beyond the fill always carry label 0, so a transcript
+  is valid under the same convention without ever being compacted;
+* communication is accounted in :class:`BatchCommLog` — per-instance integer
+  arrays updated on device exactly where the metered :class:`~repro.core.comm`
+  channels would record a message, and lowered to ``CommLog.summary()``-shaped
+  dicts at the end (the metered-channel invariant: costs are measured by the
+  data plane itself, never re-derived).
+
+See DESIGN.md §"Batched engine" for the capacity bound and padding rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.comm import wire_bytes
+
+
+class BatchCommLog(NamedTuple):
+    """Vectorized communication ledger: one integer counter per instance.
+
+    Mirrors :class:`repro.core.comm.CommStats` field-for-field; ``rounds``
+    counts protocol *turns* exactly like ``CommLog.new_round()``.
+    """
+
+    points: jnp.ndarray    # (B,) i32
+    scalars: jnp.ndarray   # (B,) i32
+    bits: jnp.ndarray      # (B,) i32
+    messages: jnp.ndarray  # (B,) i32
+    rounds: jnp.ndarray    # (B,) i32
+
+    @staticmethod
+    def zeros(batch: int) -> "BatchCommLog":
+        z = jnp.zeros((batch,), jnp.int32)
+        return BatchCommLog(z, z, z, z, z)
+
+    def summary(self, i: int, dim: int) -> Dict[str, Any]:
+        """Lower instance ``i`` to the exact dict ``CommLog.summary()`` emits."""
+        p = int(self.points[i])
+        s = int(self.scalars[i])
+        b = int(self.bits[i])
+        return {
+            "points": p,
+            "scalars": s,
+            "bits": b,
+            "messages": int(self.messages[i]),
+            "rounds": int(self.rounds[i]),
+            "bytes": wire_bytes(p, s, b, dim),
+        }
+
+    def summaries(self, dim: int) -> List[Dict[str, Any]]:
+        return [self.summary(i, dim) for i in range(self.points.shape[0])]
+
+
+class ProtocolState(NamedTuple):
+    """Per-instance protocol state advanced by ``median.step`` (a pytree).
+
+    All leading axes are the batch axis B except ``turn`` (a scalar: the
+    engine runs the whole batch in lock-step, so the coordinator index
+    ``turn % k`` is shared and finished instances are masked no-ops).
+    """
+
+    dir_ok: jnp.ndarray     # (B, m) bool — allowed direction arc
+    wx: jnp.ndarray         # (B, k, cap, d) f32 — per-node transcript points
+    wy: jnp.ndarray         # (B, k, cap) i32 — transcript labels (0 = empty)
+    w_fill: jnp.ndarray     # (B, k) i32 — transcript fill counters
+    lo_w: jnp.ndarray       # (B, k, m) f32 — running per-node threshold lo
+    hi_w: jnp.ndarray       # (B, k, m) f32 — running per-node threshold hi
+    turn: jnp.ndarray       # () i32 — global turn counter
+    done: jnp.ndarray       # (B,) bool
+    converged: jnp.ndarray  # (B,) bool
+    epochs: jnp.ndarray     # (B,) i32 — 1-based epoch at termination
+    h_v: jnp.ndarray        # (B, d) f32 — current hypothesis direction
+    h_t: jnp.ndarray        # (B,) f32 — current hypothesis threshold
+    h_valid: jnp.ndarray    # (B,) bool
+    comm: BatchCommLog
+
+
+class EngineData(NamedTuple):
+    """Per-instance constants (traced inputs to the jitted runner)."""
+
+    X: jnp.ndarray       # (B, k, n_max, d) f32, zero-padded rows
+    y: jnp.ndarray       # (B, k, n_max) i32 ±1 (0 = padding row)
+    budget: jnp.ndarray  # (B,) i32 — floor(eps * n_total)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolInstance:
+    """One protocol problem: k shards plus an error budget ε."""
+
+    shards: Sequence[Tuple[np.ndarray, np.ndarray]]
+    eps: float = 0.05
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def transcript_capacity(k: int, max_epochs: int) -> int:
+    """Static per-node transcript bound.  Per epoch a node appends at most
+    ``8k - 4`` rows: one coordinator turn (its own ≤2 band points, ≤2 extreme
+    points from each of k-1 repliers, a 2-point pivot pair) plus k-1
+    non-coordinator turns (≤2 received band points, its own ≤2 extremes,
+    a 2-point pivot pair).  +8 slack keeps the 2-row block writes in bounds.
+    """
+    return _round_up(max_epochs * (8 * k - 4) + 8, 8)
+
+
+def pack_instances(
+    instances: Sequence[ProtocolInstance],
+    *,
+    n_angles: int,
+    max_epochs: int,
+) -> Tuple[EngineData, ProtocolState, int, int]:
+    """Pad a sweep onto the engine's static shapes.
+
+    Returns ``(data, state0, k, cap)``.  All instances must share the party
+    count k and dimension d=2; shard sizes may be ragged (label-0 padding).
+    ``n_max`` and ``cap`` are rounded up to multiples of 8 so repeated sweeps
+    of similar sizes reuse the compiled runner.
+    """
+    assert instances, "need at least one instance"
+    ks = {len(inst.shards) for inst in instances}
+    assert len(ks) == 1, f"instances must share the party count, got {ks}"
+    k = ks.pop()
+    ds = {s[0].shape[1] for inst in instances for s in inst.shards}
+    assert ds == {2}, f"MEDIAN engine is specified for R^2, got d={ds}"
+    B = len(instances)
+    n_max = _round_up(max(s[0].shape[0] for inst in instances
+                          for s in inst.shards), 8)
+    cap = transcript_capacity(k, max_epochs)
+
+    X = np.zeros((B, k, n_max, 2), np.float32)
+    y = np.zeros((B, k, n_max), np.int32)
+    budget = np.zeros((B,), np.int32)
+    for b, inst in enumerate(instances):
+        n_total = 0
+        for j, (Xs, ys) in enumerate(inst.shards):
+            n = Xs.shape[0]
+            assert set(np.unique(ys)).issubset({-1, 1}), "labels must be +-1"
+            X[b, j, :n] = Xs
+            y[b, j, :n] = ys
+            n_total += n
+        budget[b] = int(np.floor(inst.eps * n_total))
+
+    data = EngineData(jnp.asarray(X), jnp.asarray(y), jnp.asarray(budget))
+    state0 = ProtocolState(
+        dir_ok=jnp.ones((B, n_angles), bool),
+        wx=jnp.zeros((B, k, cap, 2), jnp.float32),
+        wy=jnp.zeros((B, k, cap), jnp.int32),
+        w_fill=jnp.zeros((B, k), jnp.int32),
+        lo_w=jnp.full((B, k, n_angles), -jnp.inf, jnp.float32),
+        hi_w=jnp.full((B, k, n_angles), jnp.inf, jnp.float32),
+        turn=jnp.zeros((), jnp.int32),
+        done=jnp.zeros((B,), bool),
+        converged=jnp.zeros((B,), bool),
+        epochs=jnp.zeros((B,), jnp.int32),
+        h_v=jnp.zeros((B, 2), jnp.float32),
+        h_t=jnp.zeros((B,), jnp.float32),
+        h_valid=jnp.zeros((B,), bool),
+        comm=BatchCommLog.zeros(B),
+    )
+    return data, state0, k, cap

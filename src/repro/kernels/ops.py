@@ -161,3 +161,44 @@ def support_uncertain(
     out = _sm.uncertain_mask(Vp, okp, lop, hip, Xp, yp, block_m=bm,
                              block_n=bn, interpret=interpret)
     return out[:n] > 0.5
+
+
+def support_ranges_batch(
+    V: jnp.ndarray, Xw: jnp.ndarray, yw: jnp.ndarray, *,
+    block_m: int = 256, block_n: int = 512, interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched consistent-threshold ranges: V (m, d) shared, Xw (B, n, d),
+    yw (B, n) with label-0 padding rows.  One pallas_call over the whole
+    sweep; returns (B, m) lo/hi."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    m, n = V.shape[0], Xw.shape[1]
+    bm = min(block_m, max(m, 8))
+    bn = min(block_n, max(n, 8))
+    Vp = _pad_to(_pad_to(V, 0, bm), 1, _LANE)
+    Xp = _pad_to(_pad_to(Xw, 1, bn), 2, _LANE)
+    yp = _pad_to(yw.astype(jnp.float32), 1, bn)
+    lo, hi = _sm.threshold_ranges_batched(Vp, Xp, yp, block_m=bm, block_n=bn,
+                                          interpret=interpret)
+    return lo[:, :m], hi[:, :m]
+
+
+def support_uncertain_batch(
+    V: jnp.ndarray, dir_ok: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+    X: jnp.ndarray, y: jnp.ndarray, *,
+    block_m: int = 256, block_n: int = 512, interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Batched SOU membership: per-instance dir_ok/lo/hi (B, m) and shards
+    X (B, n, d) / y (B, n); returns bool (B, n)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    m, n = V.shape[0], X.shape[1]
+    bm = min(block_m, max(m, 8))
+    bn = min(block_n, max(n, 8))
+    Vp = _pad_to(_pad_to(V, 0, bm), 1, _LANE)
+    okp = _pad_to(dir_ok.astype(jnp.float32), 1, bm)
+    lop = _pad_to(lo, 1, bm)
+    hip = _pad_to(hi, 1, bm, value=-1.0)  # padded dirs: empty interval
+    Xp = _pad_to(_pad_to(X, 1, bn), 2, _LANE)
+    yp = _pad_to(y.astype(jnp.float32), 1, bn)
+    out = _sm.uncertain_mask_batched(Vp, okp, lop, hip, Xp, yp, block_m=bm,
+                                     block_n=bn, interpret=interpret)
+    return out[:, :n] > 0.5

@@ -112,13 +112,15 @@ def threshold_ranges_ref(
     """Per-direction consistent-threshold interval (lo, hi).
 
     Convention matches ``repro.core.geometry.consistent_threshold_ranges``:
-    predict +1 iff v·x < t, so lo = max over positives, hi = min over negatives.
+    predict +1 iff v·x < t, so lo = max over positives, hi = min over
+    negatives.  Label-0 rows (the padding convention) constrain neither side.
     """
     proj = V @ Xw.T
     big = jnp.inf
     pos = yw == 1
+    neg = yw == -1
     lo = jnp.max(jnp.where(pos[None, :], proj, -big), axis=1, initial=-big)
-    hi = jnp.min(jnp.where(~pos[None, :], proj, big), axis=1, initial=big)
+    hi = jnp.min(jnp.where(neg[None, :], proj, big), axis=1, initial=big)
     return lo, hi
 
 
@@ -137,3 +139,14 @@ def uncertain_mask_ref(
     neg_risk = proj < hi[:, None]
     at_risk = jnp.where((y == 1)[None, :], pos_risk, neg_risk)
     return jnp.any(at_risk & nonempty[:, None], axis=0)
+
+
+# Batched (sweep) oracles: the engine's CPU/interpret data-plane path and the
+# parity reference for the batch-grid Pallas kernels.  V is shared across the
+# batch; everything else carries a leading instance axis B.
+
+threshold_ranges_batch_ref = jax.jit(
+    jax.vmap(threshold_ranges_ref, in_axes=(None, 0, 0)))
+
+uncertain_mask_batch_ref = jax.jit(
+    jax.vmap(uncertain_mask_ref, in_axes=(None, 0, 0, 0, 0, 0)))

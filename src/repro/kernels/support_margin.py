@@ -100,6 +100,75 @@ def threshold_ranges(
     return lo, hi
 
 
+def _ranges_kernel_batched(v_ref, x_ref, y_ref, lo_ref, hi_ref, acc_lo, acc_hi,
+                           *, num_n_blocks: int):
+    """Batched variant: grid (B, nm, nn); the batch axis indexes independent
+    protocol instances (each with its own transcript) while V is shared."""
+    ni = pl.program_id(2)
+
+    @pl.when(ni == 0)
+    def _init():
+        acc_lo[...] = jnp.full_like(acc_lo, -BIG)
+        acc_hi[...] = jnp.full_like(acc_hi, BIG)
+
+    V = v_ref[...].astype(jnp.float32)           # (bm, d) — shared across B
+    X = x_ref[0].astype(jnp.float32)             # (bn, d) — this instance
+    y = y_ref[0].astype(jnp.float32)             # (bn,) ±1, 0 = padding
+    proj = V @ X.T                               # (bm, bn) — MXU
+    pos = (y == 1.0)[None, :]
+    neg = (y == -1.0)[None, :]
+    acc_lo[...] = jnp.maximum(acc_lo[...], jnp.where(pos, proj, -BIG).max(axis=1))
+    acc_hi[...] = jnp.minimum(acc_hi[...], jnp.where(neg, proj, BIG).min(axis=1))
+
+    @pl.when(ni == num_n_blocks - 1)
+    def _emit():
+        lo_ref[0] = acc_lo[...]
+        hi_ref[0] = acc_hi[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def threshold_ranges_batched(
+    V: jnp.ndarray,                # (m, d) directions, shared over the batch
+    Xw: jnp.ndarray,               # (B, n, d) per-instance transcript points
+    yw: jnp.ndarray,               # (B, n) ±1 (0 = padding row)
+    *,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(lo, hi) consistent-threshold ranges for a whole sweep batch in one
+    pallas_call with a leading batch-grid dimension.  Returns (B, m) each."""
+    m, d = V.shape
+    B, n = Xw.shape[0], Xw.shape[1]
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    assert m % block_m == 0 and n % block_n == 0, (m, block_m, n, block_n)
+    nm, nn = m // block_m, n // block_n
+
+    kernel = functools.partial(_ranges_kernel_batched, num_n_blocks=nn)
+    lo, hi = pl.pallas_call(
+        kernel,
+        grid=(B, nm, nn),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda b, i, j: (i, 0)),
+            pl.BlockSpec((1, block_n, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_n), lambda b, i, j: (b, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_m), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, block_m), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, m), jnp.float32),
+            jax.ShapeDtypeStruct((B, m), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_m,), jnp.float32),
+                        pltpu.VMEM((block_m,), jnp.float32)],
+        interpret=interpret,
+    )(V, Xw, yw)
+    return lo, hi
+
+
 def _uncertain_kernel(x_ref, y_ref, v_ref, ok_ref, lo_ref, hi_ref, out_ref,
                       acc_ref, *, num_m_blocks: int):
     mi = pl.program_id(1)
@@ -163,6 +232,77 @@ def uncertain_mask(
         ],
         out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_n,), jnp.float32)],
+        interpret=interpret,
+    )(X, y, V, dir_ok, lo, hi)
+    return out
+
+
+def _uncertain_kernel_batched(x_ref, y_ref, v_ref, ok_ref, lo_ref, hi_ref,
+                              out_ref, acc_ref, *, num_m_blocks: int):
+    """Batched variant: grid (B, nn, nm); per-instance dir_ok/lo/hi masks."""
+    mi = pl.program_id(2)
+
+    @pl.when(mi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    X = x_ref[0].astype(jnp.float32)             # (bn, d)
+    y = y_ref[0].astype(jnp.float32)             # (bn,)
+    V = v_ref[...].astype(jnp.float32)           # (bm, d) — shared across B
+    lo = lo_ref[0]                               # (bm,)
+    hi = hi_ref[0]
+    ok = ok_ref[0]                               # (bm,) 1.0/0.0
+
+    proj = V @ X.T                               # (bm, bn) — MXU
+    nonempty = (lo < hi) & (ok != 0.0)           # (bm,)
+    pos_risk = proj > lo[:, None]
+    neg_risk = proj < hi[:, None]
+    at_risk = jnp.where((y == 1.0)[None, :], pos_risk, neg_risk)
+    hit = jnp.any(at_risk & nonempty[:, None], axis=0)  # (bn,)
+    acc_ref[...] = jnp.maximum(acc_ref[...], hit.astype(jnp.float32))
+
+    @pl.when(mi == num_m_blocks - 1)
+    def _emit():
+        out_ref[0] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def uncertain_mask_batched(
+    V: jnp.ndarray,                # (m, d), shared over the batch
+    dir_ok: jnp.ndarray,           # (B, m) float 1.0/0.0 — per instance
+    lo: jnp.ndarray,               # (B, m)
+    hi: jnp.ndarray,               # (B, m)
+    X: jnp.ndarray,                # (B, n, d)
+    y: jnp.ndarray,                # (B, n) ±1 (0 = padding row)
+    *,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """SOU membership for a whole sweep batch in one pallas_call; returns
+    (B, n) float 1.0/0.0 (caller thresholds)."""
+    m, d = V.shape
+    B, n = X.shape[0], X.shape[1]
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    assert m % block_m == 0 and n % block_n == 0, (m, block_m, n, block_n)
+    nm, nn = m // block_m, n // block_n
+
+    kernel = functools.partial(_uncertain_kernel_batched, num_m_blocks=nm)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nn, nm),
+        in_specs=[
+            pl.BlockSpec((1, block_n, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_n), lambda b, i, j: (b, i)),
+            pl.BlockSpec((block_m, d), lambda b, i, j: (j, 0)),
+            pl.BlockSpec((1, block_m), lambda b, i, j: (b, j)),
+            pl.BlockSpec((1, block_m), lambda b, i, j: (b, j)),
+            pl.BlockSpec((1, block_m), lambda b, i, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda b, i, j: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_n,), jnp.float32)],
         interpret=interpret,
     )(X, y, V, dir_ok, lo, hi)

@@ -1,9 +1,24 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the single real CPU device; only launch/dryrun.py forces 512 placeholders.
+
+Property-based test modules need ``hypothesis`` (the ``dev`` extra in
+pyproject.toml).  When it is absent the modules are skipped at collection
+instead of erroring the whole run.
 """
+
+import importlib.util
 
 import numpy as np
 import pytest
+
+if importlib.util.find_spec("hypothesis") is None:
+    collect_ignore = [
+        "test_classifiers.py",
+        "test_geometry.py",
+        "test_protocol_properties.py",
+        "test_protocols_oneway.py",
+        "test_sampling.py",
+    ]
 
 
 @pytest.fixture(scope="session")

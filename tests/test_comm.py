@@ -56,3 +56,66 @@ def test_rounds_counter():
     log.new_round()
     log.new_round()
     assert log.stats.rounds == 2
+
+
+def test_message_nbytes_hand_computed():
+    from repro.core.comm import Message
+    m = Message("A", "B", points=7, scalars=3, bits=11)
+    for dim in (1, 2, 10):
+        # 7 points of (dim + label) float32s, 3 float32 scalars, 11 bits -> 2B
+        assert m.nbytes(dim) == 7 * (dim + 1) * 4 + 3 * 4 + 2
+
+
+def test_commstats_nbytes_matches_message_sum():
+    nodes, log = make_nodes(_shards(d=2))
+    a, b = nodes
+    a.send_points(b, a.X[:5], a.y[:5])
+    b.send_scalars(a, np.zeros(4))
+    a.send_bit(b, 1)
+    b.send_bit(a, 0)
+    s = log.stats
+    # 5 points of (2 dims + label) float32s + 4 scalars + 2 bits -> 1 byte
+    assert s.nbytes(2) == 5 * (2 + 1) * 4 + 4 * 4 + 1
+    # aggregate packs bits across messages; per-message rounding can only add
+    assert sum(m.nbytes(2) for m in log.messages) >= s.nbytes(2)
+
+
+def test_empty_message_nbytes_zero_but_counted():
+    """Node.send_points with an empty payload: one message-slot, zero points,
+    zero wire bytes."""
+    nodes, log = make_nodes(_shards())
+    a, b = nodes
+    a.send_points(b, np.zeros((0, 2)), np.zeros((0,), np.int32), tag="empty")
+    assert log.stats.messages == 1
+    assert log.messages[0].points == 0
+    assert log.messages[0].nbytes(2) == 0
+    assert log.summary()["bytes"] == 0
+    assert b.recv_X.shape == (0, 2)
+
+
+def test_batchcommlog_b1_matches_commlog():
+    """Replaying identical traffic into a B=1 BatchCommLog must lower to the
+    exact CommLog.summary() dict (the metered-channel invariant survives
+    vectorization)."""
+    import jax.numpy as jnp
+
+    from repro.engine.state import BatchCommLog
+
+    nodes, log = make_nodes(_shards(d=2))
+    a, b = nodes
+    log.new_round()
+    a.send_points(b, a.X[:2], a.y[:2], tag="support")
+    a.send_scalars(b, np.zeros(4), tag="direction")
+    log.new_round()
+    b.send_points(a, b.X[:1], b.y[:1], tag="extremes")
+    b.send_bit(a, 1, tag="accept")
+
+    batch = BatchCommLog.zeros(1)
+    batch = batch._replace(
+        points=batch.points + jnp.asarray([2 + 1]),
+        scalars=batch.scalars + jnp.asarray([4]),
+        bits=batch.bits + jnp.asarray([1]),
+        messages=batch.messages + jnp.asarray([4]),
+        rounds=batch.rounds + jnp.asarray([2]),
+    )
+    assert batch.summary(0, dim=2) == log.summary()

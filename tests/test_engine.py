@@ -1,0 +1,180 @@
+"""Batched protocol engine: B=1 parity, sweep parity, padding invariance.
+
+The acceptance bar: a batched sweep of ≥ 32 MEDIAN/kparty instances (varying
+ε and seed) must produce, for every instance, the same converged flag, global
+error ≤ ε, and identical comm totals as the per-instance path.
+"""
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import datasets
+from repro.core.protocols import kparty, two_way
+
+from conftest import global_err
+
+N_ANGLES = 512
+MAX_EPOCHS = 32
+
+
+def _sweep_instances():
+    """36 instances: dataset × ε × seed, k=2."""
+    out = []
+    for gen in (datasets.data1, datasets.data2, datasets.data3):
+        for eps in (0.2, 0.1, 0.05, 0.025):
+            for seed in (0, 1, 2):
+                shards = gen(n_per_node=100, k=2, seed=seed)
+                out.append(engine.ProtocolInstance(shards, eps))
+    return out
+
+
+def test_batched_sweep_matches_per_instance_path():
+    insts = _sweep_instances()
+    assert len(insts) >= 32
+    batched = engine.run_instances(insts, n_angles=N_ANGLES,
+                                   max_epochs=MAX_EPOCHS)
+    for inst, rb in zip(insts, batched):
+        rs = kparty.iterative_support_kparty(
+            inst.shards, eps=inst.eps, max_epochs=MAX_EPOCHS,
+            n_angles=N_ANGLES, selector="median")
+        assert rb.converged == rs.converged
+        assert rb.converged, f"instance eps={inst.eps} did not converge"
+        assert rb.comm == rs.comm, (inst.eps, rb.comm, rs.comm)
+        assert rb.rounds == rs.rounds
+        assert global_err(rb.classifier, inst.shards) <= inst.eps
+        np.testing.assert_allclose(rb.classifier.w, rs.classifier.w)
+        assert rb.classifier.b == rs.classifier.b
+
+
+def test_kparty_batch_matches_per_instance_path():
+    insts = [engine.ProtocolInstance(
+                 datasets.data3(n_per_node=75, k=4, seed=s), eps)
+             for s in (0, 1) for eps in (0.1, 0.05)]
+    batched = engine.run_instances(insts, n_angles=N_ANGLES,
+                                   max_epochs=MAX_EPOCHS)
+    for inst, rb in zip(insts, batched):
+        rs = kparty.iterative_support_kparty(
+            inst.shards, eps=inst.eps, max_epochs=MAX_EPOCHS,
+            n_angles=N_ANGLES, selector="median")
+        assert rb.converged == rs.converged and rb.converged
+        assert rb.comm == rs.comm
+        assert global_err(rb.classifier, inst.shards) <= inst.eps
+
+
+def test_padding_invariance():
+    """An instance's outcome must not depend on its batch neighbours: ragged
+    shard sizes are padded with label-0 rows, which every masked reduction
+    ignores."""
+    small = engine.ProtocolInstance(
+        datasets.data1(n_per_node=60, k=2, seed=3), 0.05)
+    big = engine.ProtocolInstance(
+        datasets.data3(n_per_node=200, k=2, seed=4), 0.05)
+    alone = engine.run_instances([small], n_angles=N_ANGLES,
+                                 max_epochs=MAX_EPOCHS)[0]
+    padded = engine.run_instances([small, big], n_angles=N_ANGLES,
+                                  max_epochs=MAX_EPOCHS)[0]
+    assert alone.comm == padded.comm
+    assert alone.converged == padded.converged
+    assert alone.rounds == padded.rounds
+    np.testing.assert_array_equal(alone.classifier.w, padded.classifier.w)
+
+
+def test_public_api_runs_on_engine():
+    shards = datasets.data2(n_per_node=100, k=2, seed=0)
+    r = two_way.iterative_support_median(shards, eps=0.05)
+    assert r.extra and r.extra.get("engine") and r.extra["batch"] == 1
+    assert r.converged
+    assert global_err(r.classifier, shards) <= 0.05
+
+
+def test_eps_shrinks_uncertainty_not_comm_explosion():
+    """Thm 5.1 shape through the engine: halving ε repeatedly adds only
+    O(1) epochs per halving."""
+    shards = datasets.data3(n_per_node=200, k=2, seed=1)
+    insts = [engine.ProtocolInstance(shards, eps)
+             for eps in (0.2, 0.1, 0.05, 0.025)]
+    rs = engine.run_instances(insts, n_angles=N_ANGLES, max_epochs=MAX_EPOCHS)
+    rounds = [r.rounds for r in rs]
+    assert all(r.converged for r in rs)
+    assert rounds[-1] <= rounds[0] + 8
+
+
+def test_transcript_capacity_never_overflows():
+    """The static capacity bound must hold for the worst observed fill."""
+    insts = _sweep_instances()[:8]
+    data, state0, k, cap = engine.pack_instances(
+        insts, n_angles=N_ANGLES, max_epochs=MAX_EPOCHS)
+    import jax.numpy as jnp
+    from repro.core import geometry as geo
+    V = jnp.asarray(geo.direction_grid(N_ANGLES), jnp.float32)
+    final = engine.run_compiled(data, V, state0, k=k,
+                                max_turns=k * MAX_EPOCHS)
+    assert int(np.max(np.asarray(final.w_fill))) <= cap - 2
+
+
+def test_first_turn_constant_fold_is_exact():
+    """The hoisted first turn (median-cut scan folded to index 0) must
+    produce a state identical to the general step on the fresh state."""
+    import jax.numpy as jnp
+    from repro.core import geometry as geo
+    from repro.engine import median as M
+
+    insts = _sweep_instances()[:5]
+    data, state0, k, _ = engine.pack_instances(
+        insts, n_angles=N_ANGLES, max_epochs=MAX_EPOCHS)
+    V = jnp.asarray(geo.direction_grid(N_ANGLES), jnp.float32)
+    s_fold = M.step(data, V, state0, k=k, first_turn=True)
+    s_full = M.step(data, V, state0, k=k, first_turn=False)
+    for name, a, b in zip(s_fold._fields, s_fold, s_full):
+        a_leaves = a if not hasattr(a, "_fields") else list(a)
+        b_leaves = b if not hasattr(b, "_fields") else list(b)
+        if hasattr(a, "_fields"):
+            for fa, fb in zip(a_leaves, b_leaves):
+                np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+        else:
+            np.testing.assert_array_equal(np.asarray(a_leaves),
+                                          np.asarray(b_leaves), err_msg=name)
+
+
+def test_incremental_ranges_match_kernel_rescan():
+    """The running per-node (lo, hi) maintained at append time must match a
+    full threshold_ranges rescan of the final transcript buffers — through
+    both the jitted-JAX reference and the batch-grid Pallas kernel.  The
+    tolerance is 1 f32 ulp: the incremental path projects via a broadcast
+    multiply-add while the kernels use a d-contraction dot, which XLA may
+    fuse (FMA) differently."""
+    insts = _sweep_instances()[:6]
+    data, state0, k, _ = engine.pack_instances(
+        insts, n_angles=64, max_epochs=MAX_EPOCHS)
+    import jax.numpy as jnp
+    from repro.core import geometry as geo
+    V = jnp.asarray(geo.direction_grid(64), jnp.float32)
+    final = engine.run_compiled(data, V, state0, k=k,
+                                max_turns=k * MAX_EPOCHS)
+    for j in range(k):
+        for use_pallas in (False, True):
+            lo, hi = engine.dataplane.ranges(
+                V, final.wx[:, j], final.wy[:, j], use_pallas=use_pallas)
+            for got, want in ((lo, final.lo_w[:, j]), (hi, final.hi_w[:, j])):
+                got, want = np.asarray(got), np.asarray(want)
+                fin = np.isfinite(want)
+                np.testing.assert_array_equal(np.isfinite(got), fin)
+                np.testing.assert_allclose(got[fin], want[fin], rtol=1e-6)
+
+
+def test_sou_helper_padding_rows_inert():
+    insts = _sweep_instances()[:4]
+    data, state0, k, _ = engine.pack_instances(
+        insts, n_angles=N_ANGLES, max_epochs=MAX_EPOCHS)
+    import jax.numpy as jnp
+    from repro.core import geometry as geo
+    V = jnp.asarray(geo.direction_grid(N_ANGLES), jnp.float32)
+    lo, hi = engine.dataplane.ranges(
+        V, state0.wx[:, 0], state0.wy[:, 0], use_pallas=False)
+    mask = engine.dataplane.uncertain(
+        V, state0.dir_ok, lo, hi, data.X[:, 0], data.y[:, 0],
+        use_pallas=False)
+    # empty transcript: every real point uncertain, every padding row not
+    np.testing.assert_array_equal(np.asarray(mask),
+                                  np.asarray(data.y[:, 0] != 0))

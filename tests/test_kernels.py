@@ -165,6 +165,47 @@ def test_support_margin_one_class_only():
     assert float(hi[0]) >= 1e29
 
 
+@pytest.mark.parametrize("B,m,n,d", [(1, 64, 256, 2), (4, 100, 333, 2),
+                                     (8, 256, 512, 2), (3, 7, 13, 3)])
+def test_support_margin_batched_vs_refs(B, m, n, d):
+    """Batch-grid kernels against the jitted vmap oracles, including label-0
+    padding rows (the ragged-shard convention)."""
+    ks = jax.random.split(jax.random.PRNGKey(B * m + n), 4)
+    V = jax.random.normal(ks[0], (m, d))
+    V = V / jnp.linalg.norm(V, axis=1, keepdims=True)
+    Xw = jax.random.normal(ks[1], (B, n, d))
+    yw = jnp.where(jax.random.bernoulli(ks[2], 0.5, (B, n)), 1, -1)
+    yw = yw * jax.random.bernoulli(ks[3], 0.8, (B, n))   # some label-0 pads
+    X = jax.random.normal(ks[3], (B, n, d))
+    ok = jax.random.bernoulli(ks[2], 0.8, (B, m))
+
+    lo, hi = ops.support_ranges_batch(V, Xw, yw, interpret=True)
+    loe, hie = ref.threshold_ranges_batch_ref(V, Xw, yw)
+    fin = np.isfinite(np.asarray(loe))
+    np.testing.assert_allclose(np.asarray(lo)[fin], np.asarray(loe)[fin],
+                               rtol=1e-5)
+    fin = np.isfinite(np.asarray(hie))
+    np.testing.assert_allclose(np.asarray(hi)[fin], np.asarray(hie)[fin],
+                               rtol=1e-5)
+    mask = ops.support_uncertain_batch(V, ok, lo, hi, X, yw, interpret=True)
+    maske = ref.uncertain_mask_batch_ref(V, ok, loe, hie, X, yw)
+    assert bool(jnp.all(mask == maske))
+
+
+def test_support_margin_batched_matches_per_instance():
+    """Each batch slice must equal the single-instance kernel's output."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    B, m, n = 5, 64, 128
+    V = jax.random.normal(ks[0], (m, 2))
+    Xw = jax.random.normal(ks[1], (B, n, 2))
+    yw = jnp.where(jax.random.bernoulli(ks[2], 0.5, (B, n)), 1, -1)
+    lo_b, hi_b = ops.support_ranges_batch(V, Xw, yw, interpret=True)
+    for b in range(B):
+        lo1, hi1 = ops.support_ranges(V, Xw[b], yw[b], interpret=True)
+        np.testing.assert_array_equal(np.asarray(lo_b[b]), np.asarray(lo1))
+        np.testing.assert_array_equal(np.asarray(hi_b[b]), np.asarray(hi1))
+
+
 def test_geometry_consistency_with_kernel():
     """geometry.consistent_threshold_ranges (XLA path) == Pallas path."""
     from repro.core import geometry as geo

@@ -1,0 +1,80 @@
+"""Vectorized Reservoir.add_batch: inclusion probabilities and invariants.
+
+Kept hypothesis-free so it runs even when the ``dev`` extra is absent (the
+property-based reservoir tests live in test_sampling.py)."""
+
+import numpy as np
+
+from repro.core import sampling
+
+
+def test_add_batch_size_and_membership():
+    rng = np.random.default_rng(0)
+    res = sampling.Reservoir(16, dim=2, rng=rng)
+    X = rng.normal(size=(200, 2))
+    y = np.where(rng.random(200) < 0.5, 1, -1)
+    res.add_batch(X, y)
+    RX, Ry = res.sample()
+    assert RX.shape == (16, 2) and res.seen == 200
+    for r in RX:
+        assert np.any(np.all(np.isclose(X, r), axis=1))
+
+
+def test_add_batch_fill_phase_exact():
+    res = sampling.Reservoir(8, dim=1)
+    X = np.arange(5, dtype=float).reshape(-1, 1)
+    res.add_batch(X, np.ones(5, np.int32))
+    RX, _ = res.sample()
+    np.testing.assert_array_equal(RX, X)  # under capacity: verbatim, in order
+
+
+def test_add_batch_across_multiple_shards():
+    """Chained add_batch calls continue the same stream (the k-party chain
+    protocol's use): global positions keep counting across calls."""
+    rng = np.random.default_rng(3)
+    res = sampling.Reservoir(10, dim=1, rng=rng)
+    for c in range(4):
+        X = np.full((50, 1), float(c))
+        res.add_batch(X, np.ones(50, np.int32))
+    assert res.seen == 200
+    RX, _ = res.sample()
+    assert RX.shape[0] == 10
+
+
+def test_add_batch_uniform_inclusion():
+    """Each of n items must land in a k-slot reservoir with probability
+    ~ k/n (Vitter's invariant), same as the sequential sampler."""
+    n, k, trials = 40, 8, 1500
+    counts = np.zeros(n)
+    for t in range(trials):
+        rng = np.random.default_rng(t)
+        res = sampling.Reservoir(k, dim=1, rng=rng)
+        X = np.arange(n, dtype=float).reshape(-1, 1)
+        res.add_batch(X, np.ones(n, np.int32))
+        RX, _ = res.sample()
+        counts[RX.reshape(-1).astype(int)] += 1
+    freq = counts / trials
+    assert np.all(np.abs(freq - k / n) < 0.05)
+
+
+def test_add_batch_matches_sequential_distribution():
+    """Batched and sequential ingestion draw from the same distribution:
+    compare per-item inclusion frequencies."""
+    n, k, trials = 30, 6, 1200
+    freq = {}
+    for mode in ("seq", "batch"):
+        counts = np.zeros(n)
+        for t in range(trials):
+            rng = np.random.default_rng(10_000 + t)
+            res = sampling.Reservoir(k, dim=1, rng=rng)
+            X = np.arange(n, dtype=float).reshape(-1, 1)
+            y = np.ones(n, np.int32)
+            if mode == "seq":
+                for i in range(n):
+                    res.add(X[i], 1)
+            else:
+                res.add_batch(X, y)
+            RX, _ = res.sample()
+            counts[RX.reshape(-1).astype(int)] += 1
+        freq[mode] = counts / trials
+    assert np.all(np.abs(freq["seq"] - freq["batch"]) < 0.06)
