@@ -1,0 +1,96 @@
+"""Schema gate for the BENCH_*.json artifacts (CI bench-smoke job).
+
+The sweep benchmarks are the repo's perf acceptance record; downstream
+tooling (and the next PR's reviewer) reads the JSON, so its shape is a
+contract.  This validator checks required keys, types, and the invariants
+the engine guarantees at any size (parity flags true, disagreement lists
+empty, every instance converged within its ε) — it does NOT gate on
+wall-clock numbers, which the tiny CI sizes make meaningless.
+
+Usage:  python benchmarks/check_bench_schema.py BENCH_engine.json ...
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+_NUM = (int, float)
+
+# field -> required type(s); shared by BENCH_engine.json / BENCH_maxmarg.json
+COMMON_SCHEMA = {
+    "notes": str,
+    "instances": int,
+    "max_epochs": int,
+    "sequential_s": _NUM,
+    "batched_s": _NUM,
+    "speedup": _NUM,
+    "engine_b1_loop_s": _NUM,
+    "speedup_vs_engine_b1": _NUM,
+    "parity_b1_ok": bool,
+    "parity_b1_mismatch_indices": list,
+    "legacy_oracle_disagreements": list,
+    "all_converged": bool,
+    "all_err_within_eps": bool,
+    "per_instance": list,
+}
+
+PER_INSTANCE_SCHEMA = {
+    "eps": _NUM,
+    "converged": bool,
+    "rounds": int,
+    "points": int,
+    "global_err": _NUM,
+    "err_within_eps": bool,
+    "parity_b1": bool,
+}
+
+
+def check(path: str) -> list:
+    with open(path) as f:
+        report = json.load(f)
+    errors = []
+
+    def expect(obj, field, typ, where):
+        if field not in obj:
+            errors.append(f"{where}: missing key {field!r}")
+        elif not isinstance(obj[field], typ):
+            errors.append(f"{where}: {field!r} has type "
+                          f"{type(obj[field]).__name__}, wanted {typ}")
+
+    for field, typ in COMMON_SCHEMA.items():
+        expect(report, field, typ, path)
+    for i, inst in enumerate(report.get("per_instance", [])):
+        for field, typ in PER_INSTANCE_SCHEMA.items():
+            expect(inst, field, typ, f"{path}[per_instance][{i}]")
+
+    # size-independent invariants
+    if report.get("per_instance") is not None and \
+            len(report["per_instance"]) != report.get("instances"):
+        errors.append(f"{path}: per_instance length != instances")
+    for flag in ("parity_b1_ok", "all_converged", "all_err_within_eps"):
+        if report.get(flag) is not True:
+            errors.append(f"{path}: {flag} is not true")
+    for lst in ("parity_b1_mismatch_indices", "legacy_oracle_disagreements"):
+        if report.get(lst):
+            errors.append(f"{path}: {lst} is non-empty: {report[lst]}")
+    return errors
+
+
+def main(paths) -> int:
+    all_errors = []
+    for path in paths:
+        errs = check(path)
+        status = "OK" if not errs else f"{len(errs)} problem(s)"
+        print(f"{path}: {status}")
+        all_errors += errs
+    for e in all_errors:
+        print(f"  !! {e}")
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) < 2:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1:]))

@@ -1,17 +1,22 @@
-"""Batched engine vs sequential per-instance sweeps (BENCH_engine.json).
+"""Batched engine MAXMARG vs the retired host loop (BENCH_maxmarg.json).
 
-The paper's experiment grids are sweeps of independent protocol instances;
-the engine runs a whole sweep as one compiled dispatch.  This benchmark runs
-the same ≥32-instance grid (dataset × ε × seed, two-party MEDIAN) both ways:
+Counterpart of ``engine_sweep.py`` for the second compiled selector: the
+same ≥12-instance paper-style grid (dataset × ε × seed, two-party MAXMARG)
+runs three ways:
 
-  sequential  the public per-instance API in a Python loop — one engine
-              dispatch per instance (B=1), the pre-batching execution model;
-  batched     one ``repro.engine`` sweep with B = #instances.
+  sequential  the pre-engine execution model — a host-side Python round
+              loop with one ``fit_max_margin`` device call per turn
+              (benchmarks/legacy_maxmarg.py);
+  engine B=1  the public per-instance API (engine at B=1) in a Python loop;
+  batched     one ``repro.engine.maxmarg`` sweep, every per-turn hard-margin
+              refit one vmapped Pegasos dispatch for the whole batch.
 
-It asserts exact parity (converged flags + comm totals) between the batched
-sweep and the engine's B=1 path, cross-checks the legacy float64 host loop
-as a differential oracle, and records wall-clocks to BENCH_engine.json at
-the repo root.
+It asserts exact parity (converged flags + comm totals + rounds) between
+the batched sweep and the engine's B=1 path, cross-checks the legacy host
+loop as a differential oracle, and records wall-clocks to BENCH_maxmarg.json
+at the repo root.  ``--tiny`` shrinks the grid for the CI smoke job and
+writes BENCH_maxmarg.tiny.json instead, so a smoke run can never clobber
+the committed full-size acceptance record.
 """
 
 from __future__ import annotations
@@ -31,31 +36,38 @@ from repro import engine
 from repro.core import datasets
 from repro.core.protocols import kparty
 
-from benchmarks.legacy_median import kparty_median_hostloop
+from benchmarks.legacy_maxmarg import kparty_maxmarg_hostloop
 
-N_ANGLES = 1024
-MAX_EPOCHS = 32
+# MAXMARG converges in 1-4 epochs on every paper grid; a tight epoch bound
+# keeps the engine's static transcript capacity (and with it the padded
+# per-turn refit width n_max + cap) proportionate.  The sweep regime is the
+# engine's target: many small-to-mid instances, where the host loop's
+# per-instance fit dispatches dominate (BENCH notes).
+MAX_EPOCHS = 8
+MAX_SUPPORT = 4   # pinned and passed to all three execution models below
 OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                   "BENCH_engine.json")
+                   "BENCH_maxmarg.json")
 
 
-def build_instances(n_per_node: int = 1000,
+def build_instances(n_per_node: int = 128,
                     seeds=(0, 1, 2)) -> List[engine.ProtocolInstance]:
-    """Two-party MEDIAN instances: 3 datasets × 4 ε × seeds."""
+    """Two-party MAXMARG grid: 3 datasets × 3 ε × seeds (≥12 instances)."""
     insts = []
     for gen in (datasets.data1, datasets.data2, datasets.data3):
-        for eps in (0.2, 0.1, 0.05, 0.025):
+        for eps in (0.05, 0.02, 0.01):
             for seed in seeds:
                 insts.append(engine.ProtocolInstance(
-                    gen(n_per_node=n_per_node, k=2, seed=seed), eps))
+                    gen(n_per_node=n_per_node, k=2, seed=seed), eps,
+                    "maxmarg"))
     return insts
 
 
 def _run_hostloop(insts):
     """The sequential loop the engine replaced: one host-side Python round
-    loop per instance, a device round-trip per round."""
-    return [kparty_median_hostloop(inst.shards, eps=inst.eps,
-                                   max_epochs=MAX_EPOCHS, n_angles=N_ANGLES)
+    loop per instance, one solver dispatch per round."""
+    return [kparty_maxmarg_hostloop(inst.shards, eps=inst.eps,
+                                    max_epochs=MAX_EPOCHS,
+                                    max_support=MAX_SUPPORT)
             for inst in insts]
 
 
@@ -63,26 +75,29 @@ def _run_engine_b1(insts):
     """Per-instance public API (engine with B=1), in a Python loop."""
     return [kparty.iterative_support_kparty(
                 inst.shards, eps=inst.eps, max_epochs=MAX_EPOCHS,
-                n_angles=N_ANGLES, selector="median")
+                selector="maxmarg", max_support=MAX_SUPPORT)
             for inst in insts]
 
 
 def _run_batched(insts):
-    return engine.run_instances(insts, n_angles=N_ANGLES,
-                                max_epochs=MAX_EPOCHS)
+    return engine.maxmarg.run_instances(insts, max_epochs=MAX_EPOCHS,
+                                        max_support=MAX_SUPPORT)
 
 
 def main(tiny: bool = False) -> List[str]:
-    insts = build_instances(n_per_node=50, seeds=(0,)) if tiny \
+    insts = build_instances(n_per_node=40, seeds=(0,)) if tiny \
         else build_instances()
     B = len(insts)
 
-    # warm up both engine program shapes (full B and B=1) so the steady-state
-    # sweep cost is measured, then time everything (median of repeats).
+    # warm up both engine program shapes (full B and B=1) and the host
+    # loop's solver cache, then time everything (median of repeats).
     _run_batched(insts)
     _run_engine_b1(insts[:1])
+    _run_hostloop(insts[:1])
 
-    def timed(fn, repeats=1 if tiny else 3):
+    repeats = 1 if tiny else 3
+
+    def timed(fn):
         times = []
         for _ in range(repeats):
             t0 = time.time()
@@ -95,7 +110,7 @@ def main(tiny: bool = False) -> List[str]:
     bat, t_bat = timed(_run_batched)
 
     mismatches = []          # engine batched vs engine B=1 — must be exact
-    legacy_disagree = []     # float64 host loop — differential oracle
+    legacy_disagree = []     # retired host loop — differential oracle
     per_instance = []
     for i, (inst, rs, r1, rb) in enumerate(zip(insts, seq, b1, bat)):
         X = np.concatenate([s[0] for s in inst.shards])
@@ -105,14 +120,15 @@ def main(tiny: bool = False) -> List[str]:
               and r1.rounds == rb.rounds)
         if not ok:
             mismatches.append(i)
-        if not (rs.converged == rb.converged
-                and rs.comm["points"] == rb.comm["points"]):
+        if not (rs.converged == rb.converged and rs.comm == rb.comm
+                and rs.rounds == rb.rounds):
             legacy_disagree.append(i)
         per_instance.append({
             "eps": inst.eps,
             "converged": bool(rb.converged),
             "rounds": rb.rounds,
             "points": rb.comm["points"],
+            "bytes": rb.comm["bytes"],
             "global_err": err,
             "err_within_eps": bool(err <= inst.eps),
             "parity_b1": ok,
@@ -121,19 +137,21 @@ def main(tiny: bool = False) -> List[str]:
     speedup = t_seq / max(t_bat, 1e-9)
     report = {
         "notes": (
-            "sequential_s = the pre-engine per-instance execution model "
-            "(host-side Python round loop, device round-trip per round; "
-            "benchmarks/legacy_median.py).  batched_s = one repro.engine "
-            "dispatch for the whole sweep.  engine_b1_loop_s = the public "
-            "per-instance API (engine at B=1) in a Python loop — itself "
-            "compiled end-to-end, so on a CPU-only host it already captures "
-            "most of the engine win; the batch axis pays off where per-"
-            "dispatch overhead dominates (accelerators, many small "
-            "instances).  Timings are medians of repeats on a warm cache."),
+            "sequential_s = the retired per-instance execution model for the "
+            "MAXMARG selector (host-side Python round loop, one "
+            "fit_max_margin dispatch per turn; benchmarks/legacy_maxmarg.py)."
+            "  batched_s = one repro.engine.maxmarg dispatch for the whole "
+            "sweep: per turn, every instance's hard-margin refit runs as one "
+            "vmapped annealed-Pegasos solve.  engine_b1_loop_s = the public "
+            "per-instance API (engine at B=1) in a Python loop.  "
+            "legacy_oracle_disagreements lists instances where the engine's "
+            "comm totals / rounds / convergence differ from the host loop — "
+            "the acceptance bar is an empty list.  Timings are medians of "
+            "repeats on a warm cache."),
         "instances": B,
         "tiny": tiny,
-        "n_angles": N_ANGLES,
         "max_epochs": MAX_EPOCHS,
+        "max_support": MAX_SUPPORT,
         "sequential_s": round(t_seq, 4),       # legacy host round loop
         "batched_s": round(t_bat, 4),          # one engine dispatch
         "speedup": round(speedup, 2),
@@ -146,20 +164,19 @@ def main(tiny: bool = False) -> List[str]:
         "all_err_within_eps": all(p["err_within_eps"] for p in per_instance),
         "per_instance": per_instance,
     }
-    # --tiny must never clobber the committed full-size acceptance record
     out = OUT.replace(".json", ".tiny.json") if tiny else OUT
     with open(out, "w") as f:
         json.dump(report, f, indent=1)
 
-    print(f"engine sweep: {B} instances  sequential(host loop) {t_seq:.2f}s  "
+    print(f"maxmarg sweep: {B} instances  sequential(host loop) {t_seq:.2f}s  "
           f"batched {t_bat:.2f}s  speedup {speedup:.1f}x  "
           f"B=1-parity={'OK' if not mismatches else mismatches}")
     print(f"(engine B=1 loop {t_b1:.2f}s; legacy-oracle disagreements: "
           f"{legacy_disagree or 'none'})")
     print(f"wrote {out}")
-    return [f"engine_sweep/batched,{t_bat * 1e6 / B:.0f},"
+    return [f"maxmarg_sweep/batched,{t_bat * 1e6 / B:.0f},"
             f"speedup={speedup:.2f};instances={B}",
-            f"engine_sweep/sequential,{t_seq * 1e6 / B:.0f},"
+            f"maxmarg_sweep/sequential,{t_seq * 1e6 / B:.0f},"
             f"parity_b1={'ok' if not mismatches else 'FAIL'}"]
 
 

@@ -5,6 +5,8 @@ Sections:
   comm_scaling    Table 1 rate claims: cost vs ε and vs k
   engine_sweep    batched engine vs sequential per-instance sweeps
                   (writes BENCH_engine.json at the repo root)
+  maxmarg_sweep   batched MAXMARG selector vs the retired host loop
+                  (writes BENCH_maxmarg.json at the repo root)
   lower_bound     Appendix A (Ω(1/ε)) and Appendix B (Ω(|D_A|)) constructions
   kernel_bench    data-plane hot-loop timings
   roofline_table  §Roofline terms from the dry-run artifacts (if present)
@@ -22,7 +24,7 @@ from typing import List
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import comm_scaling, engine_sweep, kernel_bench, lower_bound
-from benchmarks import paper_tables, roofline_table
+from benchmarks import maxmarg_sweep, paper_tables, roofline_table
 
 
 def main() -> None:
@@ -31,6 +33,7 @@ def main() -> None:
         ("paper tables (2/3/4)", paper_tables.main),
         ("communication scaling (Table 1 rates)", comm_scaling.main),
         ("engine sweep (batched vs sequential)", engine_sweep.main),
+        ("maxmarg sweep (batched vs host loop)", maxmarg_sweep.main),
         ("lower bounds (App A/B)", lower_bound.main),
         ("kernel micro-bench", kernel_bench.main),
     ]

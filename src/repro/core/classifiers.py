@@ -178,37 +178,136 @@ def _svm_solve(X: jnp.ndarray, y: jnp.ndarray, lam: jnp.ndarray, steps: int = 20
     return w, b
 
 
+@functools.partial(jax.jit, static_argnames=("steps", "stages"))
+def _svm_solve_batch(
+    X: jnp.ndarray,                # (B, N, d) f32; rows with label 0 are padding
+    y: jnp.ndarray,                # (B, N) f32 in {+1, -1, 0}
+    lam0: jnp.ndarray,             # scalar f32 — stage-0 λ
+    steps: int = 2000,
+    stages: int = 3,
+):
+    """Batched hard-margin-annealed Pegasos: B independent fits in lock-step.
+
+    The λ schedule (λ0, λ0/10, …) runs as one compiled loop over stages
+    (``lax.while_loop`` that exits as soon as *every* instance separates —
+    skipped stages could only have touched latched slots, so the early exit
+    is results-identical); each stage warm-starts from the previous stage's
+    (w, b) instead of re-initializing at zero, so later stages only have to
+    *tighten* an already-separating direction (fewer total steps for the
+    same margin — regression-tested in tests/test_svm_batch.py).  Per
+    instance, the result is latched at the first stage that reaches 0
+    training error (exactly the legacy early-break); instances that never
+    separate keep the last stage's iterate.  Label-0 rows are inert: they
+    contribute no hinge violations and the gradient normalizes by the
+    per-instance *valid* row count.
+
+    Returns ``(w, b, converged)`` with shapes (B, d), (B,), (B,) — already
+    canonicalized to functional margin 1 at the support points (a positive
+    rescale, so every margin-order/sign decision downstream is unaffected by
+    whether canonicalization happened).
+    """
+    B, N, d = X.shape
+    valid = y != 0.0
+    nv = jnp.maximum(jnp.sum(valid, axis=1), 1).astype(X.dtype)  # (B,)
+
+    # the d-contractions are spelled as broadcast multiply-adds: XLA:CPU
+    # lowers the K=d (=2..10) dot through a generic GEMM path that is ~5×
+    # slower than the fused elementwise form, and these two run `steps`
+    # times per stage (cf. the same note on engine/median._proj_grid)
+    def decide(w, b):
+        return sum(X[:, :, i] * w[:, None, i] for i in range(d)) + b[:, None]
+
+    def margins_min(w, b):
+        m = y * decide(w, b)
+        return jnp.min(jnp.where(valid, m, jnp.inf), axis=1)
+
+    def pegasos_stage(w, b, lam):
+        def body(i, carry):
+            w, b = carry
+            eta = 1.0 / (lam * (i + 2.0))                       # (B,)
+            m = y * decide(w, b)
+            viol = ((m < 1.0) & valid).astype(X.dtype)          # (B, N)
+            vy = viol * y
+            gsum = jnp.stack([jnp.sum(vy * X[:, :, i], axis=1)
+                              for i in range(d)], axis=1)       # (B, d)
+            gw = lam[:, None] * w - gsum / nv[:, None]
+            gb = -jnp.sum(vy, axis=1) / nv
+            w = w - eta[:, None] * gw
+            b = b - eta * gb
+            nrm = jnp.sqrt(jnp.sum(w * w, axis=1))
+            scale = jnp.minimum(1.0, (1.0 / jnp.sqrt(lam)) / (nrm + 1e-12))
+            return w * scale[:, None], b * scale
+
+        return jax.lax.fori_loop(0, steps, body, (w, b))
+
+    def stage_cond(carry):
+        s, _w, _b, _wb, _bb, found = carry
+        # once every instance separates, later stages can only touch latched
+        # slots — exit early (identical results, none of the arithmetic)
+        return (s < stages) & ~jnp.all(found)
+
+    def stage(carry):
+        s, w, b, w_best, b_best, found = carry
+        lam_s = lam0 * 0.1 ** s.astype(X.dtype)
+        w, b = pegasos_stage(w, b, jnp.full((B,), lam_s, X.dtype))
+        ok = margins_min(w, b) > 0.0
+        take = ok & ~found
+        w_best = jnp.where(take[:, None], w, w_best)
+        b_best = jnp.where(take, b, b_best)
+        return (s + 1, w, b, w_best, b_best, found | ok)
+
+    zeros_w = jnp.zeros((B, d), X.dtype)
+    zeros_b = jnp.zeros((B,), X.dtype)
+    _, w, b, w_best, b_best, found = jax.lax.while_loop(
+        stage_cond, stage,
+        (jnp.zeros((), jnp.int32), zeros_w, zeros_b, zeros_w, zeros_b,
+         jnp.zeros((B,), bool)))
+    w = jnp.where(found[:, None], w_best, w)
+    b = jnp.where(found, b_best, b)
+
+    # canonicalize: functional margin 1 at the support points
+    mmin = margins_min(w, b)
+    can = found & jnp.isfinite(mmin) & (mmin > 0.0)
+    scale = jnp.where(can, 1.0 / jnp.where(can, mmin, 1.0), 1.0)
+    return w * scale[:, None], b * scale, found
+
+
+def anneal_hard_margin(
+    X: np.ndarray,
+    y: np.ndarray,
+    lam: float = 1e-3,
+    steps: int = 2000,
+    stages: int = 3,
+) -> Tuple[np.ndarray, float, bool]:
+    """Single-instance entry to the warm-started annealed solver (B=1).
+
+    Returns ``(w, b, converged)`` in float64/bool host types.  This *is* the
+    batched engine's per-turn fit at B=1 — the engine's MAXMARG selector and
+    the host API share one solver, so batched-vs-sequential parity is a
+    property of the program, not of tolerances.
+    """
+    Xj = jnp.asarray(np.atleast_2d(X), dtype=jnp.float32)[None]
+    yj = jnp.asarray(y, dtype=jnp.float32)[None]
+    w, b, ok = _svm_solve_batch(Xj, yj, jnp.float32(lam), steps, stages)
+    return (np.asarray(w[0], dtype=np.float64), float(b[0]), bool(ok[0]))
+
+
 def fit_max_margin(
     X: np.ndarray,
     y: np.ndarray,
-    steps: int = 4000,
+    steps: int = 2000,
     lam: float = 1e-3,
     refine: int = 2,
 ) -> LinearSeparator:
     """Approximate hard-margin SVM.
 
     Pegasos with decreasing λ (hard-margin annealing): the paper's protocols
-    need a 0-training-error max-margin separator on separable data.  We solve
-    at successively smaller λ until 0 error, then renormalize so that
-    min margin = 1 (canonical form).
+    need a 0-training-error max-margin separator on separable data.  Stages
+    run warm-started on device (``_svm_solve_batch`` at B=1, ``refine + 1``
+    λ stages) and the first 0-error stage wins; the result is canonicalized
+    so that min functional margin = 1.
     """
-    Xj = jnp.asarray(X, dtype=jnp.float32)
-    yj = jnp.asarray(y, dtype=jnp.float32)
-    best = None
-    cur_lam = lam
-    for _ in range(refine + 1):
-        w, b = _svm_solve(Xj, yj, jnp.float32(cur_lam), steps)
-        m = np.asarray(yj * (Xj @ w + b))
-        best = (np.asarray(w, dtype=np.float64), float(b))
-        if m.min() > 0:
-            break
-        cur_lam /= 10.0
-    w, b = best
-    margins = y * (X @ w + b)
-    mmin = margins.min()
-    if mmin > 0:  # canonicalize: functional margin 1 at the support points
-        w = w / mmin
-        b = b / mmin
+    w, b, _ = anneal_hard_margin(X, y, lam=lam, steps=steps, stages=refine + 1)
     geo = (y * (X @ w + b)).min() / (np.linalg.norm(w) + 1e-30)
     return LinearSeparator(w, float(b), margin=float(geo))
 
@@ -222,7 +321,11 @@ def support_points(
     mmin = max(m.min(), 1e-12)
     idx = np.where(m <= mmin * (1.0 + rtol))[0]
     if len(idx) > max_support:  # keep the tightest ones from each class
-        order = np.argsort(m[idx])
+        # stable: exact margin ties truncate by ascending index, the same
+        # (margin, index) order the batched engine's selection ranks by —
+        # an unstable sort here could make host and engine ship different
+        # tied points and break the exact-parity gates
+        order = np.argsort(m[idx], kind="stable")
         keep = []
         for i in order:
             keep.append(idx[i])

@@ -23,19 +23,17 @@ An ε-early-exit check (1 scalar per node) runs each turn so the protocol can
 also stop at ε-error before exact separation, per §4.3.  Communication per
 turn is O(k) points; an epoch of k turns is O(k²) — Thm 6.3.
 
-The MEDIAN data plane lives in :mod:`repro.engine`: one turn is a pure
+Both selectors' data planes live in :mod:`repro.engine`: one turn is a pure
 jitted ``step(state) -> state`` advanced under ``lax.while_loop``, batched
-over independent instances.  This module is the thin single-instance entry
-point (an engine sweep with B=1); the MAXMARG selector (and d≠2) keeps its
-host-side loop because it needs per-round SVM refits.
+over independent instances — MEDIAN as the certified-pivot direction search,
+MAXMARG as a per-turn batched hard-margin refit
+(:mod:`repro.engine.maxmarg`).  This module is the thin single-instance
+entry point (an engine sweep with B=1).  The retired host round loops
+survive as differential oracles under ``benchmarks/``.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import classifiers as clf
-from repro.core.comm import make_nodes
 from repro.core.protocols.one_way import ProtocolResult
 
 
@@ -45,47 +43,18 @@ def iterative_support_kparty(
     max_epochs: int = 48,
     n_angles: int = 1024,
     selector: str = "median",
+    max_support: int = 4,
 ) -> ProtocolResult:
+    from repro import engine
+
     d = shards[0][0].shape[1]
     if selector == "maxmarg" or d != 2:
-        nodes, log = make_nodes(shards)
-        n_total = sum(nd.n for nd in nodes)
-        budget = int(np.floor(eps * n_total))
-        return _kparty_maxmarg(nodes, log, budget, max_epochs)
+        # MAXMARG works in any dimension; MEDIAN is specified for R^2
+        # (paper §8.2), so d≠2 routes to the MAXMARG selector too.
+        return engine.maxmarg.run_instances(
+            [engine.ProtocolInstance(shards, eps, "maxmarg")],
+            max_epochs=max_epochs, max_support=max_support)[0]
 
-    from repro import engine
     return engine.run_instances(
         [engine.ProtocolInstance(shards, eps)],
         n_angles=n_angles, max_epochs=max_epochs)[0]
-
-
-def _kparty_maxmarg(nodes, log, budget: int, max_epochs: int) -> ProtocolResult:
-    """MAXMARG generalized to k players (the paper's §7 k-party variant):
-    the epoch coordinator fits on everything it knows, broadcasts support
-    points, and the others reply with their own violated support points."""
-    k = len(nodes)
-    h = None
-    for epoch in range(max_epochs):
-        for ci in range(k):
-            log.new_round()
-            coord = nodes[ci]
-            X, y = coord.all_known()
-            h = clf.fit_max_margin(X, y)
-            sidx = clf.support_points(h, X, y, max_support=4)
-            errs = []
-            for nd in nodes:
-                if nd is coord:
-                    errs.append(int(h.error(nd.X, nd.y) * nd.n))
-                    continue
-                coord.send_points(nd, X[sidx], y[sidx], tag="kparty-maxmarg-support")
-                e = int(h.error(nd.X, nd.y) * nd.n)
-                errs.append(e)
-                nd.send_bit(coord, int(e == 0), tag="kparty-maxmarg-ok")
-                if e > 0:
-                    # reply with the most-violated points
-                    m = nd.y * (nd.X @ h.w + h.b)
-                    worst = np.argsort(m)[:2]
-                    nd.send_points(coord, nd.X[worst], nd.y[worst], tag="kparty-maxmarg-viol")
-            if sum(errs) <= budget:
-                return ProtocolResult(h, log.summary(), rounds=epoch + 1, converged=True)
-    return ProtocolResult(h, log.summary(), rounds=max_epochs, converged=False)

@@ -58,50 +58,29 @@ def iterative_support_maxmarg(
     shards,
     eps: float = 0.05,
     max_rounds: int = 64,
-    max_support: int = 6,
+    max_support: int = 4,
 ) -> ProtocolResult:
-    """Paper §4.4 MAXMARG for two parties (symmetric exchange).
+    """Paper §4.4 MAXMARG for two parties.
 
-    Round r: the active node fits max-margin on (own ∪ received) points and
-    ships only the *new* support points.  The peer accepts when the proposal
-    misclassifies ≤ ε·|D| points globally (each node checks its share
-    locally; one confirmation bit flows back).
+    Two-party MAXMARG is the k=2 instance of the k-party support-exchange
+    epoch protocol, which executes on the batched engine
+    (:mod:`repro.engine.maxmarg`) with B=1: each turn one party refits
+    max-margin on everything it knows, ships its active-margin support
+    points, and the peer answers with an all-clear bit or its most-violated
+    points.  ``max_rounds`` counts turns and maps to ``max_rounds // 2``
+    two-turn epochs (floored, min 1 — same convention as
+    ``iterative_support_median``); the result's ``rounds`` field counts
+    epochs, ``comm["rounds"]`` counts turns.  The engine's differential
+    oracle is the k-party host loop in ``benchmarks/legacy_maxmarg.py``;
+    the retired *asymmetric* two-party loop (alternating senders with
+    value-level dedup) is kept there too, for reference only — its
+    dedup-based comm profile differs from this protocol's by design.
     """
-    nodes, log = make_nodes(shards[:2])
-    A, B = nodes
-    n_total = A.n + B.n
-    budget = int(np.floor(eps * n_total))
-
-    sent_ids = {A.name: set(), B.name: set()}
-    h = None
-    for rnd in range(max_rounds):
-        log.new_round()
-        src, dst = (A, B) if rnd % 2 == 0 else (B, A)
-        Xk, yk = src.all_known()
-        h = clf.fit_max_margin(Xk, yk)
-        sidx = clf.support_points(h, Xk, yk, max_support=max_support)
-        # ship only points the peer has not seen from us (dedup by value)
-        new_pts, new_labs = [], []
-        for i in sidx:
-            if i >= src.n:  # a point we received — peer side may already know it
-                key = (round(float(Xk[i, 0]), 9), round(float(Xk[i, 1] if Xk.shape[1] > 1 else 0.0), 9), int(yk[i]))
-            else:
-                key = (int(i), int(yk[i]), "own")
-            if key in sent_ids[src.name]:
-                continue
-            sent_ids[src.name].add(key)
-            new_pts.append(Xk[i])
-            new_labs.append(yk[i])
-        if new_pts:
-            src.send_points(dst, np.stack(new_pts), np.asarray(new_labs, dtype=np.int32),
-                            tag="maxmarg-support")
-        # dst evaluates the proposal on its own shard; src knows its own error.
-        err_src = int(h.error(src.X, src.y) * src.n)
-        err_dst = int(h.error(dst.X, dst.y) * dst.n)
-        dst.send_bit(src, int(err_src + err_dst <= budget), tag="accept")
-        if err_src + err_dst <= budget:
-            return ProtocolResult(h, log.summary(), rounds=rnd + 1, converged=True)
-    return ProtocolResult(h, log.summary(), rounds=max_rounds, converged=False)
+    from repro.core.protocols.kparty import iterative_support_kparty
+    return iterative_support_kparty(shards[:2], eps=eps,
+                                    max_epochs=max(1, max_rounds // 2),
+                                    selector="maxmarg",
+                                    max_support=max_support)
 
 
 # ---------------------------------------------------------------------------

@@ -19,23 +19,75 @@ sequential execution are the same compiled program — parity by construction.
 from repro.engine.state import (
     BatchCommLog,
     EngineData,
+    MaxMargState,
     ProtocolInstance,
     ProtocolState,
+    maxmarg_transcript_capacity,
     pack_instances,
+    pack_instances_maxmarg,
     transcript_capacity,
 )
 from repro.engine.median import run_compiled, run_instances, step
-from repro.engine import dataplane
+from repro.engine import dataplane, maxmarg
+
+
+def run_sweep(instances, **kwargs):
+    """Dispatch a heterogeneous sweep: bucket instances by scenario spec
+    (selector, party count, dimension), run each bucket as one compiled
+    batch, and return results in input order.
+
+    The engine's compiled ``step`` is selector- and shape-monomorphic (k and
+    d are static), so a mixed sweep is *bucketed dispatch*: one engine
+    dispatch per distinct (selector, k, d) — see DESIGN.md §selector
+    abstraction.  Keyword arguments are forwarded to each bucket's runner
+    (a selector ignores options that don't apply to it), but a kwarg no
+    selector in the sweep understands raises — a typo must not silently run
+    with defaults.
+    """
+    _ALLOWED = {
+        "maxmarg": ("eps", "max_epochs", "max_support", "steps", "stages",
+                    "lam"),
+        "median": ("eps", "n_angles", "max_epochs", "cut_kernel"),
+    }
+    buckets = {}
+    for i, inst in enumerate(instances):
+        key = (inst.selector, len(inst.shards), inst.shards[0][0].shape[1])
+        if inst.selector not in _ALLOWED:
+            raise ValueError(f"unknown selector {inst.selector!r}")
+        buckets.setdefault(key, []).append(i)
+    understood = set().union(*(_ALLOWED[sel] for (sel, _k, _d) in buckets))
+    unknown = set(kwargs) - understood
+    if unknown:
+        raise TypeError(f"run_sweep got option(s) {sorted(unknown)} that no "
+                        f"selector in this sweep accepts")
+    out = [None] * len(instances)
+    for (selector, _k, _d), idxs in buckets.items():
+        group = [instances[i] for i in idxs]
+        allowed = _ALLOWED[selector]
+        opts = {a: kwargs[a] for a in allowed if a in kwargs}
+        if selector == "maxmarg":
+            res = maxmarg.run_instances(group, **opts)
+        else:
+            res = run_instances(group, **opts)
+        for i, r in zip(idxs, res):
+            out[i] = r
+    return out
+
 
 __all__ = [
     "BatchCommLog",
     "EngineData",
+    "MaxMargState",
     "ProtocolInstance",
     "ProtocolState",
     "dataplane",
+    "maxmarg",
+    "maxmarg_transcript_capacity",
     "pack_instances",
+    "pack_instances_maxmarg",
     "run_compiled",
     "run_instances",
+    "run_sweep",
     "step",
     "transcript_capacity",
 ]

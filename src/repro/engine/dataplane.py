@@ -53,6 +53,29 @@ def ranges(
     return lo, hi
 
 
+def median_cut(
+    V: jnp.ndarray,       # (m, d)
+    dir_ok: jnp.ndarray,  # (B, m) bool
+    lo: jnp.ndarray,      # (B, m)
+    hi: jnp.ndarray,      # (B, m)
+    X: jnp.ndarray,       # (B, n, d)
+    y: jnp.ndarray,       # (B, n) i32, 0 = padding
+    *,
+    use_pallas: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Batched median-cut scores (int32 (B, m), -1 at disallowed cuts): the
+    (B, m, n) weighted-median scan the MEDIAN coordinator argmaxes.  On TPU
+    this is the fused ``kernels.median_cut`` Pallas kernel — one pallas_call
+    for the whole sweep, never materializing the (B, m, n) risk tensor in
+    HBM; elsewhere the jitted vmap reference.  Both produce identical
+    integer scores (bit-for-bit, tested)."""
+    use_pallas = use_pallas_default() if use_pallas is None else use_pallas
+    if use_pallas:
+        return ops.support_median_cut_batch(
+            V, dir_ok.astype(jnp.float32), lo, hi, X, y)
+    return ref.median_cut_scores_batch_ref(V, dir_ok, lo, hi, X, y)
+
+
 def uncertain(
     V: jnp.ndarray,       # (m, d)
     dir_ok: jnp.ndarray,  # (B, m) bool

@@ -1,0 +1,276 @@
+"""One MAXMARG k-party turn as a pure jitted ``step(state) -> state``.
+
+Faithful vectorization of the per-round-SVM-refit protocol (paper §4.4
+two-way MAXMARG and its §7 k-party generalization) that used to live as a
+host-side Python loop in ``repro.core.protocols.kparty``.  Each turn the
+coordinator ``ci = turn % k`` refits a max-margin separator on everything it
+knows — own shard ∪ received transcript — via the batched annealed Pegasos
+solver (``repro.core.classifiers._svm_solve_batch``), so a whole sweep of B
+hard-margin refits is one device computation per turn and the whole sweep is
+one ``lax.while_loop`` dispatch.
+
+Turn structure (mirrors the retired host loop, kept as the differential
+oracle in ``benchmarks/legacy_maxmarg.py``):
+
+1. coordinator fits max-margin on own ∪ transcript (the B-batched fit);
+2. active-margin support points (functional margin within (1+rtol) of the
+   minimum, the ``max_support`` smallest by (margin, index)) are broadcast
+   to the k-1 others [k-1 point msgs] and land in their transcripts;
+3. every node counts the proposal's errors on its own shard; non-coordinators
+   report an all-clear bit [k-1 bit msgs];
+4. every violated non-coordinator ships its 2 most-violated points to the
+   coordinator [≤2-point msgs, only when violated] — the paper's
+   support-vector exchange;
+5. terminate when the global error count is within the ε budget.
+
+Padding follows the engine conventions (DESIGN.md): label-0 rows are inert
+in the fit (no hinge contribution, gradient normalized by the valid count)
+and in every masked selection; transcripts are received-points-only, matching
+the host loop's ``Node.recv``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.classifiers import _svm_solve_batch
+from repro.engine.state import (
+    BatchCommLog,
+    EngineData,
+    MaxMargState,
+    ProtocolInstance,
+    pack_instances_maxmarg,
+)
+
+RTOL = 0.15          # active-margin band width, = classifiers.support_points
+VIOL_SHIP = 2        # most-violated points shipped per violated node
+
+_INF = jnp.inf
+
+
+def _append_block(wx, wy, fill, pts, labs, do):
+    """Append an r-row block to each instance's transcript at its fill.
+
+    ``pts`` (B, r, d), ``labs`` (B, r) with label-0 marking invalid rows
+    (valid rows compacted to the front), ``do`` (B,) gating the append.
+    Same invariant as ``median._append2``: writes land at ≥ fill, so masked
+    appends only touch label-0 scratch rows the next valid append overwrites.
+    """
+    labs = jnp.where(do[:, None], labs, 0).astype(jnp.int32)
+    nvalid = jnp.sum(labs != 0, axis=1).astype(jnp.int32)
+
+    def upd(w, wl, f, p, l):
+        return (lax.dynamic_update_slice(w, p, (f, 0)),
+                lax.dynamic_update_slice(wl, l, (f,)))
+
+    wx, wy = jax.vmap(upd)(wx, wy, fill, pts.astype(wx.dtype), labs)
+    return wx, wy, fill + nvalid
+
+
+def _rank_smallest(key: jnp.ndarray) -> jnp.ndarray:
+    """Stable rank of each entry under ascending (key, index) order; key rows
+    are (B, N) with +inf marking excluded entries."""
+    order = jnp.argsort(key, axis=1, stable=True)
+    return jnp.argsort(order, axis=1, stable=True)
+
+
+def _compact_rows(X, y, sel, nsel, r, order=None):
+    """Gather the selected rows (≤ r per instance) into a compacted
+    (B, r, d) block with label-0 tail slots.  Rows are emitted in ascending
+    ``order`` (unique per-row integer keys < N); default is index order —
+    the order the host loop ships support points in (``support_points``
+    returns ascending indices).  Violation replies pass the margin rank
+    instead, matching the host's ``argsort(m)[:2]`` wire order."""
+    N = X.shape[1]
+    if order is None:
+        order = jnp.broadcast_to(jnp.arange(N)[None, :], sel.shape)
+    idx_key = jnp.where(sel, order, N)
+    cidx = jnp.argsort(idx_key, axis=1, stable=True)[:, :r]       # (B, r)
+    pts = jnp.take_along_axis(X, cidx[..., None], axis=1)         # (B, r, d)
+    labs = jnp.where(jnp.arange(r)[None, :] < nsel[:, None],
+                     jnp.take_along_axis(y, cidx, axis=1), 0)
+    return pts, labs.astype(jnp.int32)
+
+
+def step(
+    data: EngineData,
+    state: MaxMargState,
+    *,
+    k: int,
+    max_support: int = 4,
+    steps: int = 2000,
+    stages: int = 3,
+    lam0: float = 1e-3,
+) -> MaxMargState:
+    """Advance every active instance by one MAXMARG turn (pure, jittable,
+    shape-stable — usable under jit/while_loop)."""
+    B = state.done.shape[0]
+    n_max, d = data.X.shape[2], data.X.shape[3]
+    ci = state.turn % k
+    active = ~state.done
+    comm = state.comm
+
+    # -- 1. batched max-margin refit on coord's own ∪ transcript ------------
+    Xc = jnp.take(data.X, ci, axis=1)                  # (B, n_max, d)
+    yc = jnp.take(data.y, ci, axis=1)                  # (B, n_max)
+    Wxc = jnp.take(state.wx, ci, axis=1)               # (B, cap, d)
+    Wyc = jnp.take(state.wy, ci, axis=1)               # (B, cap)
+    K = jnp.concatenate([Xc, Wxc], axis=1)             # (B, N, d)
+    yK = jnp.concatenate([yc, Wyc], axis=1)            # (B, N) i32
+    yKf = yK.astype(K.dtype)
+    w, b, _ = _svm_solve_batch(K, yKf, jnp.float32(lam0), steps, stages)
+
+    # -- 2. active-margin support points --------------------------------------
+    valid = yK != 0
+    m = yKf * (jnp.einsum("bnd,bd->bn", K, w) + b[:, None])
+    m_val = jnp.where(valid, m, _INF)
+    mmin = jnp.maximum(jnp.min(m_val, axis=1), 1e-12)
+    band = valid & (m <= (mmin * (1.0 + RTOL))[:, None])
+    sel = band & (_rank_smallest(jnp.where(band, m, _INF)) < max_support)
+    nsel = jnp.sum(sel, axis=1).astype(jnp.int32)
+    S_pts, S_lab = _compact_rows(K, yK, sel, nsel, max_support)
+
+    # comm: support broadcast to the k-1 others
+    comm = comm._replace(
+        points=comm.points + jnp.where(active, nsel * (k - 1), 0),
+        messages=comm.messages + jnp.where(active, k - 1, 0),
+        rounds=comm.rounds + active.astype(jnp.int32),
+    )
+
+    wx, wy, w_fill = state.wx, state.wy, state.w_fill
+    for j in range(k):
+        wxj, wyj, fj = _append_block(
+            wx[:, j], wy[:, j], w_fill[:, j], S_pts, S_lab,
+            active & (j != ci))
+        wx = wx.at[:, j].set(wxj)
+        wy = wy.at[:, j].set(wyj)
+        w_fill = w_fill.at[:, j].set(fj)
+
+    # -- 3. per-node error counts + all-clear bits --------------------------
+    dec = jnp.einsum("bknd,bd->bkn", data.X, w) + b[:, None, None]
+    pred = jnp.where(dec > 0, 1, -1)
+    err_k = jnp.sum((pred != data.y) & (data.y != 0), axis=2)     # (B, k)
+    errs = jnp.sum(err_k, axis=1)
+    comm = comm._replace(
+        bits=comm.bits + jnp.where(active, k - 1, 0),
+        messages=comm.messages + jnp.where(active, k - 1, 0),
+    )
+
+    # -- 4. violated nodes ship their 2 most-violated points ----------------
+    m_all = data.y.astype(K.dtype) * dec
+    key_all = jnp.where(data.y != 0, m_all, _INF)                 # (B, k, n)
+    n_valid_k = jnp.sum(data.y != 0, axis=2)
+    node_ids = jnp.arange(k)[None, :]
+    fire = active[:, None] & (node_ids != ci) & (err_k > 0)
+    nv = jnp.minimum(VIOL_SHIP, n_valid_k).astype(jnp.int32)      # (B, k)
+    comm = comm._replace(
+        points=comm.points + jnp.sum(jnp.where(fire, nv, 0), axis=1),
+        messages=comm.messages + jnp.sum(fire, axis=1, dtype=jnp.int32),
+    )
+    # every reply targets only the coordinator's transcript, so gather that
+    # one buffer at the traced index ci and scatter it back — k appends per
+    # turn, not the k² a per-target loop would trace
+    for i in range(k):
+        rank_i = _rank_smallest(key_all[:, i])
+        sel_i = (data.y[:, i] != 0) & (rank_i < VIOL_SHIP)
+        V_pts, V_lab = _compact_rows(data.X[:, i], data.y[:, i], sel_i,
+                                     nv[:, i], VIOL_SHIP, order=rank_i)
+        wxc, wyc2, fc = _append_block(
+            jnp.take(wx, ci, axis=1), jnp.take(wy, ci, axis=1),
+            jnp.take(w_fill, ci, axis=1), V_pts, V_lab, fire[:, i])
+        wx = wx.at[:, ci].set(wxc)
+        wy = wy.at[:, ci].set(wyc2)
+        w_fill = w_fill.at[:, ci].set(fc)
+
+    # -- 5. ε-termination + hypothesis bookkeeping --------------------------
+    term = active & (errs <= data.budget)
+    return MaxMargState(
+        wx=wx, wy=wy, w_fill=w_fill,
+        turn=state.turn + 1,
+        done=state.done | term,
+        converged=state.converged | term,
+        epochs=jnp.where(term, state.turn // k + 1, state.epochs),
+        h_w=jnp.where(active[:, None], w, state.h_w),
+        h_b=jnp.where(active, b, state.h_b),
+        comm=comm,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "max_turns", "max_support", "steps", "stages"))
+def run_compiled(
+    data: EngineData,
+    state0: MaxMargState,
+    *,
+    k: int,
+    max_turns: int,
+    max_support: int = 4,
+    steps: int = 2000,
+    stages: int = 3,
+    lam0: float = 1e-3,
+) -> MaxMargState:
+    """The whole MAXMARG sweep as one device computation: while_loop over
+    ``step`` until every instance terminates or the turn budget runs out."""
+
+    def cond(s: MaxMargState):
+        return (s.turn < max_turns) & ~jnp.all(s.done)
+
+    def body(s: MaxMargState):
+        return step(data, s, k=k, max_support=max_support, steps=steps,
+                    stages=stages, lam0=lam0)
+
+    return lax.while_loop(cond, body, state0)
+
+
+def run_instances(
+    instances: Sequence[ProtocolInstance],
+    *,
+    eps: Optional[float] = None,
+    max_epochs: int = 48,
+    max_support: int = 4,
+    steps: int = 2000,
+    stages: int = 3,
+    lam: float = 1e-3,
+):
+    """Run a batch of MAXMARG instances as one compiled sweep.
+
+    Returns :class:`~repro.core.protocols.one_way.ProtocolResult` per
+    instance, shaped exactly like the retired host loop's (which survives as
+    the differential oracle in ``benchmarks/legacy_maxmarg.py``).
+    """
+    from repro.core import classifiers as clf
+    from repro.core.protocols.one_way import ProtocolResult
+
+    if eps is not None:
+        instances = [ProtocolInstance(inst.shards, eps, "maxmarg")
+                     for inst in instances]
+    data, state0, k, _cap = pack_instances_maxmarg(
+        instances, max_epochs=max_epochs, max_support=max_support)
+    final = run_compiled(data, state0, k=k, max_turns=k * max_epochs,
+                         max_support=max_support, steps=steps, stages=stages,
+                         lam0=lam)
+
+    converged = np.asarray(final.converged)
+    epochs = np.asarray(final.epochs)
+    h_w = np.asarray(final.h_w, np.float64)
+    h_b = np.asarray(final.h_b, np.float64)
+    comm_np = type(final.comm)(*(np.asarray(a) for a in final.comm))
+    d = data.X.shape[3]
+    results: List[ProtocolResult] = []
+    for i in range(len(instances)):
+        h = clf.LinearSeparator(h_w[i], float(h_b[i]))
+        results.append(ProtocolResult(
+            h,
+            comm_np.summary(i, dim=d),
+            rounds=int(epochs[i]) if converged[i] else max_epochs,
+            converged=bool(converged[i]),
+            extra={"engine": True, "batch": len(instances),
+                   "selector": "maxmarg"},
+        ))
+    return results

@@ -138,6 +138,7 @@ def step(
     *,
     k: int,
     first_turn: bool = False,
+    cut_kernel: bool = False,
 ) -> ProtocolState:
     """Advance every active instance by one protocol turn (pure, jittable,
     shape-stable — usable under jit/vmap/while_loop).
@@ -147,6 +148,19 @@ def step(
     every real point is at risk at every direction, every cut scores 0, and
     the first-max pick is provably index 0 — the same value the full scan
     computes (tested), at none of its cost.
+
+    ``cut_kernel=True`` (static; the TPU default via ``run_instances``)
+    routes the median-cut scan through the fused Pallas kernel
+    (:mod:`repro.kernels.median_cut`) instead of the inline histogram
+    pipeline — no (B, m, n) intermediate in HBM.  The kernel is bit-for-bit
+    against its jnp reference (tested); against the *inline* path it can
+    pick a different — equally allowed — cut at FMA boundary ties, because
+    inline projections are broadcast multiply-adds while the kernel
+    contracts on the MXU (a shipped support point's own projection defines
+    the band edge its strict ``>`` risk test compares against).  Within a
+    backend the path is fixed, so B=1-vs-batch parity is unaffected.  The
+    inline path stays the CPU default: XLA:CPU fuses it well and
+    interpret-mode Pallas inside a hot loop is pathologically slow.
     """
     B, m = state.dir_ok.shape
     ci = state.turn % k
@@ -166,6 +180,11 @@ def step(
     yc = jnp.take(data.y, ci, axis=1)                    # (B, n)
     if first_turn:
         v_idx = jnp.zeros((B,), jnp.int32)
+    elif cut_kernel:
+        from repro.engine import dataplane
+        score = dataplane.median_cut(V, state.dir_ok, lo, hi, Xc, yc,
+                                     use_pallas=True)
+        v_idx = jnp.argmax(score, axis=1)                # (B,) first max
     else:
         projc = _proj_grid(V, Xc)                        # (B, m, n)
         nonempty = (lo < hi) & state.dir_ok              # (B, m)
@@ -339,7 +358,7 @@ def step(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("k", "max_turns"))
+@functools.partial(jax.jit, static_argnames=("k", "max_turns", "cut_kernel"))
 def run_compiled(
     data: EngineData,
     V: jnp.ndarray,
@@ -347,6 +366,7 @@ def run_compiled(
     *,
     k: int,
     max_turns: int,
+    cut_kernel: bool = False,
 ) -> ProtocolState:
     """The whole sweep as one device computation: the constant-folded first
     turn, then while_loop over ``step`` until every instance terminates or
@@ -356,7 +376,7 @@ def run_compiled(
         return (s.turn < max_turns) & ~jnp.all(s.done)
 
     def body(s: ProtocolState):
-        return step(data, V, s, k=k)
+        return step(data, V, s, k=k, cut_kernel=cut_kernel)
 
     return lax.while_loop(cond, body, step(data, V, state0, k=k,
                                            first_turn=True))
@@ -368,6 +388,7 @@ def run_instances(
     eps: Optional[float] = None,
     n_angles: int = 1024,
     max_epochs: int = 48,
+    cut_kernel: Optional[bool] = None,
 ):
     """Run a batch of MEDIAN/k-party instances as one compiled sweep.
 
@@ -381,10 +402,14 @@ def run_instances(
 
     if eps is not None:
         instances = [ProtocolInstance(inst.shards, eps) for inst in instances]
+    if cut_kernel is None:
+        from repro.engine import dataplane
+        cut_kernel = dataplane.use_pallas_default()
     data, state0, k, _cap = pack_instances(
         instances, n_angles=n_angles, max_epochs=max_epochs)
     V = jnp.asarray(geo.direction_grid(n_angles), jnp.float32)
-    final = run_compiled(data, V, state0, k=k, max_turns=k * max_epochs)
+    final = run_compiled(data, V, state0, k=k, max_turns=k * max_epochs,
+                         cut_kernel=cut_kernel)
 
     converged = np.asarray(final.converged)
     epochs = np.asarray(final.epochs)

@@ -99,16 +99,109 @@ class EngineData(NamedTuple):
     budget: jnp.ndarray  # (B,) i32 — floor(eps * n_total)
 
 
+class MaxMargState(NamedTuple):
+    """Per-instance MAXMARG protocol state advanced by ``maxmarg.step``.
+
+    Same conventions as :class:`ProtocolState` (leading batch axis B, shared
+    scalar ``turn``, label-0 transcript padding) but no direction grid: the
+    MAXMARG selector refits a max-margin separator per turn instead of
+    maintaining a consistent-direction arc.  Transcripts hold *received*
+    points only (the legacy host loop's ``Node.recv`` — MAXMARG nodes fit on
+    own ∪ received, never on a sent-ledger).
+    """
+
+    wx: jnp.ndarray         # (B, k, cap, d) f32 — received-point transcripts
+    wy: jnp.ndarray         # (B, k, cap) i32 — transcript labels (0 = empty)
+    w_fill: jnp.ndarray     # (B, k) i32 — transcript fill counters
+    turn: jnp.ndarray       # () i32 — global turn counter
+    done: jnp.ndarray       # (B,) bool
+    converged: jnp.ndarray  # (B,) bool
+    epochs: jnp.ndarray     # (B,) i32 — 1-based epoch at termination
+    h_w: jnp.ndarray        # (B, d) f32 — current hypothesis weights
+    h_b: jnp.ndarray        # (B,) f32 — current hypothesis offset
+    comm: BatchCommLog
+
+
 @dataclasses.dataclass(frozen=True)
 class ProtocolInstance:
-    """One protocol problem: k shards plus an error budget ε."""
+    """One protocol problem: k shards plus an error budget ε and a support
+    selector ("median" or "maxmarg") — the scenario spec the engine
+    dispatches on."""
 
     shards: Sequence[Tuple[np.ndarray, np.ndarray]]
     eps: float = 0.05
+    selector: str = "median"
 
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+def maxmarg_transcript_capacity(k: int, max_epochs: int,
+                                max_support: int) -> int:
+    """Static per-node transcript bound for the MAXMARG selector.  Per epoch
+    a node *receives* at most ``max_support`` points on each of the k-1 turns
+    where it is not coordinator, plus (as coordinator) a 2-point violation
+    reply from each of the k-1 others: ``(max_support + 2)(k-1)`` rows.  +8
+    slack keeps the block writes in bounds (requires max_support ≤ 8)."""
+    if not 1 <= max_support <= 8:
+        raise ValueError(
+            f"max_support must be in [1, 8] (block appends write at most 8 "
+            f"rows past the fill), got {max_support}")
+    return _round_up(max_epochs * (max_support + 2) * (k - 1) + 8, 8)
+
+
+def pack_instances_maxmarg(
+    instances: Sequence[ProtocolInstance],
+    *,
+    max_epochs: int,
+    max_support: int,
+) -> Tuple[EngineData, MaxMargState, int, int]:
+    """Pad a MAXMARG sweep onto the engine's static shapes.
+
+    Returns ``(data, state0, k, cap)``.  All instances must share the party
+    count k and the dimension d (any d ≥ 2 — MAXMARG has no direction grid);
+    shard sizes may be ragged (label-0 padding).
+    """
+    assert instances, "need at least one instance"
+    ks = {len(inst.shards) for inst in instances}
+    assert len(ks) == 1, f"instances must share the party count, got {ks}"
+    k = ks.pop()
+    ds = {s[0].shape[1] for inst in instances for s in inst.shards}
+    assert len(ds) == 1, f"instances must share the dimension, got {ds}"
+    d = ds.pop()
+    B = len(instances)
+    n_max = _round_up(max(s[0].shape[0] for inst in instances
+                          for s in inst.shards), 8)
+    cap = maxmarg_transcript_capacity(k, max_epochs, max_support)
+
+    X = np.zeros((B, k, n_max, d), np.float32)
+    y = np.zeros((B, k, n_max), np.int32)
+    budget = np.zeros((B,), np.int32)
+    for b, inst in enumerate(instances):
+        n_total = 0
+        for j, (Xs, ys) in enumerate(inst.shards):
+            n = Xs.shape[0]
+            assert set(np.unique(ys)).issubset({-1, 1}), "labels must be +-1"
+            X[b, j, :n] = Xs
+            y[b, j, :n] = ys
+            n_total += n
+        budget[b] = int(np.floor(inst.eps * n_total))
+
+    data = EngineData(jnp.asarray(X), jnp.asarray(y), jnp.asarray(budget))
+    state0 = MaxMargState(
+        wx=jnp.zeros((B, k, cap, d), jnp.float32),
+        wy=jnp.zeros((B, k, cap), jnp.int32),
+        w_fill=jnp.zeros((B, k), jnp.int32),
+        turn=jnp.zeros((), jnp.int32),
+        done=jnp.zeros((B,), bool),
+        converged=jnp.zeros((B,), bool),
+        epochs=jnp.zeros((B,), jnp.int32),
+        h_w=jnp.zeros((B, d), jnp.float32),
+        h_b=jnp.zeros((B,), jnp.float32),
+        comm=BatchCommLog.zeros(B),
+    )
+    return data, state0, k, cap
 
 
 def transcript_capacity(k: int, max_epochs: int) -> int:

@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
-Four kernels, each with the ``<name>.py`` (pl.pallas_call + BlockSpec) /
+Five kernels, each with the ``<name>.py`` (pl.pallas_call + BlockSpec) /
 ``ops.py`` (jit'd padding + dispatch wrapper) / ``ref.py`` (pure-jnp oracle)
 layout:
 
@@ -9,6 +9,9 @@ layout:
   mamba            blocked selective scan
   support_margin   the paper's data-plane hot loop: fused direction×point
                    projection with masked range / any reductions
+  median_cut       the MEDIAN selector's (B, m, n) weighted-median cut scan
+                   (running risk counts down the direction axis, integer
+                   side counts per cut)
 
 All are validated on CPU via ``interpret=True`` against the oracles
 (tests/test_kernels.py); the BlockSpec tilings target TPU v5e VMEM/MXU.
@@ -17,5 +20,6 @@ All are validated on CPU via ``interpret=True`` against the oracles
 from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.mamba import mamba_scan  # noqa: F401
+from repro.kernels.median_cut import median_cut_scores_batched  # noqa: F401
 from repro.kernels.rwkv6 import rwkv6_chunked  # noqa: F401
 from repro.kernels.support_margin import threshold_ranges, uncertain_mask  # noqa: F401

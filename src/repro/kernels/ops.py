@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import mamba as _mamba
+from repro.kernels import median_cut as _mc
 from repro.kernels import rwkv6 as _rwkv6
 from repro.kernels import support_margin as _sm
 
@@ -180,6 +181,29 @@ def support_ranges_batch(
     lo, hi = _sm.threshold_ranges_batched(Vp, Xp, yp, block_m=bm, block_n=bn,
                                           interpret=interpret)
     return lo[:, :m], hi[:, :m]
+
+
+def support_median_cut_batch(
+    V: jnp.ndarray, dir_ok: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+    X: jnp.ndarray, y: jnp.ndarray, *,
+    block_n: int = 512, interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Batched median-cut scores: per-instance dir_ok/lo/hi (B, m) and
+    shards X (B, n, d) / y (B, n); returns int32 (B, m), -1 at disallowed
+    cuts.  Pads m (dir_ok=0 ⇒ score -1, sliced off), n (label-0 rows are
+    never live) and d."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    m, n = V.shape[0], X.shape[1]
+    bn = min(block_n, max(n, 8))
+    Vp = _pad_to(_pad_to(V, 0, 8), 1, _LANE)
+    okp = _pad_to(dir_ok.astype(jnp.float32), 1, 8)
+    lop = _pad_to(lo, 1, 8)
+    hip = _pad_to(hi, 1, 8, value=-1.0)  # padded dirs: empty interval
+    Xp = _pad_to(_pad_to(X, 1, bn), 2, _LANE)
+    yp = _pad_to(y.astype(jnp.float32), 1, bn)
+    out = _mc.median_cut_scores_batched(Vp, okp, lop, hip, Xp, yp,
+                                        block_n=bn, interpret=interpret)
+    return out[:, :m]
 
 
 def support_uncertain_batch(

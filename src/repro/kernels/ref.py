@@ -141,6 +141,37 @@ def uncertain_mask_ref(
     return jnp.any(at_risk & nonempty[:, None], axis=0)
 
 
+def median_cut_scores_ref(
+    V: jnp.ndarray,                # (m, d)
+    dir_ok: jnp.ndarray,           # (m,) bool
+    lo: jnp.ndarray,               # (m,)
+    hi: jnp.ndarray,               # (m,)
+    X: jnp.ndarray,                # (n, d)
+    y: jnp.ndarray,                # (n,) ±1 (0 = padding row)
+) -> jnp.ndarray:
+    """Median-cut scores (int32, (m,)): for each allowed cut angle, the
+    smaller of the two counts of points whose whole at-risk arc lies
+    strictly on one side — the discretized weighted-median hull edge the
+    MEDIAN coordinator proposes (``argmax``).  Disallowed cuts score -1.
+
+    Integer counts, so the Pallas kernel
+    (``kernels.median_cut.median_cut_scores_batched``) matches bit-for-bit.
+    """
+    m = V.shape[0]
+    proj = V @ X.T                                      # (m, n)
+    nonempty = (lo < hi) & dir_ok
+    lo_r = jnp.where(nonempty, lo, jnp.inf)
+    hi_r = jnp.where(nonempty, hi, -jnp.inf)
+    risk = jnp.where((y == 1)[None, :],
+                     proj > lo_r[:, None], proj < hi_r[:, None])
+    c = jnp.cumsum(risk.astype(jnp.int32), axis=0)      # (m, n)
+    total = c[-1:, :]
+    live = (total > 0) & ((y != 0)[None, :])
+    below = jnp.sum(live & (c == total), axis=1)
+    above = jnp.sum(live & (c == 0), axis=1)
+    return jnp.where(dir_ok, jnp.minimum(below, above), -1).astype(jnp.int32)
+
+
 # Batched (sweep) oracles: the engine's CPU/interpret data-plane path and the
 # parity reference for the batch-grid Pallas kernels.  V is shared across the
 # batch; everything else carries a leading instance axis B.
@@ -150,3 +181,6 @@ threshold_ranges_batch_ref = jax.jit(
 
 uncertain_mask_batch_ref = jax.jit(
     jax.vmap(uncertain_mask_ref, in_axes=(None, 0, 0, 0, 0, 0)))
+
+median_cut_scores_batch_ref = jax.jit(
+    jax.vmap(median_cut_scores_ref, in_axes=(None, 0, 0, 0, 0, 0)))

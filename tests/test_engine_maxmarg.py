@@ -1,0 +1,141 @@
+"""Engine MAXMARG selector: legacy-oracle comm parity, B=1 delegation,
+padding invariance, selector dispatch, and the d≠2 path.
+
+The acceptance bar: across a ≥12-instance grid, the batched engine must
+produce *identical* comm-byte totals (and rounds / converged flags) to the
+retired host round loop it replaced (``benchmarks/legacy_maxmarg.py``), and
+the public per-instance APIs must be the engine at B=1 exactly.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro import engine
+from repro.core import datasets
+from repro.core.protocols import kparty, two_way
+
+from benchmarks.legacy_maxmarg import kparty_maxmarg_hostloop
+from conftest import global_err
+
+MAX_EPOCHS = 24
+
+
+def _grid():
+    """12 two-party MAXMARG instances: dataset × ε × seed."""
+    out = []
+    for gen in (datasets.data1, datasets.data2, datasets.data3):
+        for eps in (0.05, 0.02):
+            for seed in (0, 1):
+                out.append(engine.ProtocolInstance(
+                    gen(n_per_node=100, k=2, seed=seed), eps, "maxmarg"))
+    return out
+
+
+def test_engine_matches_legacy_oracle_comm_bytes():
+    insts = _grid()
+    assert len(insts) >= 12
+    batched = engine.maxmarg.run_instances(insts, max_epochs=MAX_EPOCHS)
+    for inst, rb in zip(insts, batched):
+        rl = kparty_maxmarg_hostloop(inst.shards, eps=inst.eps,
+                                     max_epochs=MAX_EPOCHS)
+        assert rb.comm == rl.comm, (inst.eps, rb.comm, rl.comm)
+        assert rb.comm["bytes"] == rl.comm["bytes"]
+        assert rb.converged == rl.converged and rb.converged
+        assert rb.rounds == rl.rounds
+        assert global_err(rb.classifier, inst.shards) <= inst.eps
+
+
+def test_batched_matches_b1_delegation():
+    insts = _grid()
+    batched = engine.maxmarg.run_instances(insts, max_epochs=MAX_EPOCHS)
+    for inst, rb in zip(insts, batched):
+        r1 = kparty.iterative_support_kparty(
+            inst.shards, eps=inst.eps, max_epochs=MAX_EPOCHS,
+            selector="maxmarg")
+        assert rb.comm == r1.comm
+        assert rb.converged == r1.converged
+        assert rb.rounds == r1.rounds
+
+
+def test_kparty_matches_legacy_oracle():
+    for seed, eps in ((0, 0.1), (1, 0.05)):
+        shards = datasets.data3(n_per_node=75, k=4, seed=seed)
+        re = kparty.iterative_support_kparty(
+            shards, eps=eps, max_epochs=MAX_EPOCHS, selector="maxmarg")
+        rl = kparty_maxmarg_hostloop(shards, eps=eps, max_epochs=MAX_EPOCHS)
+        assert re.comm == rl.comm
+        assert re.converged == rl.converged and re.rounds == rl.rounds
+
+
+def test_padding_invariance():
+    """An instance's outcome must not depend on its batch neighbours: ragged
+    shard sizes are padded with label-0 rows, which the masked fit and every
+    masked selection ignore."""
+    small = engine.ProtocolInstance(
+        datasets.data1(n_per_node=60, k=2, seed=3), 0.05, "maxmarg")
+    big = engine.ProtocolInstance(
+        datasets.data3(n_per_node=200, k=2, seed=4), 0.05, "maxmarg")
+    alone = engine.maxmarg.run_instances([small], max_epochs=MAX_EPOCHS)[0]
+    padded = engine.maxmarg.run_instances([small, big],
+                                          max_epochs=MAX_EPOCHS)[0]
+    assert alone.comm == padded.comm
+    assert alone.converged == padded.converged
+    assert alone.rounds == padded.rounds
+
+
+def test_two_way_api_runs_on_engine():
+    shards = datasets.data3(n_per_node=100, k=2, seed=0)
+    r = two_way.iterative_support_maxmarg(shards, eps=0.05)
+    assert r.extra and r.extra.get("engine")
+    assert r.extra["selector"] == "maxmarg" and r.extra["batch"] == 1
+    assert r.converged
+    assert global_err(r.classifier, shards) <= 0.05
+
+
+def test_higher_dim_on_engine():
+    """MAXMARG has no direction grid, so the engine path covers any d;
+    paper Table 3's d=10 lift must converge with small communication."""
+    shards = datasets.lift_dim(datasets.data1(n_per_node=150, k=2, seed=0),
+                               d=10, seed=7)
+    r = two_way.iterative_support_maxmarg(shards, eps=0.05)
+    assert r.converged
+    assert global_err(r.classifier, shards) <= 0.05
+    assert r.comm["points"] < 100
+
+
+def test_selector_dispatch_buckets_mixed_sweeps():
+    """engine.run_sweep buckets a mixed (selector, k) sweep and returns
+    results in input order, each equal to its homogeneous run."""
+    shards2 = datasets.data1(n_per_node=80, k=2, seed=0)
+    shards4 = datasets.data3(n_per_node=60, k=4, seed=1)
+    insts = [
+        engine.ProtocolInstance(shards2, 0.05, "maxmarg"),
+        engine.ProtocolInstance(shards2, 0.05, "median"),
+        engine.ProtocolInstance(shards4, 0.1, "maxmarg"),
+    ]
+    out = engine.run_sweep(insts, max_epochs=MAX_EPOCHS, n_angles=256)
+    assert [r.extra.get("selector", "median") if r.extra else "median"
+            for r in out][0] == "maxmarg"
+    r_mm = engine.maxmarg.run_instances([insts[0]], max_epochs=MAX_EPOCHS)[0]
+    assert out[0].comm == r_mm.comm
+    r_med = engine.run_instances([insts[1]], n_angles=256,
+                                 max_epochs=MAX_EPOCHS)[0]
+    assert out[1].comm == r_med.comm
+    r_mm4 = engine.maxmarg.run_instances([insts[2]], max_epochs=MAX_EPOCHS)[0]
+    assert out[2].comm == r_mm4.comm
+    with pytest.raises(ValueError):
+        engine.run_sweep([engine.ProtocolInstance(shards2, 0.05, "nope")])
+
+
+def test_transcript_capacity_never_overflows():
+    insts = _grid()
+    data, state0, k, cap = engine.pack_instances_maxmarg(
+        insts, max_epochs=MAX_EPOCHS, max_support=4)
+    final = engine.maxmarg.run_compiled(data, state0, k=k,
+                                        max_turns=k * MAX_EPOCHS)
+    assert int(np.max(np.asarray(final.w_fill))) <= cap - 4

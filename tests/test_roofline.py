@@ -32,8 +32,15 @@ def test_scan_multiplies_flops_by_trip_count():
     r = analyze_hlo(c.as_text())
     single = analyze_hlo(_compiled(lambda x: x @ x, (128, 128)).as_text())
     assert r["flops"] == pytest.approx(10 * single["flops"], rel=0.05)
-    # XLA's own counter reports the body once — document the discrepancy
-    assert float(c.cost_analysis()["flops"]) < r["flops"] / 5
+    # XLA's own counter reports the body once — document the discrepancy.
+    # (Older jax returns cost_analysis() as a [dict]; normalize, and skip
+    # the XLA-counter comparison when flops are not exposed at all.)
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if "flops" not in ca:
+        pytest.skip("compiled.cost_analysis() exposes no flops on this jax")
+    assert float(ca["flops"]) < r["flops"] / 5
 
 
 def test_nested_scan_multiplies_product():
