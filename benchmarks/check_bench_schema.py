@@ -13,6 +13,7 @@ Usage:  python benchmarks/check_bench_schema.py BENCH_engine.json ...
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 _NUM = (int, float)
@@ -45,11 +46,60 @@ PER_INSTANCE_SCHEMA = {
     "parity_b1": bool,
 }
 
+# BENCH_baselines.json: the one-way/baselines sweep has no epoch loop, its
+# error gate covers only the ε-guaranteed selectors (VOTING/MIXING are the
+# paper's failure baselines), and it carries the one-way-vs-two-way
+# comm-gap headline series from the mixed run_sweep dispatch.
+BASELINES_SCHEMA = {
+    "notes": str,
+    "instances": int,
+    "sequential_s": _NUM,
+    "batched_s": _NUM,
+    "speedup": _NUM,
+    "engine_b1_loop_s": _NUM,
+    "speedup_vs_engine_b1": _NUM,
+    "parity_b1_ok": bool,
+    "parity_b1_mismatch_indices": list,
+    "legacy_oracle_disagreements": list,
+    "all_converged": bool,
+    "all_gated_err_within_eps": bool,
+    "oneway_vs_twoway": list,
+    "per_instance": list,
+}
+
+BASELINES_PER_INSTANCE = {
+    "selector": str,
+    "eps": _NUM,
+    "converged": bool,
+    "rounds": int,
+    "points": int,
+    "bytes": int,
+    "global_err": _NUM,
+    "parity_b1": bool,
+}
+
+GAP_ENTRY_SCHEMA = {
+    "dataset": str,
+    "eps": _NUM,
+    "naive_points": int,
+    "sampling_points": int,
+    "median_points": int,
+    "maxmarg_points": int,
+    "naive_over_maxmarg": _NUM,
+    "naive_over_median": _NUM,
+}
+
 
 def check(path: str) -> list:
     with open(path) as f:
         report = json.load(f)
     errors = []
+    is_baselines = "baselines" in os.path.basename(path)
+    schema = BASELINES_SCHEMA if is_baselines else COMMON_SCHEMA
+    per_inst = BASELINES_PER_INSTANCE if is_baselines else PER_INSTANCE_SCHEMA
+    flags = ("parity_b1_ok", "all_converged",
+             "all_gated_err_within_eps" if is_baselines
+             else "all_err_within_eps")
 
     def expect(obj, field, typ, where):
         if field not in obj:
@@ -58,22 +108,35 @@ def check(path: str) -> list:
             errors.append(f"{where}: {field!r} has type "
                           f"{type(obj[field]).__name__}, wanted {typ}")
 
-    for field, typ in COMMON_SCHEMA.items():
+    for field, typ in schema.items():
         expect(report, field, typ, path)
     for i, inst in enumerate(report.get("per_instance", [])):
-        for field, typ in PER_INSTANCE_SCHEMA.items():
+        for field, typ in per_inst.items():
             expect(inst, field, typ, f"{path}[per_instance][{i}]")
 
     # size-independent invariants
     if report.get("per_instance") is not None and \
             len(report["per_instance"]) != report.get("instances"):
         errors.append(f"{path}: per_instance length != instances")
-    for flag in ("parity_b1_ok", "all_converged", "all_err_within_eps"):
+    for flag in flags:
         if report.get(flag) is not True:
             errors.append(f"{path}: {flag} is not true")
     for lst in ("parity_b1_mismatch_indices", "legacy_oracle_disagreements"):
         if report.get(lst):
             errors.append(f"{path}: {lst} is non-empty: {report[lst]}")
+
+    if is_baselines:
+        gap = report.get("oneway_vs_twoway", [])
+        if not gap:
+            errors.append(f"{path}: oneway_vs_twoway is empty")
+        for i, g in enumerate(gap):
+            for field, typ in GAP_ENTRY_SCHEMA.items():
+                expect(g, field, typ, f"{path}[oneway_vs_twoway][{i}]")
+            # the paper's headline direction must hold at any size: the
+            # two-way protocols beat shipping the whole dataset
+            if g.get("naive_points", 0) < g.get("maxmarg_points", 0):
+                errors.append(f"{path}[oneway_vs_twoway][{i}]: two-way "
+                              f"MAXMARG cost exceeds NAIVE")
     return errors
 
 

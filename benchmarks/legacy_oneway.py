@@ -1,0 +1,111 @@
+"""Pre-engine host-loop one-way/baseline protocols (benchmark + oracle).
+
+These are RANDOM ε-net sampling (paper Thm 3.1/6.1) and the §7 baselines
+exactly as they executed before the batched engine's one-way path landed:
+host-side Python loops over metered ``repro.core.comm`` channels, one
+``fit_max_margin`` device call per fit, numpy reservoir.  Kept for two
+reasons only:
+
+* ``benchmarks/baselines_sweep.py`` measures the engine's speedup against
+  the execution model it replaced (this one);
+* they double as differential-testing oracles for the engine's metering —
+  ``tests/test_engine_oneway.py`` asserts identical comm dicts
+  (points/scalars/bits/messages/rounds/bytes) and rounds across a grid.
+
+The loops carry the PR's metering fixes (every protocol meters its rounds
+via ``log.new_round()``; the shared ``sampling.EPSILON_NET_C`` ε-net
+constant), so oracle and engine implement one contract.  Reservoir *contents*
+are RNG-backend-specific (numpy here, ``jax.random`` on the engine) — comm
+metering is capacity-determined and identical; classifier outputs agree only
+distributionally.
+
+Production code paths must use :mod:`repro.engine` — do not import this
+from ``src/``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import classifiers as clf
+from repro.core import sampling
+from repro.core.comm import make_nodes
+from repro.core.protocols.baselines import _MixedClassifier, _VotingClassifier
+from repro.core.protocols.one_way import ProtocolResult
+
+
+def random_sampling_hostloop(
+    shards,
+    eps: float,
+    vc_dim: Optional[int] = None,
+    seed: int = 0,
+    c: float = sampling.EPSILON_NET_C,
+) -> ProtocolResult:
+    """The retired RANDOM chain: numpy reservoir down P_1 → … → P_k."""
+    nodes, log = make_nodes(shards)
+    d = nodes[0].d
+    vc = vc_dim if vc_dim is not None else d + 1
+    s_eps = sampling.epsilon_net_size(eps, vc, c=c)
+    res = sampling.Reservoir(s_eps, d, np.random.default_rng(seed))
+    for i, node in enumerate(nodes[:-1]):
+        log.new_round()
+        res.add_batch(node.X, node.y)
+        RX, Ry = res.sample()
+        node.send_points(nodes[i + 1], RX, Ry, tag="reservoir")
+    last = nodes[-1]
+    X = np.concatenate([last.X, last.recv_X])
+    y = np.concatenate([last.y, last.recv_y])
+    h = clf.fit_max_margin(X, y)
+    return ProtocolResult(h, log.summary(), rounds=len(nodes) - 1,
+                          converged=True, extra={"sample_size": s_eps})
+
+
+def naive_hostloop(shards) -> ProtocolResult:
+    nodes, log = make_nodes(shards)
+    log.new_round()
+    last = nodes[-1]
+    for nd in nodes[:-1]:
+        nd.send_points(last, nd.X, nd.y, tag="naive-all")
+    X, y = last.all_known()
+    h = clf.fit_max_margin(X, y)
+    return ProtocolResult(h, log.summary(), rounds=1, converged=True)
+
+
+def voting_hostloop(shards) -> ProtocolResult:
+    nodes, log = make_nodes(shards)
+    log.new_round()
+    parts = [clf.fit_max_margin(nd.X, nd.y) for nd in nodes]
+    last = nodes[-1]
+    for nd in nodes[:-1]:
+        nd.send_points(last, nd.X, nd.y, tag="voting-eval")
+    return ProtocolResult(_VotingClassifier(parts), log.summary(), rounds=1,
+                          converged=True)
+
+
+def mixing_hostloop(shards) -> ProtocolResult:
+    nodes, log = make_nodes(shards)
+    log.new_round()
+    last = nodes[-1]
+    ws, bs = [], []
+    for nd in nodes:
+        h = clf.fit_max_margin(nd.X, nd.y)
+        wn = h.w / (np.linalg.norm(h.w) + 1e-12)
+        bn = h.b / (np.linalg.norm(h.w) + 1e-12)
+        ws.append(wn)
+        bs.append(bn)
+        if nd is not last:
+            nd.send_scalars(last, np.concatenate([wn, [bn]]),
+                            tag="mixing-params")
+    h = _MixedClassifier(np.mean(ws, axis=0), float(np.mean(bs)))
+    return ProtocolResult(h, log.summary(), rounds=1, converged=True)
+
+
+HOSTLOOPS = {
+    "sampling": lambda inst_shards, eps, seed: random_sampling_hostloop(
+        inst_shards, eps=eps, seed=seed),
+    "naive": lambda inst_shards, eps, seed: naive_hostloop(inst_shards),
+    "voting": lambda inst_shards, eps, seed: voting_hostloop(inst_shards),
+    "mixing": lambda inst_shards, eps, seed: mixing_hostloop(inst_shards),
+}

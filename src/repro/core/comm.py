@@ -10,25 +10,42 @@ Units
 ``points``   number of labeled points shipped (the paper's unit).
 ``scalars``  number of raw floats (directions, offsets, thresholds).
 ``bits``     control bits (the ±1 votes of the two-way protocol).
-``bytes``    derived: points * (d+1) * 4 + scalars * 4 + ceil(bits/8),
-             assuming float32 wire format.  Used to compare against
+``bytes``    derived from the exact wire bit count
+             points * (d+1) * 32 + scalars * 32 + bits, ceiled to bytes
+             **once, over the aggregate** (float32 wire format, control bits
+             packed across the whole trace).  Used to compare against
              gradient-synchronization baselines in the trainer integration.
+
+The aggregate convention is canonical: per-message byte attribution must use
+:meth:`CommLog.message_nbytes` (packed-stream deltas), which sums exactly to
+``summary()["bytes"]``.  Ceiling each message separately overstates the total
+whenever a protocol sends multiple sub-byte bit votes.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 
+def wire_bits(points: int, scalars: int, bits: int, dim: int) -> int:
+    """Exact wire size in bits: a labeled point is d+1 float32s, a scalar one
+    float32, control bits count as themselves.  The exact-bit form is the
+    primitive every byte figure derives from — it is additive across
+    messages, so packed-stream accounting stays consistent at any
+    granularity."""
+    return (points * (dim + 1) + scalars) * 32 + bits
+
+
 def wire_bytes(points: int, scalars: int, bits: int, dim: int) -> int:
-    """Canonical float32 wire size: a labeled point is d+1 floats, a scalar is
-    one float, control bits are packed.  Single source of truth for every
-    accounting path (Message, CommStats, and the engine's BatchCommLog)."""
-    return points * (dim + 1) * 4 + scalars * 4 + math.ceil(bits / 8)
+    """Canonical float32 wire size: ``ceil(wire_bits / 8)`` — the bit total
+    is ceiled to bytes once, over whatever aggregate is being priced.  Single
+    source of truth for every accounting path (Message, CommStats, and the
+    engine's BatchCommLog).  Float payloads are byte-aligned, so this equals
+    the historical ``points*(d+1)*4 + scalars*4 + ceil(bits/8)`` form."""
+    return -(-wire_bits(points, scalars, bits, dim) // 8)
 
 
 @dataclasses.dataclass
@@ -43,7 +60,15 @@ class Message:
     tag: str = ""
     payload: Any = None
 
+    def wire_bits(self, dim: int) -> int:
+        return wire_bits(self.points, self.scalars, self.bits, dim)
+
     def nbytes(self, dim: int) -> int:
+        """Byte cost of this message priced as a standalone trace (its bit
+        payload ceiled alone).  Inside a trace this is an upper bound: the
+        canonical per-message attribution packs bits across the stream —
+        use :meth:`CommLog.message_nbytes`, which sums exactly to
+        ``summary()["bytes"]``."""
         return wire_bytes(self.points, self.scalars, self.bits, dim)
 
 
@@ -95,6 +120,20 @@ class CommLog:
 
     def new_round(self) -> None:
         self.rounds += 1
+
+    def message_nbytes(self) -> List[int]:
+        """Per-message byte attribution under the canonical aggregate
+        convention: message i is charged the growth of the packed stream,
+        ``ceil(cum_bits_i / 8) - ceil(cum_bits_{i-1} / 8)``, so the list sums
+        to ``summary()["bytes"]`` exactly — unlike ceiling each message alone,
+        which double-charges partial bytes of consecutive bit votes."""
+        out, cum, prev = [], 0, 0
+        for m in self.messages:
+            cum += m.wire_bits(self.dim)
+            ceiled = -(-cum // 8)
+            out.append(ceiled - prev)
+            prev = ceiled
+        return out
 
     @property
     def stats(self) -> CommStats:

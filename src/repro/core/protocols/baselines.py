@@ -7,11 +7,20 @@
             with the paper's (d/ε)log(d/ε) size).
 * MIXING  — parameter averaging of local linear classifiers (McDonald et al.,
             Mann et al.; the paper's §8.1 comparison point).
+
+With the default max-margin learner every baseline is the batched engine's
+one-way path at B=1 (:mod:`repro.engine.oneway`): the per-node/terminal fits
+run as one batched annealed-Pegasos dispatch and communication is metered in
+``BatchCommLog`` at exactly these host message slots (the retired host loops
+survive as differential oracles in ``benchmarks/legacy_oneway.py``).  A
+custom ``fit`` callable runs the metered host loops kept below.  Every
+baseline meters its single one-way round (``log.new_round()``), so
+``comm["rounds"]`` always equals ``ProtocolResult.rounds``.
 """
 
 from __future__ import annotations
 
-from typing import Any, List
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -20,8 +29,13 @@ from repro.core.comm import make_nodes
 from repro.core.protocols.one_way import ProtocolResult, random_sampling
 
 
-def naive(shards, fit=clf.fit_max_margin) -> ProtocolResult:
+def naive(shards, fit: Optional[Callable] = None) -> ProtocolResult:
+    if fit is None:
+        from repro import engine
+        return engine.oneway.run_instances(
+            [engine.ProtocolInstance(shards, selector="naive")])[0]
     nodes, log = make_nodes(shards)
+    log.new_round()
     last = nodes[-1]
     for nd in nodes[:-1]:
         nd.send_points(last, nd.X, nd.y, tag="naive-all")
@@ -50,13 +64,18 @@ class _VotingClassifier:
         return float(np.mean(self.predict(np.atleast_2d(X)) != y)) if len(y) else 0.0
 
 
-def voting(shards, fit=clf.fit_max_margin) -> ProtocolResult:
+def voting(shards, fit: Optional[Callable] = None) -> ProtocolResult:
     """Local classifiers + majority vote.  Communication: every node ships its
     points' predictions?  No — the paper charges VOTING the full dataset cost
     (Tables 2-4 list Cost = all points), since evaluating the vote on D
     requires the data (or equivalently shipping every local classifier to
     every datum).  We meter it the same way."""
+    if fit is None:
+        from repro import engine
+        return engine.oneway.run_instances(
+            [engine.ProtocolInstance(shards, selector="voting")])[0]
     nodes, log = make_nodes(shards)
+    log.new_round()
     parts = [fit(nd.X, nd.y) for nd in nodes]
     last = nodes[-1]
     for nd in nodes[:-1]:
@@ -66,20 +85,29 @@ def voting(shards, fit=clf.fit_max_margin) -> ProtocolResult:
 
 
 def random(shards, eps: float = 0.05, seed: int = 0) -> ProtocolResult:
-    """Paper's RANDOM: an ε-net of size (d/ε)log(d/ε) sent one-way."""
+    """Paper's RANDOM: an ε-net of size (d/ε)log(d/ε) sent one-way.
+
+    Same ``sampling.EPSILON_NET_C`` constant as ``one_way.random_sampling``
+    (the entry points used to pass different c's into ``epsilon_net_size``,
+    making Table 2's cost column depend on the API used)."""
     d = shards[0][0].shape[1]
-    return random_sampling(shards, eps=eps, vc_dim=d, seed=seed, c=1.0)
+    return random_sampling(shards, eps=eps, vc_dim=d, seed=seed)
 
 
 class _MixedClassifier(clf.LinearSeparator):
     pass
 
 
-def mixing(shards, fit=clf.fit_max_margin) -> ProtocolResult:
+def mixing(shards, fit: Optional[Callable] = None) -> ProtocolResult:
     """Parameter averaging: each node ships (w_i, b_i); coordinator averages.
     Communication: k·(d+1) scalars — cheap, but no error guarantee under
     adversarial partitions (paper §8.1)."""
+    if fit is None:
+        from repro import engine
+        return engine.oneway.run_instances(
+            [engine.ProtocolInstance(shards, selector="mixing")])[0]
     nodes, log = make_nodes(shards)
+    log.new_round()
     last = nodes[-1]
     ws, bs = [], []
     for nd in nodes:

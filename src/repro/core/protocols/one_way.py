@@ -2,7 +2,10 @@
 
 All protocols communicate down a fixed chain P_1 → P_2 → … → P_k (two-party
 is k=2) and the *last* node outputs the classifier.  Costs are metered by the
-shared :class:`~repro.core.comm.CommLog`.
+shared :class:`~repro.core.comm.CommLog`; every chain hop is one
+``log.new_round()``, so ``summary()["rounds"]`` always equals the
+``ProtocolResult.rounds`` field (the metering contract the engine's
+``BatchCommLog`` reproduces slot-for-slot).
 """
 
 from __future__ import annotations
@@ -50,12 +53,26 @@ def random_sampling(
     shards,
     eps: float,
     vc_dim: Optional[int] = None,
-    fit: Callable = clf.fit_max_margin,
+    fit: Optional[Callable] = None,
     seed: int = 0,
-    c: float = 0.35,
+    c: float = sampling.EPSILON_NET_C,
 ) -> ProtocolResult:
     """P_i forwards a reservoir sample of ∪_{j<=i} D_j; P_k fits on
-    reservoir ∪ D_k.  Two-party instance is exactly paper Thm 3.1."""
+    reservoir ∪ D_k.  Two-party instance is exactly paper Thm 3.1.
+
+    With the default max-margin learner this is the batched engine's
+    ``"sampling"`` selector at B=1 (:mod:`repro.engine.oneway`: compiled
+    reservoir chain + batched terminal fit, identical comm metering — the
+    retired host loop survives as the differential oracle in
+    ``benchmarks/legacy_oneway.py``).  A custom ``fit`` callable runs the
+    metered host chain below instead.
+    """
+    if fit is None:
+        from repro import engine
+        return engine.oneway.run_instances(
+            [engine.ProtocolInstance(shards, eps, "sampling", seed)],
+            vc_dim=vc_dim, c=c)[0]
+
     nodes, log = make_nodes(shards)
     d = nodes[0].d
     vc = vc_dim if vc_dim is not None else d + 1
@@ -64,6 +81,7 @@ def random_sampling(
 
     res = sampling.Reservoir(s_eps, d, rng)
     for i, node in enumerate(nodes[:-1]):
+        log.new_round()
         res.add_batch(node.X, node.y)
         RX, Ry = res.sample()
         node.send_points(nodes[i + 1], RX, Ry, tag="reservoir")
@@ -85,6 +103,7 @@ def threshold_protocol(shards) -> ProtocolResult:
     """Each node forwards its largest positive and smallest negative."""
     nodes, log = make_nodes(shards)
     for i, node in enumerate(nodes[:-1]):
+        log.new_round()
         X, y = node.all_known()
         x = X.reshape(-1)
         parts = []
@@ -113,6 +132,7 @@ def interval_protocol(shards) -> ProtocolResult:
     (or nothing, the paper's ∅ case)."""
     nodes, log = make_nodes(shards)
     for i, node in enumerate(nodes[:-1]):
+        log.new_round()
         X, y = node.all_known()
         x = X.reshape(-1)
         pos = x[y == 1]
@@ -153,6 +173,7 @@ def rectangle_protocol(shards) -> ProtocolResult:
         rect_n = clf.AxisAlignedRectangle.merge(rect_n, clf.AxisAlignedRectangle.minimal(node.neg()))
         if i == len(nodes) - 1:
             break
+        log.new_round()
         pts, labs = [], []
         if rect_p is not None:
             pts += [rect_p[0], rect_p[1]]; labs += [1, 1]
@@ -165,7 +186,13 @@ def rectangle_protocol(shards) -> ProtocolResult:
     def _vol(r):
         return float(np.prod(r[1] - r[0])) if r is not None else np.inf
     if rect_p is None:
-        h = clf.AxisAlignedRectangle.from_bounds(rect_n, positive_inside=False)
+        # the paper's ∅ sentinel on the positive class everywhere: the
+        # minimal consistent rectangle is empty, so the hypothesis is the
+        # degenerate always-negative box (lo > hi ⇒ nothing is inside) —
+        # NOT a box around the negatives, whose outside would flip to +1
+        d = nodes[0].d
+        h = clf.AxisAlignedRectangle(np.full(d, np.inf), np.full(d, -np.inf),
+                                     positive_inside=True)
     elif rect_n is None or _vol(rect_p) <= _vol(rect_n):
         h = clf.AxisAlignedRectangle.from_bounds(rect_p, positive_inside=True)
     else:

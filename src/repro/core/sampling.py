@@ -12,8 +12,16 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+# The ε-net leading constant used by *every* RANDOM entry point
+# (one_way.random_sampling, baselines.random, engine.oneway "sampling").
+# c = 1.0 is the paper's literal Table-2 size (d/ε)·log(d/ε); keeping one
+# shared constant makes RANDOM's cost column reproducible from any API —
+# the entry points used to disagree (0.35 vs 1.0), which silently changed
+# both the sample cost and the achieved error depending on the call site.
+EPSILON_NET_C = 1.0
 
-def epsilon_net_size(eps: float, vc_dim: int, c: float = 1.0) -> int:
+
+def epsilon_net_size(eps: float, vc_dim: int, c: float = EPSILON_NET_C) -> int:
     """s_ε = O((ν/ε) log(ν/ε)) — paper Thm 3.1 (noiseless ε-net bound)."""
     assert 0 < eps < 1
     r = vc_dim / eps

@@ -14,6 +14,12 @@ cross-checks the incremental ranges).
 The single-instance protocol API (``iterative_support_median``,
 ``iterative_support_kparty``) delegates here with B=1, so batched and
 sequential execution are the same compiled program — parity by construction.
+
+Three compiled execution paths share the conventions: MEDIAN
+(:mod:`repro.engine.median`), MAXMARG (:mod:`repro.engine.maxmarg`), and the
+one-way chain protocols + §7 baselines (:mod:`repro.engine.oneway` —
+reservoir chain scan plus batched terminal fits).  ``run_sweep`` buckets a
+mixed grid across all of them.
 """
 
 from repro.engine.state import (
@@ -28,7 +34,7 @@ from repro.engine.state import (
     transcript_capacity,
 )
 from repro.engine.median import run_compiled, run_instances, step
-from repro.engine import dataplane, maxmarg
+from repro.engine import dataplane, maxmarg, oneway
 
 
 def run_sweep(instances, **kwargs):
@@ -39,15 +45,20 @@ def run_sweep(instances, **kwargs):
     The engine's compiled ``step`` is selector- and shape-monomorphic (k and
     d are static), so a mixed sweep is *bucketed dispatch*: one engine
     dispatch per distinct (selector, k, d) — see DESIGN.md §selector
-    abstraction.  Keyword arguments are forwarded to each bucket's runner
-    (a selector ignores options that don't apply to it), but a kwarg no
-    selector in the sweep understands raises — a typo must not silently run
-    with defaults.
+    abstraction.  The full paper grid (two-way MEDIAN/MAXMARG + one-way
+    sampling + the §7 baselines) is therefore one ``run_sweep`` call.
+    Keyword arguments are forwarded to each bucket's runner (a selector
+    ignores options that don't apply to it), but a kwarg no selector in the
+    sweep understands raises — a typo must not silently run with defaults.
     """
+    _FIT = ("steps", "stages", "lam")
     _ALLOWED = {
-        "maxmarg": ("eps", "max_epochs", "max_support", "steps", "stages",
-                    "lam"),
+        "maxmarg": ("eps", "max_epochs", "max_support") + _FIT,
         "median": ("eps", "n_angles", "max_epochs", "cut_kernel"),
+        "sampling": ("eps", "vc_dim", "c") + _FIT,
+        "naive": _FIT,
+        "voting": _FIT,
+        "mixing": _FIT,
     }
     buckets = {}
     for i, inst in enumerate(instances):
@@ -67,6 +78,8 @@ def run_sweep(instances, **kwargs):
         opts = {a: kwargs[a] for a in allowed if a in kwargs}
         if selector == "maxmarg":
             res = maxmarg.run_instances(group, **opts)
+        elif selector in oneway.ONEWAY_SELECTORS:
+            res = oneway.run_instances(group, **opts)
         else:
             res = run_instances(group, **opts)
         for i, r in zip(idxs, res):
@@ -83,6 +96,7 @@ __all__ = [
     "dataplane",
     "maxmarg",
     "maxmarg_transcript_capacity",
+    "oneway",
     "pack_instances",
     "pack_instances_maxmarg",
     "run_compiled",

@@ -1,0 +1,303 @@
+"""One-way chain protocols + §7 baselines as the engine's third compiled path.
+
+The paper's other half (§2–3, §6.1 RANDOM ε-net sampling; §7 NAIVE / VOTING /
+MIXING baselines) is one-way: data flows down a fixed chain P_1 → … → P_k (or
+star-in to P_k) and only the last node learns.  There is no turn loop to
+unroll — the whole protocol is *one* chain pass plus a terminal fit — so the
+compiled shape is different from MEDIAN/MAXMARG's ``while_loop``:
+
+* **Batched reservoir chain** (selector ``"sampling"``, paper Thm 3.1/6.1):
+  a ``jax.random``-keyed reservoir sampler vmapped over B with per-instance
+  capacities s_ε, advanced by one ``lax.scan`` over the k−1 chain hops.  Each
+  hop ingests shard i under Vitter's j ~ U[0, t) rule (fill phase first,
+  last-write-wins on slot collisions via a scatter-max of stream positions —
+  the same process ``sampling.Reservoir.add_batch`` runs on the host) and
+  meters the reservoir forward at exactly the host loop's message slot:
+  ``min(seen, s_ε)`` points, one message, one round per hop.
+* **Star baselines** (``"naive"``, ``"voting"``, ``"mixing"``): closed-form
+  metering at the host loops' slots (all points / all points / k−1 parameter
+  vectors) plus the batched terminal or per-node fits.
+
+All terminal fits reuse :func:`repro.core.classifiers._svm_solve_batch`, so a
+whole sweep of B instances is one batched annealed-Pegasos dispatch (VOTING
+and MIXING fold their B·k per-node fits into a single (B·k)-batch solve).
+Communication is metered in :class:`BatchCommLog` at the same message slots
+as the host ``CommLog`` and lowers to identical summary dicts — the retired
+host loops survive as differential oracles in ``benchmarks/legacy_oneway.py``
+and the B=1 public APIs (``one_way.random_sampling``,
+``baselines.{naive,voting,random,mixing}``) delegate here with exact
+comm/rounds parity.
+
+Padding follows the engine conventions (DESIGN.md): label-0 rows are inert in
+the fit and never enter the reservoir (stream positions count valid rows
+only), and unfilled reservoir slots keep label 0, so the terminal concat
+needs no compaction.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.classifiers import _svm_solve_batch
+from repro.core.sampling import EPSILON_NET_C, epsilon_net_size
+from repro.engine.state import BatchCommLog, ProtocolInstance, _round_up
+
+ONEWAY_SELECTORS = ("sampling", "naive", "voting", "mixing")
+
+
+def _pack_shards(instances: Sequence[ProtocolInstance]):
+    """Pad a one-way sweep onto (B, k, n_max, d) label-0 static shapes.
+
+    All instances must share the party count k and dimension d (any d — no
+    direction grid anywhere in the one-way family); shard sizes may be
+    ragged.
+    """
+    assert instances, "need at least one instance"
+    ks = {len(inst.shards) for inst in instances}
+    assert len(ks) == 1, f"instances must share the party count, got {ks}"
+    k = ks.pop()
+    ds = {s[0].shape[1] for inst in instances for s in inst.shards}
+    assert len(ds) == 1, f"instances must share the dimension, got {ds}"
+    d = ds.pop()
+    B = len(instances)
+    n_max = _round_up(max(s[0].shape[0] for inst in instances
+                          for s in inst.shards), 8)
+    X = np.zeros((B, k, n_max, d), np.float32)
+    y = np.zeros((B, k, n_max), np.int32)
+    for b, inst in enumerate(instances):
+        for j, (Xs, ys) in enumerate(inst.shards):
+            n = Xs.shape[0]
+            assert set(np.unique(ys)).issubset({-1, 1}), "labels must be +-1"
+            X[b, j, :n] = Xs
+            y[b, j, :n] = ys
+    return jnp.asarray(X), jnp.asarray(y), k, d
+
+
+# ---------------------------------------------------------------------------
+# batched reservoir (Vitter 1985 on device)
+# ---------------------------------------------------------------------------
+
+def _make_ingest(cap: int):
+    """Single-instance shard ingest with static capacity bound ``cap``;
+    per-instance effective capacity ``capb`` ≤ cap masks the tail slots."""
+
+    def ingest(resX, resy, seen, key, Xi, yi, capb):
+        n_max = Xi.shape[0]
+        valid = yi != 0
+        # 1-based global stream position of each valid row (padding rows get
+        # a stale position but are masked out of every write below)
+        t = seen + jnp.cumsum(valid.astype(jnp.int32))
+        draw = jax.random.randint(key, (n_max,), 0, jnp.maximum(t, 1))
+        j = jnp.where(t <= capb, t - 1, draw)      # fill phase is positional
+        hit = valid & (j < capb)
+        # last-write-wins on slot collisions = sequential order: the slot
+        # keeps the item with the greatest stream position (scatter-max is
+        # well-defined under duplicate indices, unlike scatter-set)
+        tgt = jnp.where(hit, j, cap)               # out-of-range rows dropped
+        pos = jnp.where(hit, jnp.arange(n_max, dtype=jnp.int32), -1)
+        winner = (jnp.full((cap + 1,), -1, jnp.int32).at[tgt].max(pos))[:cap]
+        take = winner >= 0
+        safe = jnp.maximum(winner, 0)
+        resX = jnp.where(take[:, None], Xi[safe], resX)
+        resy = jnp.where(take, yi[safe], resy)
+        return resX, resy, seen + jnp.sum(valid, dtype=jnp.int32)
+
+    return ingest
+
+
+@functools.partial(jax.jit, static_argnames=("k", "cap", "steps", "stages"))
+def _run_sampling(X, y, caps, keys, lam0, *, k: int, cap: int,
+                  steps: int, stages: int):
+    """RANDOM ε-net chain (paper Thm 3.1, k-party Thm 6.1): P_i forwards a
+    reservoir over ∪_{j≤i} D_j; P_k fits on own ∪ reservoir."""
+    B, _, n_max, d = X.shape
+    resX = jnp.zeros((B, cap, d), X.dtype)
+    resy = jnp.zeros((B, cap), jnp.int32)
+    seen = jnp.zeros((B,), jnp.int32)
+    comm = BatchCommLog.zeros(B)
+    ingest = jax.vmap(_make_ingest(cap))
+
+    if k > 1:
+        hop_keys = jnp.swapaxes(
+            jax.vmap(lambda kk: jax.random.split(kk, k - 1))(keys), 0, 1)
+        Xs = jnp.swapaxes(X, 0, 1)[:-1]            # (k-1, B, n_max, d)
+        ys = jnp.swapaxes(y, 0, 1)[:-1]
+
+        def hop(carry, inp):
+            rX, ry, sn, cm = carry
+            Xi, yi, hk = inp
+            rX, ry, sn = ingest(rX, ry, sn, hk, Xi, yi, caps)
+            # the host loop's message slot: P_i ships its current reservoir
+            # (possibly empty — still one message) and the hop is one round
+            cm = cm._replace(points=cm.points + jnp.minimum(sn, caps),
+                             messages=cm.messages + 1,
+                             rounds=cm.rounds + 1)
+            return (rX, ry, sn, cm), None
+
+        (resX, resy, seen, comm), _ = lax.scan(
+            hop, (resX, resy, seen, comm), (Xs, ys, hop_keys))
+
+    Kx = jnp.concatenate([X[:, k - 1], resX], axis=1)
+    Ky = jnp.concatenate([y[:, k - 1], resy], axis=1)
+    w, b, ok = _svm_solve_batch(Kx, Ky.astype(Kx.dtype), lam0, steps, stages)
+    return w, b, ok, comm
+
+
+@functools.partial(jax.jit, static_argnames=("k", "steps", "stages"))
+def _run_naive(X, y, lam0, *, k: int, steps: int, stages: int):
+    """NAIVE: every node ships its whole shard to P_k; central fit."""
+    B, _, n_max, d = X.shape
+    Kx = X.reshape(B, k * n_max, d)
+    Ky = y.reshape(B, k * n_max)
+    w, b, ok = _svm_solve_batch(Kx, Ky.astype(Kx.dtype), lam0, steps, stages)
+    comm = _star_points_comm(y, k)
+    return w, b, ok, comm
+
+
+@functools.partial(jax.jit, static_argnames=("k", "steps", "stages"))
+def _run_voting(X, y, lam0, *, k: int, steps: int, stages: int):
+    """VOTING: B·k local fits as one batched solve; the vote is evaluated on
+    the full dataset, which the paper charges at full data cost."""
+    B, _, n_max, d = X.shape
+    w, b, ok = _svm_solve_batch(
+        X.reshape(B * k, n_max, d),
+        y.reshape(B * k, n_max).astype(X.dtype), lam0, steps, stages)
+    comm = _star_points_comm(y, k)
+    return w.reshape(B, k, d), b.reshape(B, k), ok.reshape(B, k), comm
+
+
+@functools.partial(jax.jit, static_argnames=("k", "steps", "stages"))
+def _run_mixing(X, y, lam0, *, k: int, steps: int, stages: int):
+    """MIXING: B·k local fits, ship normalized (w_i, b_i), average."""
+    B, _, n_max, d = X.shape
+    w, b, _ok = _svm_solve_batch(
+        X.reshape(B * k, n_max, d),
+        y.reshape(B * k, n_max).astype(X.dtype), lam0, steps, stages)
+    w = w.reshape(B, k, d)
+    b = b.reshape(B, k)
+    nrm = jnp.sqrt(jnp.sum(w * w, axis=2)) + 1e-12
+    w_mix = jnp.mean(w / nrm[:, :, None], axis=1)
+    b_mix = jnp.mean(b / nrm, axis=1)
+    z = jnp.zeros((B,), jnp.int32)
+    comm = BatchCommLog(points=z, scalars=z + (k - 1) * (d + 1), bits=z,
+                        messages=z + (k - 1), rounds=z + 1)
+    return w_mix, b_mix, comm
+
+
+def _star_points_comm(y, k: int) -> BatchCommLog:
+    """k−1 star messages into P_k carrying every non-last shard's points —
+    the NAIVE/VOTING cost row of Tables 2–4 (empty shards still cost their
+    message slot, matching ``Node.send_points``)."""
+    B = y.shape[0]
+    pts = jnp.sum(jnp.sum(y[:, :-1] != 0, axis=2), axis=1).astype(jnp.int32)
+    z = jnp.zeros((B,), jnp.int32)
+    return BatchCommLog(points=pts, scalars=z, bits=z,
+                        messages=z + (k - 1), rounds=z + 1)
+
+
+# ---------------------------------------------------------------------------
+# sweep entry point
+# ---------------------------------------------------------------------------
+
+def run_instances(
+    instances: Sequence[ProtocolInstance],
+    *,
+    eps: Optional[float] = None,
+    vc_dim: Optional[int] = None,
+    c: Optional[float] = None,
+    steps: int = 2000,
+    stages: int = 3,
+    lam: float = 1e-3,
+):
+    """Run a batch of one-way/baseline instances as one compiled dispatch.
+
+    All instances must share one selector (``run_sweep`` buckets mixed
+    sweeps).  Returns :class:`~repro.core.protocols.one_way.ProtocolResult`
+    per instance, shaped exactly like the retired host loops' (which survive
+    as differential oracles in ``benchmarks/legacy_oneway.py``).  ``vc_dim``
+    and ``c`` parameterize the ``"sampling"`` ε-net size exactly as on the
+    host API; per-instance RNG comes from ``ProtocolInstance.seed``.
+    """
+    from repro.core import classifiers as clf
+    from repro.core.protocols.one_way import ProtocolResult
+
+    sels = {inst.selector for inst in instances}
+    assert len(sels) == 1, f"one bucket must share a selector, got {sels}"
+    sel = sels.pop()
+    assert sel in ONEWAY_SELECTORS, sel
+    if eps is not None:
+        instances = [ProtocolInstance(inst.shards, eps, sel, inst.seed)
+                     for inst in instances]
+    X, y, k, d = _pack_shards(instances)
+    B = len(instances)
+    lam0 = jnp.float32(lam)
+
+    extra_common = {"engine": True, "batch": B, "selector": sel}
+    results: List[ProtocolResult] = []
+    if sel == "sampling":
+        vc = vc_dim if vc_dim is not None else d + 1
+        cc = c if c is not None else EPSILON_NET_C
+        sizes = [epsilon_net_size(inst.eps, vc, c=cc) for inst in instances]
+        cap = _round_up(max(sizes), 8)
+        caps = jnp.asarray(sizes, jnp.int32)
+        keys = jnp.stack([jax.random.PRNGKey(inst.seed)
+                          for inst in instances])
+        w, b, _ok, comm = _run_sampling(X, y, caps, keys, lam0, k=k, cap=cap,
+                                        steps=steps, stages=stages)
+        w = np.asarray(w, np.float64)
+        b = np.asarray(b, np.float64)
+        comm_np = type(comm)(*(np.asarray(a) for a in comm))
+        for i in range(B):
+            results.append(ProtocolResult(
+                clf.LinearSeparator(w[i], float(b[i])),
+                comm_np.summary(i, dim=d), rounds=k - 1, converged=True,
+                extra={**extra_common, "sample_size": sizes[i]}))
+        return results
+
+    if sel == "naive":
+        w, b, _ok, comm = _run_naive(X, y, lam0, k=k, steps=steps,
+                                     stages=stages)
+        w = np.asarray(w, np.float64)
+        b = np.asarray(b, np.float64)
+        comm_np = type(comm)(*(np.asarray(a) for a in comm))
+        for i in range(B):
+            results.append(ProtocolResult(
+                clf.LinearSeparator(w[i], float(b[i])),
+                comm_np.summary(i, dim=d), rounds=1, converged=True,
+                extra=dict(extra_common)))
+        return results
+
+    if sel == "voting":
+        from repro.core.protocols.baselines import _VotingClassifier
+        w, b, _ok, comm = _run_voting(X, y, lam0, k=k, steps=steps,
+                                      stages=stages)
+        w = np.asarray(w, np.float64)
+        b = np.asarray(b, np.float64)
+        comm_np = type(comm)(*(np.asarray(a) for a in comm))
+        for i in range(B):
+            parts = [clf.LinearSeparator(w[i, j], float(b[i, j]))
+                     for j in range(k)]
+            results.append(ProtocolResult(
+                _VotingClassifier(parts),
+                comm_np.summary(i, dim=d), rounds=1, converged=True,
+                extra=dict(extra_common)))
+        return results
+
+    # mixing
+    from repro.core.protocols.baselines import _MixedClassifier
+    w, b, comm = _run_mixing(X, y, lam0, k=k, steps=steps, stages=stages)
+    w = np.asarray(w, np.float64)
+    b = np.asarray(b, np.float64)
+    comm_np = type(comm)(*(np.asarray(a) for a in comm))
+    for i in range(B):
+        results.append(ProtocolResult(
+            _MixedClassifier(w[i], float(b[i])),
+            comm_np.summary(i, dim=d), rounds=1, converged=True,
+            extra=dict(extra_common)))
+    return results

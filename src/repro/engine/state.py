@@ -124,13 +124,17 @@ class MaxMargState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class ProtocolInstance:
-    """One protocol problem: k shards plus an error budget ε and a support
-    selector ("median" or "maxmarg") — the scenario spec the engine
-    dispatches on."""
+    """One protocol problem: k shards plus an error budget ε and a selector
+    — the scenario spec the engine dispatches on.  Selectors are the two-way
+    support selectors ("median", "maxmarg") and the one-way/baseline
+    families ("sampling", "naive", "voting", "mixing";
+    :mod:`repro.engine.oneway`).  ``seed`` keys per-instance randomness
+    (only the "sampling" reservoir uses it)."""
 
     shards: Sequence[Tuple[np.ndarray, np.ndarray]]
     eps: float = 0.05
     selector: str = "median"
+    seed: int = 0
 
 
 def _round_up(x: int, mult: int) -> int:

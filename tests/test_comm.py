@@ -76,8 +76,33 @@ def test_commstats_nbytes_matches_message_sum():
     s = log.stats
     # 5 points of (2 dims + label) float32s + 4 scalars + 2 bits -> 1 byte
     assert s.nbytes(2) == 5 * (2 + 1) * 4 + 4 * 4 + 1
-    # aggregate packs bits across messages; per-message rounding can only add
+    # canonical per-message attribution (packed-stream deltas) sums exactly
+    assert sum(log.message_nbytes()) == s.nbytes(2) == log.summary()["bytes"]
+    # standalone-message ceiling is an upper bound, never the canon
     assert sum(m.nbytes(2) for m in log.messages) >= s.nbytes(2)
+
+
+def test_message_nbytes_packed_on_two_way_trace():
+    """Regression for the rounding drift: replay a two-way-shaped trace
+    (support points + direction scalars + one accept bit per turn, the
+    MAXMARG/MEDIAN message slots) and require per-message bytes to sum to
+    summary()["bytes"] exactly.  Ceiling each 1-bit vote alone would charge
+    a full byte per turn and overshoot by rounds-1 bytes."""
+    nodes, log = make_nodes(_shards(d=2, n=30))
+    a, b = nodes
+    rounds = 5
+    for r in range(rounds):
+        log.new_round()
+        src, dst = (a, b) if r % 2 == 0 else (b, a)
+        src.send_points(dst, src.X[:2], src.y[:2], tag="support")
+        src.send_scalars(dst, np.zeros(4), tag="direction")
+        dst.send_bit(src, 0, tag="accept")
+    per_msg = log.message_nbytes()
+    assert len(per_msg) == log.stats.messages == 3 * rounds
+    assert sum(per_msg) == log.summary()["bytes"]
+    # 5 one-bit votes pack into 1 byte in the aggregate, not 5
+    naive_sum = sum(m.nbytes(2) for m in log.messages)
+    assert naive_sum - sum(per_msg) == rounds - 1
 
 
 def test_empty_message_nbytes_zero_but_counted():

@@ -1,0 +1,176 @@
+"""Engine one-way/baselines path: host-oracle comm parity, B=1 delegation,
+mixed-sweep dispatch, and the rounds-metering contract across families.
+
+The acceptance bar: across a grid per selector, the batched engine must
+produce *identical* comm dicts (points/scalars/bits/messages/rounds/bytes)
+and rounds to the retired host loops (``benchmarks/legacy_oneway.py``), the
+public APIs must be the engine at B=1 exactly, and ``engine.run_sweep`` must
+dispatch a mixed one-way + MEDIAN + MAXMARG grid in one call.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro import engine
+from repro.core import datasets
+from repro.core.protocols import baselines, kparty, one_way, two_way
+
+from benchmarks.legacy_oneway import HOSTLOOPS
+from conftest import global_err
+
+SELECTORS = tuple(engine.oneway.ONEWAY_SELECTORS)
+
+
+def _grid(selector, k=2, n=80):
+    """Instances per selector: dataset × ε × seed (12 per selector)."""
+    out = []
+    for gen in (datasets.data1, datasets.data2, datasets.data3):
+        for eps in (0.1, 0.05):
+            for seed in (0, 1):
+                out.append(engine.ProtocolInstance(
+                    gen(n_per_node=n, k=k, seed=seed), eps, selector, seed))
+    return out
+
+
+@pytest.mark.parametrize("selector", SELECTORS)
+@pytest.mark.parametrize("k", [2, 4])
+def test_engine_matches_legacy_oracle_comm(selector, k):
+    insts = _grid(selector, k=k, n=60)
+    batched = engine.oneway.run_instances(insts)
+    for inst, rb in zip(insts, batched):
+        rl = HOSTLOOPS[selector](inst.shards, inst.eps, inst.seed)
+        assert rb.comm == rl.comm, (selector, inst.eps, rb.comm, rl.comm)
+        assert rb.rounds == rl.rounds == rb.comm["rounds"]
+        assert rb.converged == rl.converged
+
+
+@pytest.mark.parametrize("selector", SELECTORS)
+def test_batched_matches_b1_delegation(selector):
+    insts = _grid(selector)
+    batched = engine.oneway.run_instances(insts)
+    api = {
+        "sampling": lambda i: one_way.random_sampling(i.shards, eps=i.eps,
+                                                      seed=i.seed),
+        "naive": lambda i: baselines.naive(i.shards),
+        "voting": lambda i: baselines.voting(i.shards),
+        "mixing": lambda i: baselines.mixing(i.shards),
+    }[selector]
+    for inst, rb in zip(insts, batched):
+        r1 = api(inst)
+        assert r1.extra and r1.extra.get("engine") and r1.extra["batch"] == 1
+        assert rb.comm == r1.comm
+        assert rb.rounds == r1.rounds and rb.converged == r1.converged
+
+
+def test_sampling_reaches_eps_and_beats_naive():
+    """Thm 3.1/6.1 on the engine: ε-net error with sub-naive communication."""
+    eps, fails = 0.1, 0
+    for seed in range(5):
+        shards = datasets.data1(n_per_node=300, k=4, seed=seed)
+        r = one_way.random_sampling(shards, eps=eps, seed=seed)
+        if global_err(r.classifier, shards) > eps:
+            fails += 1
+        assert r.extra["sample_size"] < 300
+        assert r.comm["rounds"] == r.rounds == 3
+    assert fails <= 1  # 'with constant probability'
+
+
+def test_padding_invariance_oneway():
+    """An instance's outcome must not depend on its batch neighbours."""
+    small = engine.ProtocolInstance(
+        datasets.data1(n_per_node=40, k=2, seed=3), 0.1, "sampling", 3)
+    big = engine.ProtocolInstance(
+        datasets.data3(n_per_node=160, k=2, seed=4), 0.02, "sampling", 4)
+    alone = engine.oneway.run_instances([small])[0]
+    padded = engine.oneway.run_instances([small, big])[0]
+    assert alone.comm == padded.comm
+    assert np.allclose(alone.classifier.w, padded.classifier.w)
+
+
+def test_run_sweep_mixed_grid_all_three_paths():
+    """One run_sweep call dispatches one-way + MEDIAN + MAXMARG instances
+    and returns results in input order, each equal to its homogeneous run."""
+    shards2 = datasets.data1(n_per_node=80, k=2, seed=0)
+    shards3 = datasets.data3(n_per_node=80, k=2, seed=1)
+    insts = [
+        engine.ProtocolInstance(shards2, 0.05, "naive"),
+        engine.ProtocolInstance(shards2, 0.05, "median"),
+        engine.ProtocolInstance(shards3, 0.1, "sampling", 7),
+        engine.ProtocolInstance(shards2, 0.05, "maxmarg"),
+        engine.ProtocolInstance(shards3, 0.05, "voting"),
+        engine.ProtocolInstance(shards3, 0.05, "mixing"),
+    ]
+    out = engine.run_sweep(insts, max_epochs=24, n_angles=256)
+    assert [r.extra.get("selector", "median") if r.extra else "median"
+            for r in out] == ["naive", "median", "sampling", "maxmarg",
+                              "voting", "mixing"]
+    for i in (0, 2, 4, 5):
+        solo = engine.oneway.run_instances([insts[i]])[0]
+        assert out[i].comm == solo.comm and out[i].rounds == solo.rounds
+    with pytest.raises(TypeError):
+        engine.run_sweep(insts[:1], cut_kernel=True)  # no MEDIAN in sweep
+
+
+def test_rounds_metering_contract_all_families():
+    """Regression for the metering drift: every protocol family's
+    ``comm["rounds"]`` must agree with its ``ProtocolResult.rounds`` — the
+    one-way protocols and baselines used to report k-1 (or 1) rounds while
+    their logs said 0."""
+    shards = datasets.data1(n_per_node=60, k=3, seed=0)
+    one_way_family = [
+        one_way.threshold_protocol(datasets.threshold_instance(n=90, k=3)),
+        one_way.interval_protocol(datasets.interval_instance(n=90, k=3)),
+        one_way.rectangle_protocol(datasets.rectangle_instance(n=90, k=3)),
+        one_way.random_sampling(shards, eps=0.1),
+        one_way.local_only(shards),
+        baselines.naive(shards),
+        baselines.voting(shards),
+        baselines.random(shards, eps=0.1),
+        baselines.mixing(shards),
+    ]
+    for r in one_way_family:
+        assert r.comm["rounds"] == r.rounds, (r.rounds, r.comm)
+    # two-way meters *turns*; the rounds field counts epochs of k turns
+    for selector in ("median", "maxmarg"):
+        r = kparty.iterative_support_kparty(shards, eps=0.05,
+                                            selector=selector)
+        assert r.converged
+        k = len(shards)
+        assert k * (r.rounds - 1) < r.comm["rounds"] <= k * r.rounds
+    r = two_way.iterative_support_noisy(
+        datasets.add_label_noise(shards[:2], rate=0.03), eps=0.05)
+    assert r.comm["rounds"] == r.rounds
+
+
+def test_rectangle_all_negative_shards_degenerate():
+    """Regression: positives empty on *every* shard used to crash in
+    ``AxisAlignedRectangle.from_bounds(None, ...)``; the paper's ∅ sentinel
+    must yield the degenerate always-negative rectangle instead."""
+    rng = np.random.default_rng(0)
+    shards = [(rng.uniform(-1, 1, size=(20, 3)), -np.ones(20, np.int32))
+              for _ in range(3)]
+    r = one_way.rectangle_protocol(shards)
+    assert global_err(r.classifier, shards) == 0.0
+    probe = rng.uniform(-5, 5, size=(64, 3))
+    assert np.all(r.classifier.predict(probe) == -1)
+    assert r.comm["rounds"] == r.rounds == 2
+    # no data at all still degrades gracefully (both sentinels ∅)
+    empty = [(np.zeros((0, 3)), np.zeros((0,), np.int32)) for _ in range(2)]
+    r0 = one_way.rectangle_protocol(empty)
+    assert np.all(r0.classifier.predict(probe) == -1)
+
+
+def test_custom_fit_runs_metered_host_path():
+    """A custom fit callable keeps the host chain alive with identical
+    metering to the engine delegation."""
+    shards = datasets.data1(n_per_node=50, k=2, seed=0)
+    from repro.core import classifiers as clf
+    r_host = baselines.naive(shards, fit=clf.fit_max_margin)
+    r_eng = baselines.naive(shards)
+    assert not (r_host.extra or {}).get("engine")
+    assert r_host.comm == r_eng.comm and r_host.rounds == r_eng.rounds

@@ -108,6 +108,19 @@ def test_threshold_single_class_shards(seed):
     assert global_err(r.classifier, shards) == 0.0
 
 
+@given(st.integers(1, 4), st.integers(2, 4), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_rectangle_no_positives_anywhere(d, k, seed):
+    """∅ sentinel on the positive class across EVERY shard (used to raise
+    TypeError): the result must be the always-negative rectangle."""
+    rng = np.random.default_rng(seed)
+    shards = [(rng.uniform(-1, 1, size=(15, d)), -np.ones(15, np.int32))
+              for _ in range(k)]
+    r = one_way.rectangle_protocol(shards)
+    assert global_err(r.classifier, shards) == 0.0
+    assert np.all(r.classifier.predict(rng.uniform(-3, 3, size=(40, d))) == -1)
+
+
 @given(st.integers(1, 4), st.integers(0, 10_000))
 @settings(max_examples=25, deadline=None)
 def test_rectangle_one_class_missing(d, seed):

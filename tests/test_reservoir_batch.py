@@ -57,6 +57,74 @@ def test_add_batch_uniform_inclusion():
     assert np.all(np.abs(freq - k / n) < 0.05)
 
 
+def _chain_chi_square(include_counts, trials, cap, n):
+    """Chi-square statistic of per-item inclusion counts against Vitter's
+    uniform k/t = cap/n, with the per-item binomial variance."""
+    p = cap / n
+    exp = trials * p
+    var = trials * p * (1.0 - p)
+    return float(np.sum((include_counts - exp) ** 2) / var)
+
+
+def test_add_batch_chain_inclusion_chi_square():
+    """Statistical gate on the vectorized sampler: stream n items through a
+    *multi-shard chain* of add_batch calls (the k-party protocol's use) and
+    chi-square the per-item inclusion frequencies against Vitter's k/t.
+    Catches any bias from the fill-phase/fancy-assignment vectorization that
+    a membership test cannot see."""
+    cap, trials = 8, 4000
+    shard_sizes = (13, 9, 18, 8)          # ragged chain, n = 48
+    n = sum(shard_sizes)
+    counts = np.zeros(n)
+    for t in range(trials):
+        res = sampling.Reservoir(cap, dim=1, rng=np.random.default_rng(t))
+        start = 0
+        for sz in shard_sizes:
+            X = np.arange(start, start + sz, dtype=float).reshape(-1, 1)
+            res.add_batch(X, np.ones(sz, np.int32))
+            start += sz
+        RX, _ = res.sample()
+        counts[RX.reshape(-1).astype(int)] += 1
+    chi2 = _chain_chi_square(counts, trials, cap, n)
+    # df = n-1 = 47: mean 47, sd ~9.7; 47 + 5 sd ≈ 96 — a generous gate that
+    # still fails hard for e.g. a fill-phase item never being evicted
+    assert chi2 < 100.0, (chi2, counts / trials)
+
+
+def test_engine_reservoir_chain_inclusion_chi_square():
+    """The engine's on-device sampler must draw from the same distribution:
+    same multi-shard chain, jax.random keys, chi-square vs cap/n."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.engine.oneway import _make_ingest
+
+    cap, trials = 8, 2000
+    shard_sizes = (13, 9, 18, 8)
+    n = sum(shard_sizes)
+    ingest = jax.jit(_make_ingest(cap))
+    counts = np.zeros(n)
+    shards = []
+    start = 0
+    for sz in shard_sizes:
+        shards.append(jnp.arange(start, start + sz, dtype=jnp.float32
+                                 ).reshape(-1, 1))
+        start += sz
+    labels = [jnp.ones(sz, jnp.int32) for sz in shard_sizes]
+    for t in range(trials):
+        key = jax.random.PRNGKey(t)
+        resX = jnp.zeros((cap, 1), jnp.float32)
+        resy = jnp.zeros((cap,), jnp.int32)
+        seen = jnp.zeros((), jnp.int32)
+        for hop, (Xi, yi) in enumerate(zip(shards, labels)):
+            key, sub = jax.random.split(key)
+            resX, resy, seen = ingest(resX, resy, seen, sub, Xi, yi,
+                                      jnp.int32(cap))
+        counts[np.asarray(resX).reshape(-1).astype(int)] += 1
+    chi2 = _chain_chi_square(counts, trials, cap, n)
+    assert chi2 < 100.0, (chi2, counts / trials)
+
+
 def test_add_batch_matches_sequential_distribution():
     """Batched and sequential ingestion draw from the same distribution:
     compare per-item inclusion frequencies."""
