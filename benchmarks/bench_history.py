@@ -1,0 +1,109 @@
+"""Fold the per-PR BENCH_*.json headline numbers into BENCH_history.json.
+
+Each PR's sweep benchmarks overwrite their BENCH_*.json acceptance records,
+which loses the trajectory — whether `batched_s` kept improving or quietly
+regressed across PRs.  This tool extracts the headline series from the
+current BENCH artifacts and appends (or replaces, keyed by ``--label``) one
+entry in a single cumulative BENCH_history.json, so speedups are *tracked*
+across PRs instead of overwritten.
+
+The history file's shape is a schema-gated contract
+(``check_bench_schema.py BENCH_history.json``), like the per-PR artifacts.
+
+Usage:
+  python benchmarks/bench_history.py --label pr4
+  python benchmarks/bench_history.py --label ci-smoke --tiny \
+      --out BENCH_history.ci.json      # CI: smoke-size fold, never commits
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# per-benchmark headline fields; optional fields are folded when present so
+# the history survives schema growth (e.g. the PR 4 hot-path series)
+HEADLINE = ("sequential_s", "batched_s", "speedup", "engine_b1_loop_s",
+            "speedup_vs_engine_b1")
+OPTIONAL = ("batched_cold_padded_s", "speedup_vs_cold_padded")
+BENCHES = ("engine", "maxmarg", "baselines")
+
+NOTES = (
+    "Cumulative per-PR headline series folded from BENCH_engine.json / "
+    "BENCH_maxmarg.json / BENCH_baselines.json by benchmarks/"
+    "bench_history.py.  One entry per label (latest fold wins); numbers "
+    "are machine-local wall-clocks, so compare across entries only when "
+    "they were folded on the same machine."
+)
+
+
+def extract(path: str) -> Optional[Dict]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        report = json.load(f)
+    out = {}
+    for field in HEADLINE:
+        if field in report:
+            out[field] = report[field]
+    for field in OPTIONAL:
+        if field in report:
+            out[field] = report[field]
+    out["instances"] = report.get("instances")
+    out["parity_ok"] = bool(
+        report.get("parity_b1_ok")
+        and not report.get("legacy_oracle_disagreements")
+        and not report.get("warm_cold_mismatch_indices"))
+    return out
+
+
+def fold(label: str, bench_dir: str, out_path: str,
+         tiny: bool = False) -> Dict:
+    suffix = ".tiny.json" if tiny else ".json"
+    benches = {}
+    for name in BENCHES:
+        entry = extract(os.path.join(bench_dir, f"BENCH_{name}{suffix}"))
+        if entry is not None:
+            benches[name] = entry
+    if not benches:
+        raise SystemExit(f"no BENCH_*{suffix} artifacts found in {bench_dir}")
+
+    history = {"notes": NOTES, "entries": []}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            history = json.load(f)
+    history["notes"] = NOTES
+    entry = {"label": label, "tiny": tiny, "benches": benches}
+    entries: List[Dict] = [e for e in history.get("entries", [])
+                           if e.get("label") != label]
+    entries.append(entry)
+    history["entries"] = entries
+    with open(out_path, "w") as f:
+        json.dump(history, f, indent=1)
+    return history
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="fold BENCH_*.json headlines into BENCH_history.json")
+    ap.add_argument("--label", required=True,
+                    help="entry key, e.g. pr4 (replaces an existing entry)")
+    ap.add_argument("--dir", default=ROOT,
+                    help="directory holding the BENCH_*.json artifacts")
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_history.json"))
+    ap.add_argument("--tiny", action="store_true",
+                    help="fold the .tiny.json smoke artifacts instead")
+    args = ap.parse_args()
+    history = fold(args.label, args.dir, args.out, tiny=args.tiny)
+    labels = [e["label"] for e in history["entries"]]
+    print(f"{args.out}: {len(history['entries'])} entr"
+          f"{'y' if len(labels) == 1 else 'ies'} ({', '.join(labels)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -36,6 +36,28 @@ COMMON_SCHEMA = {
     "per_instance": list,
 }
 
+# BENCH_maxmarg.json additionally carries the hot-path series (PR 4): the
+# cold-padded PR 2 execution model as in-file baseline, the per-layer
+# warm-vs-cold / compacted-vs-padded toggles, and the warm/cold decision
+# parity list (bar: empty).
+MAXMARG_EXTRA_SCHEMA = {
+    "max_support": int,
+    "batched_cold_padded_s": _NUM,
+    "speedup_vs_cold_padded": _NUM,
+    "warm_vs_cold": dict,
+    "compacted_vs_padded": dict,
+    "warm_cold_mismatch_indices": list,
+}
+
+WARM_COLD_SCHEMA = {"warm_s": _NUM, "cold_s": _NUM, "speedup": _NUM}
+COMPACT_SCHEMA = {"compacted_s": _NUM, "padded_s": _NUM, "speedup": _NUM}
+
+# BENCH_history.json: the cumulative per-PR headline series folded by
+# benchmarks/bench_history.py.
+HISTORY_ENTRY_SCHEMA = {"label": str, "tiny": bool, "benches": dict}
+HISTORY_BENCH_SCHEMA = {"batched_s": _NUM, "speedup": _NUM,
+                        "parity_ok": bool}
+
 PER_INSTANCE_SCHEMA = {
     "eps": _NUM,
     "converged": bool,
@@ -90,12 +112,50 @@ GAP_ENTRY_SCHEMA = {
 }
 
 
+def _check_history(path: str, report: dict) -> list:
+    errors = []
+
+    def expect(obj, field, typ, where):
+        if field not in obj:
+            errors.append(f"{where}: missing key {field!r}")
+        elif not isinstance(obj[field], typ):
+            errors.append(f"{where}: {field!r} has type "
+                          f"{type(obj[field]).__name__}, wanted {typ}")
+
+    expect(report, "notes", str, path)
+    entries = report.get("entries")
+    if not isinstance(entries, list) or not entries:
+        errors.append(f"{path}: entries is missing or empty")
+        return errors
+    for i, entry in enumerate(entries):
+        where = f"{path}[entries][{i}]"
+        for field, typ in HISTORY_ENTRY_SCHEMA.items():
+            expect(entry, field, typ, where)
+        benches = entry.get("benches") or {}
+        if not benches:
+            errors.append(f"{where}: benches is empty")
+        for name, bench in benches.items():
+            for field, typ in HISTORY_BENCH_SCHEMA.items():
+                expect(bench, field, typ, f"{where}[{name}]")
+            if bench.get("parity_ok") is not True:
+                errors.append(f"{where}[{name}]: parity_ok is not true")
+    labels = [e.get("label") for e in entries]
+    if len(labels) != len(set(labels)):
+        errors.append(f"{path}: duplicate entry labels: {labels}")
+    return errors
+
+
 def check(path: str) -> list:
     with open(path) as f:
         report = json.load(f)
+    if "history" in os.path.basename(path):
+        return _check_history(path, report)
     errors = []
     is_baselines = "baselines" in os.path.basename(path)
-    schema = BASELINES_SCHEMA if is_baselines else COMMON_SCHEMA
+    is_maxmarg = "maxmarg" in os.path.basename(path)
+    schema = BASELINES_SCHEMA if is_baselines else dict(COMMON_SCHEMA)
+    if is_maxmarg:
+        schema.update(MAXMARG_EXTRA_SCHEMA)
     per_inst = BASELINES_PER_INSTANCE if is_baselines else PER_INSTANCE_SCHEMA
     flags = ("parity_b1_ok", "all_converged",
              "all_gated_err_within_eps" if is_baselines
@@ -113,6 +173,13 @@ def check(path: str) -> list:
     for i, inst in enumerate(report.get("per_instance", [])):
         for field, typ in per_inst.items():
             expect(inst, field, typ, f"{path}[per_instance][{i}]")
+    if is_maxmarg:
+        for field, typ in WARM_COLD_SCHEMA.items():
+            expect(report.get("warm_vs_cold", {}), field, typ,
+                   f"{path}[warm_vs_cold]")
+        for field, typ in COMPACT_SCHEMA.items():
+            expect(report.get("compacted_vs_padded", {}), field, typ,
+                   f"{path}[compacted_vs_padded]")
 
     # size-independent invariants
     if report.get("per_instance") is not None and \
@@ -121,7 +188,10 @@ def check(path: str) -> list:
     for flag in flags:
         if report.get(flag) is not True:
             errors.append(f"{path}: {flag} is not true")
-    for lst in ("parity_b1_mismatch_indices", "legacy_oracle_disagreements"):
+    lists = ["parity_b1_mismatch_indices", "legacy_oracle_disagreements"]
+    if is_maxmarg:
+        lists.append("warm_cold_mismatch_indices")
+    for lst in lists:
         if report.get(lst):
             errors.append(f"{path}: {lst} is non-empty: {report[lst]}")
 

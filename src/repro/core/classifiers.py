@@ -178,13 +178,27 @@ def _svm_solve(X: jnp.ndarray, y: jnp.ndarray, lam: jnp.ndarray, steps: int = 20
     return w, b
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "stages"))
+# Warm-polish defaults: a quarter of a stage's step budget refines the
+# carried separator, and the eta schedule starts as if WARM_OFFSET steps had
+# already elapsed, so the first polish steps are gentle refinements instead
+# of the stage-restart kicks that would wipe out the warm iterate.
+WARM_STEPS = 500
+WARM_OFFSET = 1024.0
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "stages", "warm_steps",
+                                             "warm_offset"))
 def _svm_solve_batch(
     X: jnp.ndarray,                # (B, N, d) f32; rows with label 0 are padding
     y: jnp.ndarray,                # (B, N) f32 in {+1, -1, 0}
     lam0: jnp.ndarray,             # scalar f32 — stage-0 λ
     steps: int = 2000,
     stages: int = 3,
+    w0: Optional[jnp.ndarray] = None,    # (B, d) warm-init separator
+    b0: Optional[jnp.ndarray] = None,    # (B,)
+    warm_ok: Optional[jnp.ndarray] = None,   # (B,) bool — init is trustworthy
+    warm_steps: int = WARM_STEPS,
+    warm_offset: float = WARM_OFFSET,
 ):
     """Batched hard-margin-annealed Pegasos: B independent fits in lock-step.
 
@@ -200,6 +214,22 @@ def _svm_solve_batch(
     separate keep the last stage's iterate.  Label-0 rows are inert: they
     contribute no hinge violations and the gradient normalizes by the
     per-instance *valid* row count.
+
+    **Warm entry** (``w0``/``b0`` given, e.g. the previous MAXMARG turn's
+    separator): before the anneal, a short *polish* stage runs ``warm_steps``
+    Pegasos steps from (w0, b0) at the stage-0 λ — the λ whose optimum the
+    first-0-error latch keys to whenever separation is easy, so polish and
+    cold approximate the same fixed point — with the eta schedule
+    offset by ``warm_offset`` so the early steps refine instead of
+    re-initializing.  A polished instance that reaches 0 training error is
+    latched through the existing first-0-error latch — for it, every
+    annealing stage is skipped (the stage loop exits immediately once all
+    instances latch).  Instances whose polish does not separate fall through
+    to the cold anneal from zeros, bit-identically to the cold entry.  With
+    ``w0=None`` the computation is exactly the cold path.  Warm vs cold can
+    differ at the float level (two approximations of the same
+    transcript-determined hard-margin optimum), never at the decision level
+    on the tested grids — enforced by tests/test_maxmarg_warm.py.
 
     Returns ``(w, b, converged)`` with shapes (B, d), (B,), (B,) — already
     canonicalized to functional margin 1 at the support points (a positive
@@ -221,10 +251,10 @@ def _svm_solve_batch(
         m = y * decide(w, b)
         return jnp.min(jnp.where(valid, m, jnp.inf), axis=1)
 
-    def pegasos_stage(w, b, lam):
+    def pegasos_stage(w, b, lam, nsteps, t0=0.0):
         def body(i, carry):
             w, b = carry
-            eta = 1.0 / (lam * (i + 2.0))                       # (B,)
+            eta = 1.0 / (lam * (i + 2.0 + t0))                  # (B,)
             m = y * decide(w, b)
             viol = ((m < 1.0) & valid).astype(X.dtype)          # (B, N)
             vy = viol * y
@@ -238,7 +268,36 @@ def _svm_solve_batch(
             scale = jnp.minimum(1.0, (1.0 / jnp.sqrt(lam)) / (nrm + 1e-12))
             return w * scale[:, None], b * scale
 
-        return jax.lax.fori_loop(0, steps, body, (w, b))
+        # unroll=2 shaves the XLA:CPU loop-machinery overhead off the hot
+        # 2000-iteration dispatch; the op sequence (and so every float
+        # result) is bit-identical to the rolled loop
+        return jax.lax.fori_loop(0, nsteps, body, (w, b), unroll=2)
+
+    zeros_w = jnp.zeros((B, d), X.dtype)
+    zeros_b = jnp.zeros((B,), X.dtype)
+    if w0 is not None:
+        # polish: refine the carried separator at the *stage-0* λ — the
+        # stage the first-0-error latch keys to whenever separation is easy,
+        # so polish and cold approximate the same regularized optimum.  The
+        # latch is gated on the *carried* separator already classifying the
+        # fit set cleanly: only then is the refit optimum a small
+        # perturbation the short polish reliably tracks — an init with
+        # training errors falls through to the cold anneal instead (a
+        # half-converged cold iterate's decisions are not reproducible from
+        # a different starting point).
+        ok0 = margins_min(w0.astype(X.dtype), b0.astype(X.dtype)) > 0.0
+        if warm_ok is not None:
+            ok0 = ok0 & warm_ok
+        lam_p = jnp.full((B,), lam0, X.dtype)
+        w_p, b_p = pegasos_stage(w0.astype(X.dtype), b0.astype(X.dtype),
+                                 lam_p, warm_steps, jnp.float32(warm_offset))
+        ok_p = ok0 & (margins_min(w_p, b_p) > 0.0)
+        found0 = ok_p
+        w_best0 = jnp.where(ok_p[:, None], w_p, zeros_w)
+        b_best0 = jnp.where(ok_p, b_p, zeros_b)
+    else:
+        found0 = jnp.zeros((B,), bool)
+        w_best0, b_best0 = zeros_w, zeros_b
 
     def stage_cond(carry):
         s, _w, _b, _wb, _bb, found = carry
@@ -249,19 +308,17 @@ def _svm_solve_batch(
     def stage(carry):
         s, w, b, w_best, b_best, found = carry
         lam_s = lam0 * 0.1 ** s.astype(X.dtype)
-        w, b = pegasos_stage(w, b, jnp.full((B,), lam_s, X.dtype))
+        w, b = pegasos_stage(w, b, jnp.full((B,), lam_s, X.dtype), steps)
         ok = margins_min(w, b) > 0.0
         take = ok & ~found
         w_best = jnp.where(take[:, None], w, w_best)
         b_best = jnp.where(take, b, b_best)
         return (s + 1, w, b, w_best, b_best, found | ok)
 
-    zeros_w = jnp.zeros((B, d), X.dtype)
-    zeros_b = jnp.zeros((B,), X.dtype)
     _, w, b, w_best, b_best, found = jax.lax.while_loop(
         stage_cond, stage,
-        (jnp.zeros((), jnp.int32), zeros_w, zeros_b, zeros_w, zeros_b,
-         jnp.zeros((B,), bool)))
+        (jnp.zeros((), jnp.int32), zeros_w, zeros_b, w_best0, b_best0,
+         found0))
     w = jnp.where(found[:, None], w_best, w)
     b = jnp.where(found, b_best, b)
 

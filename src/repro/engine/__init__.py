@@ -53,7 +53,8 @@ def run_sweep(instances, **kwargs):
     """
     _FIT = ("steps", "stages", "lam")
     _ALLOWED = {
-        "maxmarg": ("eps", "max_epochs", "max_support") + _FIT,
+        "maxmarg": ("eps", "max_epochs", "max_support", "warm", "compact",
+                    "fused_kernel") + _FIT,
         "median": ("eps", "n_angles", "max_epochs", "cut_kernel"),
         "sampling": ("eps", "vc_dim", "c") + _FIT,
         "naive": _FIT,

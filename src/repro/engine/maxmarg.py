@@ -27,6 +27,18 @@ Padding follows the engine conventions (DESIGN.md): label-0 rows are inert
 in the fit (no hinge contribution, gradient normalized by the valid count)
 and in every masked selection; transcripts are received-points-only, matching
 the host loop's ``Node.recv``.
+
+Hot path (DESIGN.md §warm-start & transcript compaction): ``run_hot`` drives
+the same ``step`` from the host one turn at a time so it can (a) warm-start
+every refit from the previous turn's separator threaded through
+``MaxMargState.h_w``/``h_b``/``h_valid``, (b) slice the coordinator's
+transcript gather down to the bucket's live width (``w_fill``) instead of
+the worst-case capacity, and (c) drop finished instances from the dispatch.
+All three are decision-preserving — the hard-margin optimum is
+transcript-determined, so warm/compacted and the cold padded
+``run_compiled`` path agree on comm/rounds/convergence on every tested grid
+(tests/test_maxmarg_warm.py enforces it; ``run_instances(warm=False,
+compact=False)`` keeps the exact legacy-oracle execution model).
 """
 
 from __future__ import annotations
@@ -41,17 +53,16 @@ from jax import lax
 
 from repro.core.classifiers import _svm_solve_batch
 from repro.engine.state import (
-    BatchCommLog,
     EngineData,
     MaxMargState,
     ProtocolInstance,
+    _round_up,
     pack_instances_maxmarg,
 )
+from repro.kernels import ops, ref
 
 RTOL = 0.15          # active-margin band width, = classifiers.support_points
 VIOL_SHIP = 2        # most-violated points shipped per violated node
-
-_INF = jnp.inf
 
 
 def _append_block(wx, wy, fill, pts, labs, do):
@@ -71,13 +82,6 @@ def _append_block(wx, wy, fill, pts, labs, do):
 
     wx, wy = jax.vmap(upd)(wx, wy, fill, pts.astype(wx.dtype), labs)
     return wx, wy, fill + nvalid
-
-
-def _rank_smallest(key: jnp.ndarray) -> jnp.ndarray:
-    """Stable rank of each entry under ascending (key, index) order; key rows
-    are (B, N) with +inf marking excluded entries."""
-    order = jnp.argsort(key, axis=1, stable=True)
-    return jnp.argsort(order, axis=1, stable=True)
 
 
 def _compact_rows(X, y, sel, nsel, r, order=None):
@@ -107,9 +111,22 @@ def step(
     steps: int = 2000,
     stages: int = 3,
     lam0: float = 1e-3,
+    trans_width: Optional[int] = None,
+    warm: bool = False,
+    fused_kernel: bool = False,
 ) -> MaxMargState:
     """Advance every active instance by one MAXMARG turn (pure, jittable,
-    shape-stable — usable under jit/while_loop)."""
+    shape-stable — usable under jit/while_loop).
+
+    ``trans_width`` (static) compacts the coordinator-transcript gather to
+    the first ``trans_width`` rows — sound whenever it covers every active
+    instance's live fill (``run_hot`` guarantees this; ``None`` gathers the
+    full capacity).  ``warm`` (static) threads the previous turn's separator
+    into the refit's polish pre-stage.  ``fused_kernel`` (static) routes the
+    post-refit margin scan through the fused Pallas support/violation kernel
+    (``kernels.support_margin.maxmarg_turn_scan_batched``, the TPU artifact)
+    instead of its jnp reference — both produce identical integer decisions
+    (bit-for-bit tested)."""
     B = state.done.shape[0]
     n_max, d = data.X.shape[2], data.X.shape[3]
     ci = state.turn % k
@@ -121,18 +138,37 @@ def step(
     yc = jnp.take(data.y, ci, axis=1)                  # (B, n_max)
     Wxc = jnp.take(state.wx, ci, axis=1)               # (B, cap, d)
     Wyc = jnp.take(state.wy, ci, axis=1)               # (B, cap)
-    K = jnp.concatenate([Xc, Wxc], axis=1)             # (B, N, d)
-    yK = jnp.concatenate([yc, Wyc], axis=1)            # (B, N) i32
+    if trans_width is not None:                        # compacted gather
+        Wxc = Wxc[:, :trans_width]
+        Wyc = Wyc[:, :trans_width]
+    if Wxc.shape[1]:
+        K = jnp.concatenate([Xc, Wxc], axis=1)         # (B, N, d)
+        yK = jnp.concatenate([yc, Wyc], axis=1)        # (B, N) i32
+    else:                                              # empty transcripts
+        K, yK = Xc, yc
     yKf = yK.astype(K.dtype)
-    w, b, _ = _svm_solve_batch(K, yKf, jnp.float32(lam0), steps, stages)
+    if warm:
+        w, b, _ = _svm_solve_batch(
+            K, yKf, jnp.float32(lam0), steps, stages,
+            w0=state.h_w, b0=state.h_b, warm_ok=state.h_valid)
+    else:
+        w, b, _ = _svm_solve_batch(K, yKf, jnp.float32(lam0), steps, stages)
+
+    # -- 2-4 scans: one fused pass over the proposal --------------------------
+    # support band ranks on the fit set, per-node error counts, and per-node
+    # most-violated ranks — the Pallas kernel and its vmap reference return
+    # identical int32 decisions (tests/test_kernels.py)
+    if fused_kernel:
+        sup_rank, err_k, viol_rank = ops.support_violation_batch(
+            w, b, K, yK, data.X, data.y, rtol=RTOL,
+            max_support=max_support, viol_ship=VIOL_SHIP)
+    else:
+        sup_rank, err_k, viol_rank = ref.maxmarg_turn_batch_ref(
+            w, b, K, yK, data.X, data.y, rtol=RTOL,
+            max_support=max_support, viol_ship=VIOL_SHIP)
 
     # -- 2. active-margin support points --------------------------------------
-    valid = yK != 0
-    m = yKf * (jnp.einsum("bnd,bd->bn", K, w) + b[:, None])
-    m_val = jnp.where(valid, m, _INF)
-    mmin = jnp.maximum(jnp.min(m_val, axis=1), 1e-12)
-    band = valid & (m <= (mmin * (1.0 + RTOL))[:, None])
-    sel = band & (_rank_smallest(jnp.where(band, m, _INF)) < max_support)
+    sel = sup_rank < max_support
     nsel = jnp.sum(sel, axis=1).astype(jnp.int32)
     S_pts, S_lab = _compact_rows(K, yK, sel, nsel, max_support)
 
@@ -153,9 +189,6 @@ def step(
         w_fill = w_fill.at[:, j].set(fj)
 
     # -- 3. per-node error counts + all-clear bits --------------------------
-    dec = jnp.einsum("bknd,bd->bkn", data.X, w) + b[:, None, None]
-    pred = jnp.where(dec > 0, 1, -1)
-    err_k = jnp.sum((pred != data.y) & (data.y != 0), axis=2)     # (B, k)
     errs = jnp.sum(err_k, axis=1)
     comm = comm._replace(
         bits=comm.bits + jnp.where(active, k - 1, 0),
@@ -163,8 +196,6 @@ def step(
     )
 
     # -- 4. violated nodes ship their 2 most-violated points ----------------
-    m_all = data.y.astype(K.dtype) * dec
-    key_all = jnp.where(data.y != 0, m_all, _INF)                 # (B, k, n)
     n_valid_k = jnp.sum(data.y != 0, axis=2)
     node_ids = jnp.arange(k)[None, :]
     fire = active[:, None] & (node_ids != ci) & (err_k > 0)
@@ -177,8 +208,8 @@ def step(
     # one buffer at the traced index ci and scatter it back — k appends per
     # turn, not the k² a per-target loop would trace
     for i in range(k):
-        rank_i = _rank_smallest(key_all[:, i])
-        sel_i = (data.y[:, i] != 0) & (rank_i < VIOL_SHIP)
+        rank_i = viol_rank[:, i]
+        sel_i = rank_i < VIOL_SHIP
         V_pts, V_lab = _compact_rows(data.X[:, i], data.y[:, i], sel_i,
                                      nv[:, i], VIOL_SHIP, order=rank_i)
         wxc, wyc2, fc = _append_block(
@@ -190,6 +221,11 @@ def step(
 
     # -- 5. ε-termination + hypothesis bookkeeping --------------------------
     term = active & (errs <= data.budget)
+    # can the next turn's coordinator warm-start?  Only if this proposal
+    # already classifies its shard cleanly (necessary for the polish latch's
+    # clean-carried-separator gate) — the hot runner reads this to skip
+    # polish dispatches that provably cannot latch
+    err_next = jnp.take(err_k, (ci + 1) % k, axis=1)
     return MaxMargState(
         wx=wx, wy=wy, w_fill=w_fill,
         turn=state.turn + 1,
@@ -198,12 +234,15 @@ def step(
         epochs=jnp.where(term, state.turn // k + 1, state.epochs),
         h_w=jnp.where(active[:, None], w, state.h_w),
         h_b=jnp.where(active, b, state.h_b),
+        h_valid=state.h_valid | active,
+        warm_next=jnp.where(active, err_next == 0, state.warm_next),
         comm=comm,
     )
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "k", "max_turns", "max_support", "steps", "stages"))
+    "k", "max_turns", "max_support", "steps", "stages", "warm",
+    "fused_kernel"))
 def run_compiled(
     data: EngineData,
     state0: MaxMargState,
@@ -214,18 +253,178 @@ def run_compiled(
     steps: int = 2000,
     stages: int = 3,
     lam0: float = 1e-3,
+    warm: bool = False,
+    fused_kernel: bool = False,
 ) -> MaxMargState:
     """The whole MAXMARG sweep as one device computation: while_loop over
-    ``step`` until every instance terminates or the turn budget runs out."""
+    ``step`` until every instance terminates or the turn budget runs out.
+    Always solves at the full padded transcript width — with ``warm=False``
+    (the default) this is the exact pre-compaction execution model, kept as
+    the legacy-parity reference for the hot path."""
 
     def cond(s: MaxMargState):
         return (s.turn < max_turns) & ~jnp.all(s.done)
 
     def body(s: MaxMargState):
         return step(data, s, k=k, max_support=max_support, steps=steps,
-                    stages=stages, lam0=lam0)
+                    stages=stages, lam0=lam0, warm=warm,
+                    fused_kernel=fused_kernel)
 
     return lax.while_loop(cond, body, state0)
+
+
+_step_jit = jax.jit(step, static_argnames=(
+    "k", "max_support", "steps", "stages", "trans_width", "warm",
+    "fused_kernel"))
+
+
+def _take_instances(tree, idx):
+    """Gather instance rows ``idx`` from every (B, ...) leaf (scalar leaves —
+    the shared turn counter — pass through).  Out-of-range indices gather
+    zero-filled rows: an all-label-0 instance is the engine's inert element
+    (no valid fit rows ⇒ the solver latches it immediately with an infinite
+    min margin, every masked selection is empty), which is exactly what the
+    hot turn's padding rows must be."""
+    return jax.tree_util.tree_map(
+        lambda a: a if a.ndim == 0
+        else jnp.take(a, idx, axis=0, mode="fill", fill_value=0), tree)
+
+
+def _put_instances(full, sub, idx):
+    """Scatter ``sub`` rows back into ``full`` at ``idx`` (scalar leaves take
+    the sub value — the advanced turn counter).  Padding rows carry an
+    out-of-range index, which a JAX scatter *drops*, so they never land."""
+    return jax.tree_util.tree_map(
+        lambda f, s: s if f.ndim == 0 else f.at[idx].set(s), full, sub)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "max_support", "steps", "stages", "trans_width", "warm",
+    "fused_kernel"))
+def _hot_turn(
+    data: EngineData,
+    state: MaxMargState,
+    idx: jnp.ndarray,       # (n_pad,) i32 — active rows, tail = B (dropped)
+    n_act: jnp.ndarray,     # () i32 — live prefix of idx
+    *,
+    k: int,
+    max_support: int,
+    steps: int,
+    stages: int,
+    lam0: float,
+    trans_width: int,
+    warm: bool,
+    fused_kernel: bool,
+) -> MaxMargState:
+    """One compacted turn as a single dispatch: gather the active instances,
+    advance them by one ``step`` at the compacted transcript width, scatter
+    the results back.  Fusing the gather/scatter into the turn's jit keeps
+    the host loop at one device computation per turn (eager per-leaf
+    scatters cost more than the refit they wrap on CPU)."""
+    sub_data = _take_instances(data, idx)
+    sub = _take_instances(state, idx)
+    # tail rows (idx == B, gathered zero-filled) are inert: done=True masks
+    # them out of every decision and comm update, and h_valid=True lets the
+    # warm polish latch them instantly (zero data ⇒ infinite min margin), so
+    # padding can never force an annealing stage the live rows don't need
+    pad_row = jnp.arange(idx.shape[0]) >= n_act
+    sub = sub._replace(done=sub.done | pad_row,
+                       h_valid=sub.h_valid | pad_row)
+    sub = step(sub_data, sub, k=k, max_support=max_support, steps=steps,
+               stages=stages, lam0=lam0, trans_width=trans_width, warm=warm,
+               fused_kernel=fused_kernel)
+    return _put_instances(state, sub, idx)
+
+
+@jax.jit
+def _host_view(state: MaxMargState, ci: jnp.ndarray) -> jnp.ndarray:
+    """The hot loop's per-turn host knowledge as one (3, B) i32 transfer:
+    done flags, warm-carry flags, and the coordinator's transcript fills."""
+    return jnp.stack([state.done.astype(jnp.int32),
+                      state.warm_next.astype(jnp.int32),
+                      jnp.take(state.w_fill, ci, axis=1)])
+
+
+def run_hot(
+    data: EngineData,
+    state: MaxMargState,
+    *,
+    k: int,
+    max_turns: int,
+    max_support: int = 4,
+    steps: int = 2000,
+    stages: int = 3,
+    lam0: float = 1e-3,
+    warm: bool = True,
+    compact: bool = True,
+    fused_kernel: bool = False,
+) -> MaxMargState:
+    """The MAXMARG sweep as a host-driven turn loop over the jitted ``step``.
+
+    Relative to ``run_compiled`` (one while_loop at worst-case shapes) this
+    trades one dispatch per *turn* — protocol sweeps converge in a few
+    epochs — for the two compactions a while_loop cannot express, plus
+    warm-started refits:
+
+    * **width compaction**: the refit gathers the coordinator transcript at
+      ``round_up(max live fill, 8)`` rows instead of the full static
+      capacity, re-padding only when the bucket's max live length grows
+      (widths are monotone, so each sweep compiles a handful of step
+      variants that later sweeps of the same shape reuse);
+    * **batch compaction**: finished instances drop out of the dispatch
+      (the live set rounds up to a multiple of 4 with inert zero-filled
+      padding rows), so a long tail of unconverged instances stops paying
+      for the whole sweep's refit math;
+    * **warm refits** (``warm=True``): turn ≥ 1 refits polish the previous
+      turn's separator instead of annealing from zero (see
+      ``classifiers._svm_solve_batch``).
+
+    Per-instance results are identical in every protocol decision to
+    ``run_compiled`` — solver math differs only by float reassociation
+    across padding widths and by warm-vs-cold approximation of the same
+    transcript-determined optimum (tests/test_maxmarg_warm.py pins comm/
+    rounds/convergence and the canonicalized separator across both paths).
+    """
+    B = int(state.done.shape[0])
+    cap = int(state.wx.shape[2])
+    opts = dict(k=k, max_support=max_support, steps=steps, stages=stages,
+                lam0=lam0, fused_kernel=fused_kernel)
+    t = int(state.turn)                    # advanced host-side: one step = +1
+    while t < max_turns:
+        ci = t % k
+        # one packed transfer per turn for everything the host needs:
+        # done / warm-carry flags / the coordinator's live fills
+        done, warm_ok, fills = np.asarray(_host_view(state, ci))
+        if bool(done.all()):
+            break
+        act = np.flatnonzero(done == 0)
+        # polish only when it can latch: turn 0 has no separator to carry,
+        # and a turn where no live instance's carried separator cleanly
+        # classified the incoming coordinator's shard (warm_next) falls
+        # through to the cold anneal anyway — skip the polish dispatch
+        use_warm = warm and t > 0 and bool(warm_ok[act].any())
+        t += 1
+        if not compact:
+            state = _step_jit(data, state, trans_width=None, warm=use_warm,
+                              **opts)
+            continue
+        n_act = len(act)
+        width = min(cap, _round_up(int(fills[act].max(initial=0)), 8))
+        if n_act == B:
+            # full batch: the width compaction is the whole win — skip the
+            # gather/scatter round-trip entirely
+            state = _step_jit(data, state, trans_width=width, warm=use_warm,
+                              **opts)
+            continue
+        n_pad = min(B, _round_up(n_act, 4))
+        # tail indices point out of range: gathers fill them with inert
+        # all-label-0 rows, scatters drop them — so n_act stays a traced
+        # value and the compile cache keys only on (n_pad, width, warm)
+        idx = np.concatenate([act, np.full(n_pad - n_act, B)])
+        state = _hot_turn(data, state, jnp.asarray(idx, jnp.int32),
+                          jnp.int32(n_act), trans_width=width, warm=use_warm,
+                          **opts)
+    return state
 
 
 def run_instances(
@@ -237,24 +436,44 @@ def run_instances(
     steps: int = 2000,
     stages: int = 3,
     lam: float = 1e-3,
+    warm: bool = True,
+    compact: bool = True,
+    fused_kernel: Optional[bool] = None,
 ):
     """Run a batch of MAXMARG instances as one compiled sweep.
 
     Returns :class:`~repro.core.protocols.one_way.ProtocolResult` per
     instance, shaped exactly like the retired host loop's (which survives as
     the differential oracle in ``benchmarks/legacy_maxmarg.py``).
+
+    ``warm``/``compact`` select the hot path (``run_hot``); passing both as
+    False runs the single-dispatch cold padded ``run_compiled`` — the exact
+    pre-compaction execution model, kept for legacy-oracle parity and the
+    warm-vs-cold differential gate.  ``fused_kernel`` routes the per-turn
+    margin scans through the Pallas kernel (default: on TPU only, like the
+    MEDIAN selector's ``cut_kernel``).
     """
     from repro.core import classifiers as clf
     from repro.core.protocols.one_way import ProtocolResult
+    from repro.engine import dataplane
 
     if eps is not None:
         instances = [ProtocolInstance(inst.shards, eps, "maxmarg")
                      for inst in instances]
+    if fused_kernel is None:
+        fused_kernel = dataplane.use_pallas_default()
     data, state0, k, _cap = pack_instances_maxmarg(
         instances, max_epochs=max_epochs, max_support=max_support)
-    final = run_compiled(data, state0, k=k, max_turns=k * max_epochs,
-                         max_support=max_support, steps=steps, stages=stages,
-                         lam0=lam)
+    if warm or compact:
+        final = run_hot(data, state0, k=k, max_turns=k * max_epochs,
+                        max_support=max_support, steps=steps, stages=stages,
+                        lam0=lam, warm=warm, compact=compact,
+                        fused_kernel=fused_kernel)
+    else:
+        final = run_compiled(data, state0, k=k, max_turns=k * max_epochs,
+                             max_support=max_support, steps=steps,
+                             stages=stages, lam0=lam,
+                             fused_kernel=fused_kernel)
 
     converged = np.asarray(final.converged)
     epochs = np.asarray(final.epochs)
@@ -271,6 +490,6 @@ def run_instances(
             rounds=int(epochs[i]) if converged[i] else max_epochs,
             converged=bool(converged[i]),
             extra={"engine": True, "batch": len(instances),
-                   "selector": "maxmarg"},
+                   "selector": "maxmarg", "warm": warm, "compact": compact},
         ))
     return results

@@ -108,17 +108,30 @@ class MaxMargState(NamedTuple):
     maintaining a consistent-direction arc.  Transcripts hold *received*
     points only (the legacy host loop's ``Node.recv`` — MAXMARG nodes fit on
     own ∪ received, never on a sent-ledger).
+
+    Two fields carry the hot path's perf state between turns (DESIGN.md
+    §warm-start & transcript compaction): ``h_w``/``h_b`` double as the
+    *previous turn's separator* the warm-started refit polishes (gated by
+    ``h_valid`` — zeros are not a trustworthy warm init), and ``w_fill`` is
+    the per-instance *live transcript length* per node, from which the
+    host-driven runner picks the compacted refit width for each turn.
     """
 
     wx: jnp.ndarray         # (B, k, cap, d) f32 — received-point transcripts
     wy: jnp.ndarray         # (B, k, cap) i32 — transcript labels (0 = empty)
-    w_fill: jnp.ndarray     # (B, k) i32 — transcript fill counters
+    w_fill: jnp.ndarray     # (B, k) i32 — live transcript length per node
     turn: jnp.ndarray       # () i32 — global turn counter
     done: jnp.ndarray       # (B,) bool
     converged: jnp.ndarray  # (B,) bool
     epochs: jnp.ndarray     # (B,) i32 — 1-based epoch at termination
     h_w: jnp.ndarray        # (B, d) f32 — current hypothesis weights
     h_b: jnp.ndarray        # (B,) f32 — current hypothesis offset
+    h_valid: jnp.ndarray    # (B,) bool — (h_w, h_b) is a fitted separator
+    warm_next: jnp.ndarray  # (B,) bool — proposal cleanly classified the
+    #                         next coordinator's shard (necessary condition
+    #                         for the warm polish to latch; the hot runner
+    #                         skips the polish dispatch when no live
+    #                         instance has it)
     comm: BatchCommLog
 
 
@@ -186,24 +199,30 @@ def pack_instances_maxmarg(
         n_total = 0
         for j, (Xs, ys) in enumerate(inst.shards):
             n = Xs.shape[0]
-            assert set(np.unique(ys)).issubset({-1, 1}), "labels must be +-1"
+            assert (np.abs(ys) == 1).all(), "labels must be +-1"
             X[b, j, :n] = Xs
             y[b, j, :n] = ys
             n_total += n
         budget[b] = int(np.floor(inst.eps * n_total))
 
     data = EngineData(jnp.asarray(X), jnp.asarray(y), jnp.asarray(budget))
+    # numpy zeros for the initial state: the leaves upload at the first
+    # dispatch like any jit input, without one eager device op per field
+    # (a dozen tiny dispatches of pure overhead per sweep otherwise)
     state0 = MaxMargState(
-        wx=jnp.zeros((B, k, cap, d), jnp.float32),
-        wy=jnp.zeros((B, k, cap), jnp.int32),
-        w_fill=jnp.zeros((B, k), jnp.int32),
-        turn=jnp.zeros((), jnp.int32),
-        done=jnp.zeros((B,), bool),
-        converged=jnp.zeros((B,), bool),
-        epochs=jnp.zeros((B,), jnp.int32),
-        h_w=jnp.zeros((B, d), jnp.float32),
-        h_b=jnp.zeros((B,), jnp.float32),
-        comm=BatchCommLog.zeros(B),
+        wx=np.zeros((B, k, cap, d), np.float32),
+        wy=np.zeros((B, k, cap), np.int32),
+        w_fill=np.zeros((B, k), np.int32),
+        turn=np.zeros((), np.int32),
+        done=np.zeros((B,), bool),
+        converged=np.zeros((B,), bool),
+        epochs=np.zeros((B,), np.int32),
+        h_w=np.zeros((B, d), np.float32),
+        h_b=np.zeros((B,), np.float32),
+        h_valid=np.zeros((B,), bool),
+        warm_next=np.zeros((B,), bool),
+        comm=BatchCommLog(*(np.zeros((B,), np.int32)
+                            for _ in BatchCommLog._fields)),
     )
     return data, state0, k, cap
 
@@ -249,7 +268,7 @@ def pack_instances(
         n_total = 0
         for j, (Xs, ys) in enumerate(inst.shards):
             n = Xs.shape[0]
-            assert set(np.unique(ys)).issubset({-1, 1}), "labels must be +-1"
+            assert (np.abs(ys) == 1).all(), "labels must be +-1"
             X[b, j, :n] = Xs
             y[b, j, :n] = ys
             n_total += n

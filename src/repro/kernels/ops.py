@@ -206,6 +206,36 @@ def support_median_cut_batch(
     return out[:, :m]
 
 
+def support_violation_batch(
+    w: jnp.ndarray, b: jnp.ndarray, K: jnp.ndarray, yK: jnp.ndarray,
+    X: jnp.ndarray, y: jnp.ndarray, *,
+    rtol: float = 0.15, max_support: int = 4, viol_ship: int = 2,
+    interpret: Optional[bool] = None,
+):
+    """Fused MAXMARG turn scan (support band ranks + per-node error counts +
+    most-violated ranks) for a whole sweep; pads N/n/d (label-0 rows are
+    never band members, never valid, never miscounted) and restores the
+    reference's rank sentinels (N for non-band fit rows, n for invalid shard
+    rows) after slicing the padding off.  Returns
+    ``(sup_rank (B, N) i32, err_k (B, k) i32, viol_rank (B, k, n) i32)`` —
+    bit-for-bit ``ref.maxmarg_turn_batch_ref``."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    N, n = K.shape[1], X.shape[2]
+    Kp = _pad_to(_pad_to(K, 1, 8), 2, _LANE)
+    yKp = _pad_to(yK.astype(jnp.float32), 1, 8)
+    Xp = _pad_to(_pad_to(X, 2, 8), 3, _LANE)
+    yp = _pad_to(y.astype(jnp.float32), 2, 8)
+    wp = _pad_to(w, 1, _LANE)
+    sup, err, viol = _sm.maxmarg_turn_scan_batched(
+        wp, b, Kp, yKp, Xp, yp, rtol=rtol, max_support=max_support,
+        viol_ship=viol_ship, interpret=interpret)
+    # padded widths inflate the non-member sentinel; members rank < N (resp.
+    # n), so a min against the true width restores the reference sentinel
+    sup = jnp.minimum(sup[:, :N], N)
+    viol = jnp.minimum(viol[:, :, :n], n)
+    return sup, err, viol
+
+
 def support_uncertain_batch(
     V: jnp.ndarray, dir_ok: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
     X: jnp.ndarray, y: jnp.ndarray, *,

@@ -7,6 +7,7 @@ no online rescaling — used by the per-kernel ``assert_allclose`` sweeps in
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import Optional, Tuple
 
@@ -172,6 +173,73 @@ def median_cut_scores_ref(
     return jnp.where(dir_ok, jnp.minimum(below, above), -1).astype(jnp.int32)
 
 
+def _topr_ranks(key: jnp.ndarray, member: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Rank of the ``r`` smallest member entries under ascending (key, index)
+    order; everything else gets the sentinel ``n``.
+
+    Equivalent to a capped stable-argsort rank (exact ties resolve to the
+    lowest index — ``argmin`` returns the first minimum), but costs r
+    argmin+mask passes instead of a sort: r is a protocol constant (≤ 8
+    shipped support points), so this is the cheap CPU spelling of the same
+    integer decision the Pallas kernel computes via counting comparisons.
+    """
+    n = key.shape[0]
+    idx = jnp.arange(n)
+    k2 = jnp.where(member, key, jnp.inf)
+    out = jnp.full((n,), n, jnp.int32)
+    for t in range(r):
+        i = jnp.argmin(k2)
+        hit = (idx == i) & jnp.isfinite(k2[i])
+        out = jnp.where(hit, t, out)
+        k2 = jnp.where(hit, jnp.inf, k2)
+    return out
+
+
+def maxmarg_turn_ref(
+    w: jnp.ndarray,                # (d,) refit separator weights
+    b: jnp.ndarray,                # ()   refit separator offset
+    K: jnp.ndarray,                # (N, d) coordinator's own ∪ transcript
+    yK: jnp.ndarray,               # (N,) ±1 (0 = padding row)
+    X: jnp.ndarray,                # (k, n, d) per-node shards
+    y: jnp.ndarray,                # (k, n) ±1 (0 = padding row)
+    *,
+    rtol: float = 0.15,
+    max_support: int = 4,
+    viol_ship: int = 2,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One MAXMARG turn's fused margin scan (single instance; see the Pallas
+    kernel ``kernels.support_margin.maxmarg_turn_scan_batched``).
+
+    Returns integer decisions only, so the kernel matches bit-for-bit:
+
+    * ``sup_rank`` (N,) i32 — stable (margin, index) rank of the
+      ``max_support`` tightest fit-set rows *within the active-margin band*
+      (functional margin ≤ (1+rtol)·min); every other row gets the sentinel
+      N.  The caller's support selection is ``sup_rank < max_support`` and
+      the ranks are the host loop's ship order.
+    * ``err_k`` (k,) i32 — per-node error counts of the proposal (the
+      all-clear bit is ``err_k == 0``, the ε-termination sum ``err_k.sum()``).
+    * ``viol_rank`` (k, n) i32 — per-node stable margin rank of the
+      ``viol_ship`` most-violated valid rows (sentinel n elsewhere): both
+      the most-violated selection (``rank < viol_ship``) and the host
+      loop's ``argsort(m)[:2]`` wire order.
+    """
+    valid_K = yK != 0
+    mK = yK.astype(K.dtype) * (K @ w + b)
+    mmin = jnp.maximum(jnp.min(jnp.where(valid_K, mK, jnp.inf)), 1e-12)
+    band = valid_K & (mK <= mmin * (1.0 + rtol))
+    sup_rank = _topr_ranks(mK, band, max_support)
+
+    dec = X @ w + b                                      # (k, n)
+    pred = jnp.where(dec > 0, 1, -1)
+    valid = y != 0
+    err_k = jnp.sum((pred != y) & valid, axis=1).astype(jnp.int32)
+    m_all = y.astype(K.dtype) * dec
+    viol_rank = jax.vmap(
+        lambda key, mem: _topr_ranks(key, mem, viol_ship))(m_all, valid)
+    return sup_rank, err_k, viol_rank
+
+
 # Batched (sweep) oracles: the engine's CPU/interpret data-plane path and the
 # parity reference for the batch-grid Pallas kernels.  V is shared across the
 # batch; everything else carries a leading instance axis B.
@@ -184,3 +252,13 @@ uncertain_mask_batch_ref = jax.jit(
 
 median_cut_scores_batch_ref = jax.jit(
     jax.vmap(median_cut_scores_ref, in_axes=(None, 0, 0, 0, 0, 0)))
+
+@functools.partial(jax.jit, static_argnames=("rtol", "max_support",
+                                             "viol_ship"))
+def maxmarg_turn_batch_ref(w, b, K, yK, X, y, *, rtol: float = 0.15,
+                           max_support: int = 4, viol_ship: int = 2):
+    """Batched :func:`maxmarg_turn_ref` — the engine's CPU scan path and the
+    bit-for-bit parity reference for the fused support/violation kernel."""
+    return jax.vmap(functools.partial(
+        maxmarg_turn_ref, rtol=rtol, max_support=max_support,
+        viol_ship=viol_ship))(w, b, K, yK, X, y)

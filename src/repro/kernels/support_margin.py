@@ -27,6 +27,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -236,6 +237,114 @@ def uncertain_mask(
         interpret=interpret,
     )(X, y, V, dir_ok, lo, hi)
     return out
+
+
+def _rank_rows(key: jnp.ndarray, member: jnp.ndarray, cap: int) -> jnp.ndarray:
+    """Counting rank under ascending (key, index) order over member rows,
+    capped at ``cap``: member rows among the cap smallest keep their rank,
+    everything else gets the sentinel ``len(key)``.  Computes the same
+    integers as ``ref._topr_ranks`` (which spells it as cap argmin passes —
+    the CPU-friendly form) via an (n, n) compare matrix — VPU-friendly, and
+    n is a protocol transcript width (hundreds), not a model axis."""
+    n = key.shape[0]
+    ii = lax.broadcasted_iota(jnp.int32, (n, n), 0)      # row index i
+    jj = lax.broadcasted_iota(jnp.int32, (n, n), 1)      # col index j
+    kj = key[None, :]
+    ki = key[:, None]
+    lt = (kj < ki) | ((kj == ki) & (jj < ii))
+    rank = jnp.sum((lt & member[None, :]).astype(jnp.int32), axis=1)
+    return jnp.where(member & (rank < cap), rank, n)
+
+
+def _maxmarg_turn_kernel(w_ref, b_ref, kx_ref, ky_ref, x_ref, y_ref,
+                         sup_ref, err_ref, viol_ref, *, rtol: float, k: int,
+                         max_support: int, viol_ship: int):
+    """Fused MAXMARG turn scan for one instance (grid (B,)).
+
+    Folds the three per-turn passes that followed each refit — the fit-set
+    margin scan + band ranking (support selection), the per-node error
+    counts (all-clear bits / ε-termination), and the per-node most-violated
+    ranking — into one kernel, so the proposal (w, b) streams through VMEM
+    once per turn instead of driving a multi-pass jnp chain through HBM.
+    """
+    w = w_ref[0].astype(jnp.float32)                     # (d,)
+    b = b_ref[0].astype(jnp.float32)                     # scalar via (1,)
+
+    Kx = kx_ref[0].astype(jnp.float32)                   # (N, d)
+    yK = ky_ref[0].astype(jnp.float32)                   # (N,)
+    mK = yK * (Kx @ w + b)                               # fit-set margins
+    valid_K = yK != 0.0
+    mmin = jnp.maximum(
+        jnp.min(jnp.where(valid_K, mK, jnp.inf)), 1e-12)
+    band = valid_K & (mK <= mmin * (1.0 + rtol))
+    sup_ref[0] = _rank_rows(jnp.where(band, mK, jnp.inf), band, max_support)
+
+    errs, viols = [], []
+    for j in range(k):                                   # k is static, small
+        Xj = x_ref[0, j].astype(jnp.float32)             # (n, d)
+        yj = y_ref[0, j].astype(jnp.float32)             # (n,)
+        dec = Xj @ w + b
+        pred = jnp.where(dec > 0.0, 1.0, -1.0)
+        validj = yj != 0.0
+        errs.append(jnp.sum(((pred != yj) & validj).astype(jnp.int32)))
+        mj = yj * dec
+        viols.append(_rank_rows(jnp.where(validj, mj, jnp.inf), validj,
+                                viol_ship))
+    err_ref[0] = jnp.stack(errs)
+    viol_ref[0] = jnp.stack(viols)
+
+
+@functools.partial(jax.jit, static_argnames=("rtol", "max_support",
+                                             "viol_ship", "interpret"))
+def maxmarg_turn_scan_batched(
+    w: jnp.ndarray,                # (B, d) per-instance refit separators
+    b: jnp.ndarray,                # (B,)
+    K: jnp.ndarray,                # (B, N, d) own ∪ transcript fit sets
+    yK: jnp.ndarray,               # (B, N) ±1 (0 = padding row)
+    X: jnp.ndarray,                # (B, k, n, d) per-node shards
+    y: jnp.ndarray,                # (B, k, n) ±1 (0 = padding row)
+    *,
+    rtol: float = 0.15,
+    max_support: int = 4,
+    viol_ship: int = 2,
+    interpret: bool = False,
+):
+    """Fused support/violation scan for a whole MAXMARG sweep in one
+    pallas_call (grid (B,); each instance is one block — protocol fit sets
+    are hundreds of rows, so the (N, d) tiles and (N, N)/(n, n) rank
+    matrices sit comfortably in VMEM).  Returns
+    ``(sup_rank (B, N) i32, err_k (B, k) i32, viol_rank (B, k, n) i32)``
+    matching ``ref.maxmarg_turn_batch_ref`` bit-for-bit (integer outputs
+    only — see the bit-for-bit note on ``kernels.median_cut``)."""
+    B, N, d = K.shape
+    k, n = X.shape[1], X.shape[2]
+
+    kernel = functools.partial(_maxmarg_turn_kernel, rtol=rtol, k=k,
+                               max_support=max_support, viol_ship=viol_ship)
+    sup, err, viol = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, N, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, N), lambda i: (i, 0)),
+            pl.BlockSpec((1, k, n, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, k, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, N), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k, n), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N), jnp.int32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((B, k, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(w, b, K, yK, X, y)
+    return sup, err, viol
 
 
 def _uncertain_kernel_batched(x_ref, y_ref, v_ref, ok_ref, lo_ref, hi_ref,

@@ -262,6 +262,66 @@ def test_median_cut_on_engine_grid_bit_for_bit():
         state = M.step(data, V, state, k=k)
 
 
+@pytest.mark.parametrize("B,N,k,n,d", [(1, 64, 2, 48, 2), (5, 33, 3, 21, 2),
+                                       (4, 100, 2, 80, 5), (3, 24, 4, 16, 10)])
+def test_maxmarg_turn_scan_bit_for_bit(B, N, k, n, d):
+    """The fused support/violation kernel must match the vmap reference
+    *bit-for-bit* (capped integer ranks + error counts), including label-0
+    padding rows and one-class fit sets."""
+    ks = jax.random.split(jax.random.PRNGKey(B * N + n), 8)
+    K = jax.random.normal(ks[0], (B, N, d))
+    yK = jnp.where(jax.random.bernoulli(ks[1], 0.5, (B, N)), 1, -1)
+    yK = yK * jax.random.bernoulli(ks[2], 0.8, (B, N))   # label-0 pads
+    X = jax.random.normal(ks[3], (B, k, n, d))
+    y = jnp.where(jax.random.bernoulli(ks[4], 0.5, (B, k, n)), 1, -1)
+    y = y * jax.random.bernoulli(ks[5], 0.8, (B, k, n))
+    w = jax.random.normal(ks[6], (B, d))
+    b = jax.random.normal(ks[7], (B,))
+
+    got = ops.support_violation_batch(w, b, K, yK, X, y, interpret=True)
+    want = ref.maxmarg_turn_batch_ref(w, b, K, yK, X, y)
+    for g, e in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+        assert g.dtype == jnp.int32
+
+
+def test_maxmarg_turn_scan_on_engine_grid_bit_for_bit():
+    """Kernel vs reference on *real* MAXMARG engine state: mid-protocol
+    transcripts, live separators, padded shards — every turn of a short
+    sweep (the kernel-vs-chain equivalence the engine's ``fused_kernel``
+    switch relies on)."""
+    from repro import engine
+    from repro.core import datasets
+    from repro.core.classifiers import _svm_solve_batch
+    from repro.engine import maxmarg as MM
+
+    insts = [engine.ProtocolInstance(
+                 datasets.data3(n_per_node=60, k=2, seed=s), 0.02, "maxmarg")
+             for s in range(4)]
+    data, state, k, _ = engine.pack_instances_maxmarg(insts, max_epochs=8,
+                                                      max_support=4)
+    for _ in range(3):
+        ci = state.turn % k
+        Xc = jnp.take(data.X, ci, axis=1)
+        yc = jnp.take(data.y, ci, axis=1)
+        Wxc = jnp.take(state.wx, ci, axis=1)
+        Wyc = jnp.take(state.wy, ci, axis=1)
+        K = jnp.concatenate([Xc, Wxc], axis=1)
+        yK = jnp.concatenate([yc, Wyc], axis=1)
+        w, b, _ = _svm_solve_batch(K, yK.astype(K.dtype),
+                                   jnp.float32(1e-3), 500, 2)
+        got = ops.support_violation_batch(w, b, K, yK, data.X, data.y,
+                                          interpret=True)
+        want = ref.maxmarg_turn_batch_ref(w, b, K, yK, data.X, data.y)
+        for g, e in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+        state = MM._step_jit(data, state, k=k, max_support=4, steps=500,
+                             stages=2, lam0=1e-3, trans_width=None,
+                             warm=False, fused_kernel=False)
+        if bool(jnp.all(state.done)):
+            break
+
+
 def test_geometry_consistency_with_kernel():
     """geometry.consistent_threshold_ranges (XLA path) == Pallas path."""
     from repro.core import geometry as geo

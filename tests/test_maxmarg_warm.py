@@ -1,0 +1,168 @@
+"""Differential gate for the MAXMARG hot path (warm-started, compacted
+refits) against the cold padded execution model.
+
+The hard-margin optimum each turn is determined by the transcript alone, so
+warm-starting (polishing the previous turn's separator) and compaction
+(solving at the live transcript width, dropping finished instances) may only
+change *solve cost*, never a protocol decision.  This module pins that down:
+across the engine test grid, warm+compacted and cold+padded runs must agree
+exactly on comm totals, rounds, and convergence, and produce the same final
+separator up to canonicalization.
+"""
+
+import os
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro import engine
+from repro.core import classifiers as clf
+from repro.core import datasets
+
+MAX_EPOCHS = 24
+
+
+def _grid():
+    """The engine MAXMARG test grid (same as tests/test_engine_maxmarg.py)."""
+    out = []
+    for gen in (datasets.data1, datasets.data2, datasets.data3):
+        for eps in (0.05, 0.02):
+            for seed in (0, 1):
+                out.append(engine.ProtocolInstance(
+                    gen(n_per_node=100, k=2, seed=seed), eps, "maxmarg"))
+    return out
+
+
+def _canon(h):
+    """Canonical direction of a separator: unit-norm augmented (w, b)."""
+    v = np.concatenate([h.w, [h.b]])
+    return v / (np.linalg.norm(v) + 1e-30)
+
+
+@pytest.fixture(scope="module")
+def warm_cold_runs():
+    insts = _grid()
+    hot = engine.maxmarg.run_instances(insts, max_epochs=MAX_EPOCHS,
+                                       warm=True, compact=True)
+    cold = engine.maxmarg.run_instances(insts, max_epochs=MAX_EPOCHS,
+                                        warm=False, compact=False)
+    return insts, hot, cold
+
+
+def test_warm_cold_identical_comm_rounds_convergence(warm_cold_runs):
+    insts, hot, cold = warm_cold_runs
+    assert len(insts) >= 12
+    for i, (rh, rc) in enumerate(zip(hot, cold)):
+        assert rh.comm == rc.comm, (i, rh.comm, rc.comm)
+        assert rh.rounds == rc.rounds, i
+        assert rh.converged == rc.converged and rh.converged, i
+
+
+def test_warm_cold_same_separator_up_to_canonicalization(warm_cold_runs):
+    """Both paths approximate the same transcript-determined hard-margin
+    optimum; after canonicalization the directions must agree closely and
+    predict identically on every shard."""
+    insts, hot, cold = warm_cold_runs
+    for inst, rh, rc in zip(insts, hot, cold):
+        vh, vc = _canon(rh.classifier), _canon(rc.classifier)
+        assert abs(float(vh @ vc)) > 1.0 - 1e-4, (vh, vc)
+        X = np.concatenate([s[0] for s in inst.shards])
+        np.testing.assert_array_equal(rh.classifier.predict(X),
+                                      rc.classifier.predict(X))
+
+
+def test_warm_cold_parity_kparty():
+    """k=4 multi-party case — the regime where the warm polish actually
+    engages (a later coordinator's shard is often already cleanly
+    classified)."""
+    for seed, eps in ((0, 0.1), (1, 0.05)):
+        shards = datasets.data3(n_per_node=75, k=4, seed=seed)
+        inst = [engine.ProtocolInstance(shards, eps, "maxmarg")]
+        rh = engine.maxmarg.run_instances(inst, max_epochs=MAX_EPOCHS,
+                                          warm=True, compact=True)[0]
+        rc = engine.maxmarg.run_instances(inst, max_epochs=MAX_EPOCHS,
+                                          warm=False, compact=False)[0]
+        assert rh.comm == rc.comm
+        assert rh.rounds == rc.rounds and rh.converged == rc.converged
+
+
+def test_compaction_alone_is_decision_exact():
+    """Width+batch compaction without warm-starting: same decisions as the
+    cold padded path (only float reassociation across padding changes)."""
+    insts = _grid()[:6]
+    comp = engine.maxmarg.run_instances(insts, max_epochs=MAX_EPOCHS,
+                                        warm=False, compact=True)
+    cold = engine.maxmarg.run_instances(insts, max_epochs=MAX_EPOCHS,
+                                        warm=False, compact=False)
+    for rh, rc in zip(comp, cold):
+        assert rh.comm == rc.comm
+        assert rh.rounds == rc.rounds and rh.converged == rc.converged
+
+
+def test_solver_warm_entry_with_untrusted_init_is_cold_bit_for_bit():
+    """The warm entry's fall-through: when no instance may latch
+    (warm_ok=False), the anneal from zeros must be bit-identical to the
+    cold entry — the polish only ever *adds* a latched prefix."""
+    rng = np.random.default_rng(0)
+    w_true = np.array([1.0, -0.5]) / np.linalg.norm([1.0, -0.5])
+    X = rng.normal(size=(120, 2)).astype(np.float32)
+    X = X[np.abs(X @ w_true) > 0.2]
+    y = np.where(X @ w_true > 0, 1.0, -1.0).astype(np.float32)
+    Xb, yb = jnp.asarray(X[None]), jnp.asarray(y[None])
+    w_c, b_c, ok_c = clf._svm_solve_batch(Xb, yb, jnp.float32(1e-3), 500, 2)
+    w_w, b_w, ok_w = clf._svm_solve_batch(
+        Xb, yb, jnp.float32(1e-3), 500, 2,
+        w0=jnp.asarray(rng.normal(size=(1, 2)), jnp.float32),
+        b0=jnp.zeros((1,), jnp.float32),
+        warm_ok=jnp.zeros((1,), bool))
+    assert bool(ok_c[0]) and bool(ok_w[0])
+    np.testing.assert_array_equal(np.asarray(w_c), np.asarray(w_w))
+    np.testing.assert_array_equal(np.asarray(b_c), np.asarray(b_w))
+
+
+def test_solver_polish_latches_clean_carried_separator():
+    """A clean carried separator must latch through the polish (skipping
+    every annealing stage) with preserved margin quality."""
+    rng = np.random.default_rng(3)
+    n = 150
+    Xp = np.stack([-0.5 - rng.random(n), rng.normal(0, 2.0, n)], axis=1)
+    Xn = np.stack([+0.5 + rng.random(n), rng.normal(0, 2.0, n)], axis=1)
+    X = np.concatenate([Xp, Xn]).astype(np.float32)
+    y = np.concatenate([np.ones(n), -np.ones(n)]).astype(np.float32)
+    w0, b0, ok0 = clf.anneal_hard_margin(X, y)
+    assert ok0
+    Xb, yb = jnp.asarray(X[None]), jnp.asarray(y[None])
+    w, b, ok = clf._svm_solve_batch(
+        Xb, yb, jnp.float32(1e-3), 2000, 3,
+        w0=jnp.asarray(w0[None], jnp.float32),
+        b0=jnp.asarray([b0], jnp.float32),
+        warm_ok=jnp.ones((1,), bool))
+    assert bool(ok[0])
+    m = y * (X @ np.asarray(w[0], np.float64) + float(b[0]))
+    assert m.min() > 0                       # still separates
+    geo = m.min() / np.linalg.norm(np.asarray(w[0]))
+    assert geo >= 0.9 * 0.5                  # margin quality preserved
+
+
+def test_hot_path_is_default_and_flagged():
+    shards = datasets.data1(n_per_node=80, k=2, seed=0)
+    r = engine.maxmarg.run_instances(
+        [engine.ProtocolInstance(shards, 0.05, "maxmarg")])[0]
+    assert r.extra["warm"] and r.extra["compact"]
+    r_cold = engine.maxmarg.run_instances(
+        [engine.ProtocolInstance(shards, 0.05, "maxmarg")],
+        warm=False, compact=False)[0]
+    assert not r_cold.extra["warm"] and not r_cold.extra["compact"]
+    assert r.comm == r_cold.comm
+
+
+def test_run_sweep_accepts_warm_compact_options():
+    shards = datasets.data1(n_per_node=60, k=2, seed=1)
+    insts = [engine.ProtocolInstance(shards, 0.05, "maxmarg")]
+    r_hot = engine.run_sweep(insts, warm=True, compact=True)[0]
+    r_cold = engine.run_sweep(insts, warm=False, compact=False)[0]
+    assert r_hot.comm == r_cold.comm
