@@ -1,0 +1,48 @@
+"""Shared interleaved-timing harness for the sweep benchmarks.
+
+Every series is measured min-over-repeats with the series *interleaved*
+round-robin: one-sided scheduler/frequency noise on a small shared box only
+ever inflates a wall-clock, and interleaving shows every series the same
+machine phases — so the recorded speedup ratios are stable even when
+absolute wall-clocks drift between runs.  Speedups are reported as the
+median of per-round ratios: within one interleaved round both series saw
+the same machine phase, so common-mode drift cancels where a ratio of
+cross-round minima would not (which is why a report's ``speedup`` need not
+equal the quotient of its two recorded minima).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+
+def interleaved(series: Dict[str, Callable], repeats: int
+                ) -> Tuple[dict, Dict[str, list]]:
+    """Run each named thunk round-robin ``repeats`` times.
+
+    Returns ``(out, times)``: the last result and the per-round wall-clock
+    list per series.  Thunks take no arguments — bind their inputs when
+    building ``series``.
+    """
+    times: Dict[str, list] = {name: [] for name in series}
+    out: dict = {}
+    for _ in range(repeats):
+        for name, fn in series.items():
+            t0 = time.perf_counter()
+            out[name] = fn()
+            times[name].append(time.perf_counter() - t0)
+    return out, times
+
+
+def tmin(times: Dict[str, list], name: str) -> float:
+    """The recorded wall-clock for a series: min over interleaved rounds."""
+    return float(np.min(times[name]))
+
+
+def ratio(times: Dict[str, list], num: str, den: str) -> float:
+    """Speedup of ``den`` over ``num`` as the median of per-round ratios."""
+    return float(np.median(np.asarray(times[num])
+                           / np.maximum(np.asarray(times[den]), 1e-9)))

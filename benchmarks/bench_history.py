@@ -29,7 +29,8 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # the history survives schema growth (e.g. the PR 4 hot-path series)
 HEADLINE = ("sequential_s", "batched_s", "speedup", "engine_b1_loop_s",
             "speedup_vs_engine_b1")
-OPTIONAL = ("batched_cold_padded_s", "speedup_vs_cold_padded")
+OPTIONAL = ("batched_cold_padded_s", "speedup_vs_cold_padded",
+            "speedup_hot_vs_cold")
 BENCHES = ("engine", "maxmarg", "baselines")
 
 NOTES = (
@@ -57,7 +58,9 @@ def extract(path: str) -> Optional[Dict]:
     out["parity_ok"] = bool(
         report.get("parity_b1_ok")
         and not report.get("legacy_oracle_disagreements")
-        and not report.get("warm_cold_mismatch_indices"))
+        and not report.get("warm_cold_mismatch_indices")
+        and not report.get("hot_cold_mismatch_indices")
+        and not report.get("per_node_mismatch_indices"))
     return out
 
 

@@ -36,10 +36,23 @@ COMMON_SCHEMA = {
     "per_instance": list,
 }
 
+# BENCH_engine.json additionally carries the MEDIAN hot-path series (PR 5):
+# the cold padded while_loop model replayed on the same grid, and the
+# hot/cold decision+separator parity list (bar: empty — the MEDIAN
+# compactions are bit-exact).
+ENGINE_EXTRA_SCHEMA = {
+    "hot_vs_cold": dict,
+    "speedup_hot_vs_cold": _NUM,
+    "hot_cold_mismatch_indices": list,
+}
+
+HOT_COLD_SCHEMA = {"hot_s": _NUM, "cold_s": _NUM, "speedup": _NUM}
+
 # BENCH_maxmarg.json additionally carries the hot-path series (PR 4): the
 # cold-padded PR 2 execution model as in-file baseline, the per-layer
-# warm-vs-cold / compacted-vs-padded toggles, and the warm/cold decision
-# parity list (bar: empty).
+# warm-vs-cold / compacted-vs-padded toggles, the warm/cold decision parity
+# list (bar: empty), and (PR 5) the per-node-vs-single warm-carry series
+# with its own parity list.
 MAXMARG_EXTRA_SCHEMA = {
     "max_support": int,
     "batched_cold_padded_s": _NUM,
@@ -47,10 +60,15 @@ MAXMARG_EXTRA_SCHEMA = {
     "warm_vs_cold": dict,
     "compacted_vs_padded": dict,
     "warm_cold_mismatch_indices": list,
+    "per_node_warm": dict,
+    "per_node_mismatch_indices": list,
 }
 
 WARM_COLD_SCHEMA = {"warm_s": _NUM, "cold_s": _NUM, "speedup": _NUM}
 COMPACT_SCHEMA = {"compacted_s": _NUM, "padded_s": _NUM, "speedup": _NUM}
+PER_NODE_SCHEMA = {"instances": int, "rounds": list, "per_node_s": _NUM,
+                   "single_carry_s": _NUM, "speedup": _NUM,
+                   "latches_per_node": int, "latches_single_carry": int}
 
 # BENCH_history.json: the cumulative per-PR headline series folded by
 # benchmarks/bench_history.py.
@@ -153,9 +171,12 @@ def check(path: str) -> list:
     errors = []
     is_baselines = "baselines" in os.path.basename(path)
     is_maxmarg = "maxmarg" in os.path.basename(path)
+    is_engine = "engine" in os.path.basename(path)
     schema = BASELINES_SCHEMA if is_baselines else dict(COMMON_SCHEMA)
     if is_maxmarg:
         schema.update(MAXMARG_EXTRA_SCHEMA)
+    if is_engine:
+        schema.update(ENGINE_EXTRA_SCHEMA)
     per_inst = BASELINES_PER_INSTANCE if is_baselines else PER_INSTANCE_SCHEMA
     flags = ("parity_b1_ok", "all_converged",
              "all_gated_err_within_eps" if is_baselines
@@ -180,6 +201,13 @@ def check(path: str) -> list:
         for field, typ in COMPACT_SCHEMA.items():
             expect(report.get("compacted_vs_padded", {}), field, typ,
                    f"{path}[compacted_vs_padded]")
+        for field, typ in PER_NODE_SCHEMA.items():
+            expect(report.get("per_node_warm", {}), field, typ,
+                   f"{path}[per_node_warm]")
+    if is_engine:
+        for field, typ in HOT_COLD_SCHEMA.items():
+            expect(report.get("hot_vs_cold", {}), field, typ,
+                   f"{path}[hot_vs_cold]")
 
     # size-independent invariants
     if report.get("per_instance") is not None and \
@@ -190,7 +218,9 @@ def check(path: str) -> list:
             errors.append(f"{path}: {flag} is not true")
     lists = ["parity_b1_mismatch_indices", "legacy_oracle_disagreements"]
     if is_maxmarg:
-        lists.append("warm_cold_mismatch_indices")
+        lists += ["warm_cold_mismatch_indices", "per_node_mismatch_indices"]
+    if is_engine:
+        lists.append("hot_cold_mismatch_indices")
     for lst in lists:
         if report.get(lst):
             errors.append(f"{path}: {lst} is non-empty: {report[lst]}")

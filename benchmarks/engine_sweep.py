@@ -2,14 +2,22 @@
 
 The paper's experiment grids are sweeps of independent protocol instances;
 the engine runs a whole sweep as one compiled dispatch.  This benchmark runs
-the same ≥32-instance grid (dataset × ε × seed, two-party MEDIAN) both ways:
+the same ≥32-instance grid (dataset × ε × seed, two-party MEDIAN) three
+ways:
 
   sequential  the public per-instance API in a Python loop — one engine
               dispatch per instance (B=1), the pre-batching execution model;
-  batched     one ``repro.engine`` sweep with B = #instances.
+  batched     one ``repro.engine`` sweep on the hot path (fill-capped
+              transcript reads + batch compaction via the shared
+              ``engine.hotloop`` — the default);
+  cold        the same sweep on the cold padded ``run_compiled`` model (one
+              while_loop dispatch at worst-case shapes — the pre-hot-path
+              engine, and the in-file baseline for the ``hot_vs_cold``
+              acceptance series).
 
 It asserts exact parity (converged flags + comm totals) between the batched
-sweep and the engine's B=1 path, cross-checks the legacy float64 host loop
+sweep and the engine's B=1 path, **bit-exact** parity (including the final
+separator) between hot and cold, cross-checks the legacy float64 host loop
 as a differential oracle, and records wall-clocks to BENCH_engine.json at
 the repo root.
 """
@@ -20,7 +28,6 @@ import argparse
 import json
 import os
 import sys
-import time
 from typing import List
 
 import numpy as np
@@ -31,6 +38,7 @@ from repro import engine
 from repro.core import datasets
 from repro.core.protocols import kparty
 
+from benchmarks import _timing as timing
 from benchmarks.legacy_median import kparty_median_hostloop
 
 N_ANGLES = 1024
@@ -67,9 +75,9 @@ def _run_engine_b1(insts):
             for inst in insts]
 
 
-def _run_batched(insts):
+def _run_batched(insts, compact=True):
     return engine.run_instances(insts, n_angles=N_ANGLES,
-                                max_epochs=MAX_EPOCHS)
+                                max_epochs=MAX_EPOCHS, compact=compact)
 
 
 def main(tiny: bool = False) -> List[str]:
@@ -77,27 +85,36 @@ def main(tiny: bool = False) -> List[str]:
         else build_instances()
     B = len(insts)
 
-    # warm up both engine program shapes (full B and B=1) so the steady-state
-    # sweep cost is measured, then time everything (median of repeats).
+    # warm up every engine program shape (hot + cold padded, full B and B=1)
+    # so the steady-state sweep cost is measured, then time everything on
+    # the shared interleaved harness (see benchmarks/_timing.py for the
+    # min-of-repeats / median-of-round-ratios rationale).
     _run_batched(insts)
+    _run_batched(insts, compact=False)
     _run_engine_b1(insts[:1])
 
-    def timed(fn, repeats=1 if tiny else 3):
-        times = []
-        for _ in range(repeats):
-            t0 = time.time()
-            out = fn(insts)
-            times.append(time.time() - t0)
-        return out, float(np.median(times))
+    repeats = 1 if tiny else 7
+    series = {
+        "seq": lambda: _run_hostloop(insts),
+        "b1": lambda: _run_engine_b1(insts),
+        "bat": lambda: _run_batched(insts),                # hot (default)
+        "cold": lambda: _run_batched(insts, compact=False),
+    }
+    out, times = timing.interleaved(series, repeats)
+    seq, t_seq = out["seq"], timing.tmin(times, "seq")
+    b1, t_b1 = out["b1"], timing.tmin(times, "b1")
+    bat, t_bat = out["bat"], timing.tmin(times, "bat")
+    cold, t_cold = out["cold"], timing.tmin(times, "cold")
 
-    seq, t_seq = timed(_run_hostloop)
-    b1, t_b1 = timed(_run_engine_b1)
-    bat, t_bat = timed(_run_batched)
+    def ratio(num, den):
+        return timing.ratio(times, num, den)
 
     mismatches = []          # engine batched vs engine B=1 — must be exact
     legacy_disagree = []     # float64 host loop — differential oracle
+    hot_cold_bad = []        # hot vs cold padded — must be bit-exact
     per_instance = []
-    for i, (inst, rs, r1, rb) in enumerate(zip(insts, seq, b1, bat)):
+    for i, (inst, rs, r1, rb, rc) in enumerate(zip(insts, seq, b1, bat,
+                                                   cold)):
         X = np.concatenate([s[0] for s in inst.shards])
         y = np.concatenate([s[1] for s in inst.shards])
         err = float(np.mean(rb.classifier.predict(X) != y))
@@ -108,6 +125,11 @@ def main(tiny: bool = False) -> List[str]:
         if not (rs.converged == rb.converged
                 and rs.comm["points"] == rb.comm["points"]):
             legacy_disagree.append(i)
+        if not (rc.converged == rb.converged and rc.comm == rb.comm
+                and rc.rounds == rb.rounds
+                and np.array_equal(rc.classifier.w, rb.classifier.w)
+                and rc.classifier.b == rb.classifier.b):
+            hot_cold_bad.append(i)
         per_instance.append({
             "eps": inst.eps,
             "converged": bool(rb.converged),
@@ -118,27 +140,44 @@ def main(tiny: bool = False) -> List[str]:
             "parity_b1": ok,
         })
 
-    speedup = t_seq / max(t_bat, 1e-9)
+    speedup = ratio("seq", "bat")
+    speedup_hot_cold = ratio("cold", "bat")
     report = {
         "notes": (
             "sequential_s = the pre-engine per-instance execution model "
             "(host-side Python round loop, device round-trip per round; "
             "benchmarks/legacy_median.py).  batched_s = one repro.engine "
-            "dispatch for the whole sweep.  engine_b1_loop_s = the public "
-            "per-instance API (engine at B=1) in a Python loop — itself "
-            "compiled end-to-end, so on a CPU-only host it already captures "
-            "most of the engine win; the batch axis pays off where per-"
-            "dispatch overhead dominates (accelerators, many small "
-            "instances).  Timings are medians of repeats on a warm cache."),
+            "sweep on the hot path (fill-capped transcript reads + batch "
+            "compaction on the shared engine.hotloop — the default).  "
+            "hot_vs_cold replays the cold padded while_loop model "
+            "(run_instances(compact=False), the pre-hot-path engine) "
+            "against it on the same grid — speedup_hot_vs_cold is the hot "
+            "path's acceptance number, and hot_cold_mismatch_indices (bar: "
+            "empty) lists instances whose comm/rounds/convergence or exact "
+            "final separator differ (the MEDIAN compactions must be "
+            "bit-exact, not merely decision-exact).  engine_b1_loop_s = "
+            "the public per-instance API (engine at B=1) in a Python loop "
+            "— itself compiled end-to-end, so on a CPU-only host it "
+            "already captures most of the engine win; the batch axis pays "
+            "off where per-dispatch overhead dominates (accelerators, many "
+            "small instances).  Timings are minima of interleaved repeats "
+            "on a warm cache."),
         "instances": B,
         "tiny": tiny,
         "n_angles": N_ANGLES,
         "max_epochs": MAX_EPOCHS,
         "sequential_s": round(t_seq, 4),       # legacy host round loop
-        "batched_s": round(t_bat, 4),          # one engine dispatch
+        "batched_s": round(t_bat, 4),          # one hot engine sweep
         "speedup": round(speedup, 2),
         "engine_b1_loop_s": round(t_b1, 4),    # per-instance engine loop
-        "speedup_vs_engine_b1": round(t_b1 / max(t_bat, 1e-9), 2),
+        "speedup_vs_engine_b1": round(ratio("b1", "bat"), 2),
+        "hot_vs_cold": {
+            "hot_s": round(t_bat, 4),
+            "cold_s": round(t_cold, 4),        # padded while_loop model
+            "speedup": round(speedup_hot_cold, 2),
+        },
+        "speedup_hot_vs_cold": round(speedup_hot_cold, 2),
+        "hot_cold_mismatch_indices": hot_cold_bad,
         "parity_b1_ok": not mismatches,
         "parity_b1_mismatch_indices": mismatches,
         "legacy_oracle_disagreements": legacy_disagree,
@@ -152,13 +191,16 @@ def main(tiny: bool = False) -> List[str]:
         json.dump(report, f, indent=1)
 
     print(f"engine sweep: {B} instances  sequential(host loop) {t_seq:.2f}s  "
-          f"batched {t_bat:.2f}s  speedup {speedup:.1f}x  "
+          f"batched(hot) {t_bat:.3f}s  cold-padded {t_cold:.3f}s  "
+          f"hot-vs-cold {speedup_hot_cold:.2f}x  "
           f"B=1-parity={'OK' if not mismatches else mismatches}")
     print(f"(engine B=1 loop {t_b1:.2f}s; legacy-oracle disagreements: "
-          f"{legacy_disagree or 'none'})")
+          f"{legacy_disagree or 'none'}; hot-cold mismatches: "
+          f"{hot_cold_bad or 'none'})")
     print(f"wrote {out}")
     return [f"engine_sweep/batched,{t_bat * 1e6 / B:.0f},"
-            f"speedup={speedup:.2f};instances={B}",
+            f"speedup={speedup:.2f};instances={B};"
+            f"hot_vs_cold={speedup_hot_cold:.2f}",
             f"engine_sweep/sequential,{t_seq * 1e6 / B:.0f},"
             f"parity_b1={'ok' if not mismatches else 'FAIL'}"]
 

@@ -33,7 +33,6 @@ import argparse
 import json
 import os
 import sys
-import time
 from typing import List
 
 import numpy as np
@@ -44,6 +43,7 @@ from repro import engine
 from repro.core import datasets
 from repro.core.protocols import kparty
 
+from benchmarks import _timing as timing
 from benchmarks.legacy_maxmarg import kparty_maxmarg_hostloop
 
 # MAXMARG converges in 1-4 epochs on every paper grid; a tight epoch bound
@@ -70,6 +70,17 @@ def build_instances(n_per_node: int = 128,
     return insts
 
 
+def build_pn_instances(n_per_node: int = 100) -> List[engine.ProtocolInstance]:
+    """k=4 multi-epoch grid for the per-node warm-carry series.  The k=2
+    headline grid cannot exercise it (per-node adoption at k=2 provably
+    implies termination, so the mechanism is statically skipped there);
+    these mixed hard/easy partitions run ≥ 2 epochs and actually latch."""
+    return [engine.ProtocolInstance(
+                datasets.data_mixed_hardness(n_per_node=n_per_node, k=4,
+                                             seed=0), eps, "maxmarg")
+            for eps in (0.05, 0.02)]
+
+
 def _run_hostloop(insts):
     """The sequential loop the engine replaced: one host-side Python round
     loop per instance, one solver dispatch per round."""
@@ -87,64 +98,67 @@ def _run_engine_b1(insts):
             for inst in insts]
 
 
-def _run_batched(insts, warm=True, compact=True):
+def _run_batched(insts, warm=True, compact=True, per_node=True):
     return engine.maxmarg.run_instances(insts, max_epochs=MAX_EPOCHS,
                                         max_support=MAX_SUPPORT,
-                                        warm=warm, compact=compact)
+                                        warm=warm, compact=compact,
+                                        per_node=per_node)
 
 
 def main(tiny: bool = False) -> List[str]:
     insts = build_instances(n_per_node=40, seeds=(0,)) if tiny \
         else build_instances()
+    pn_insts = build_pn_instances(n_per_node=40 if tiny else 100)
     B = len(insts)
 
-    # warm up every engine program shape (hot/cold × padded/compacted, B=1)
-    # and the host loop's solver cache, then time everything (median of
-    # repeats).
+    # warm up every engine program shape (hot/cold × padded/compacted, B=1,
+    # the k=4 per-node grid in all three warm modes) and the host loop's
+    # solver cache, then time everything on the shared interleaved harness
+    # (benchmarks/_timing.py).
     for w, c in ((True, True), (False, True), (False, False)):
         _run_batched(insts, warm=w, compact=c)
+    for pn in (True, False):
+        _run_batched(pn_insts, per_node=pn)
     _run_engine_b1(insts[:1])
     _run_hostloop(insts[:1])
 
     # the hot/cold batched dispatches are tens of ms — take enough repeats
     # that the recorded minima are stable against machine noise
     repeats = 1 if tiny else 15
-
-    # every series measured min-over-repeats, with the series *interleaved*
-    # round-robin: one-sided scheduler/frequency noise on a small shared box
-    # only ever inflates a wall-clock, and interleaving makes every series
-    # see the same machine phases — so the recorded speedup ratios are
-    # stable even when absolute wall-clocks drift between runs
     series = {
-        "seq": _run_hostloop,
-        "b1": _run_engine_b1,
-        "bat": _run_batched,                              # hot: warm+compact
-        "cold_c": lambda x: _run_batched(x, warm=False, compact=True),
-        "cold_p": lambda x: _run_batched(x, warm=False, compact=False),
+        "seq": lambda: _run_hostloop(insts),
+        "b1": lambda: _run_engine_b1(insts),
+        "bat": lambda: _run_batched(insts),               # hot: warm+compact
+        "cold_c": lambda: _run_batched(insts, warm=False, compact=True),
+        "cold_p": lambda: _run_batched(insts, warm=False, compact=False),
+        # per-node-vs-single warm carries, on the k=4 multi-epoch grid
+        # where the mechanism actually engages
+        "pn": lambda: _run_batched(pn_insts),
+        "pn_single": lambda: _run_batched(pn_insts, per_node=False),
     }
-    times = {name: [] for name in series}
-    out = {}
-    for _ in range(repeats):
-        for name, fn in series.items():
-            t0 = time.perf_counter()
-            out[name] = fn(insts)
-            times[name].append(time.perf_counter() - t0)
-    seq, t_seq = out["seq"], float(np.min(times["seq"]))
-    b1, t_b1 = out["b1"], float(np.min(times["b1"]))
-    bat, t_bat = out["bat"], float(np.min(times["bat"]))
-    cold_c, t_cold_c = out["cold_c"], float(np.min(times["cold_c"]))
-    cold_p, t_cold_p = out["cold_p"], float(np.min(times["cold_p"]))
+    out, times = timing.interleaved(series, repeats)
+    seq, t_seq = out["seq"], timing.tmin(times, "seq")
+    b1, t_b1 = out["b1"], timing.tmin(times, "b1")
+    bat, t_bat = out["bat"], timing.tmin(times, "bat")
+    cold_c, t_cold_c = out["cold_c"], timing.tmin(times, "cold_c")
+    cold_p, t_cold_p = out["cold_p"], timing.tmin(times, "cold_p")
+    pn_res, t_pn = out["pn"], timing.tmin(times, "pn")
+    pn_single, t_pn_single = out["pn_single"], timing.tmin(times, "pn_single")
 
     def ratio(num, den):
-        # speedups as the median of per-round ratios: within one interleaved
-        # round both series saw the same machine phase, so common-mode drift
-        # cancels where a ratio of cross-round minima would not
-        return float(np.median(np.asarray(times[num])
-                               / np.maximum(np.asarray(times[den]), 1e-9)))
+        return timing.ratio(times, num, den)
 
     mismatches = []          # engine batched vs engine B=1 — must be exact
     legacy_disagree = []     # retired host loop — differential oracle
     warm_cold_bad = []       # warm vs cold decisions — must be exact
+    per_node_bad = []        # per-node grid: both warm modes vs cold — exact
+    pn_cold = _run_batched(pn_insts, warm=False, compact=False)
+    for i, (rp, rn, rc) in enumerate(zip(pn_res, pn_single, pn_cold)):
+        for r in (rp, rn):
+            if not (r.converged == rc.converged and r.comm == rc.comm
+                    and r.rounds == rc.rounds):
+                per_node_bad.append(i)
+                break
     per_instance = []
     for i, (inst, rs, r1, rb, rc) in enumerate(
             zip(insts, seq, b1, bat, cold_p)):
@@ -187,11 +201,20 @@ def main(tiny: bool = False) -> List[str]:
             "this machine, so speedup_vs_cold_padded is the hot path's "
             "acceptance number (bar: >= 1.5).  warm_vs_cold and "
             "compacted_vs_padded each toggle one hot-path layer at a time.  "
-            "engine_b1_loop_s = the public per-instance API (engine at B=1) "
-            "in a Python loop.  legacy_oracle_disagreements and "
-            "warm_cold_mismatch_indices list instances whose comm totals / "
+            "per_node_warm compares the default per-node warm-carry mode "
+            "(each node polishes the last proposal it verified clean; "
+            "latches_* total the solver's warm-gate hits) against the PR 4 "
+            "single previous-turn carry, measured on a separate k=4 "
+            "multi-epoch mixed-hardness grid "
+            "(datasets.data_mixed_hardness) — per-node adoption at k=2 "
+            "provably implies termination, so the headline grid cannot "
+            "engage the mechanism.  engine_b1_loop_s = the public "
+            "per-instance API (engine at B=1) "
+            "in a Python loop.  legacy_oracle_disagreements, "
+            "warm_cold_mismatch_indices and per_node_mismatch_indices list "
+            "instances whose comm totals / "
             "rounds / convergence differ from the host-loop oracle resp. "
-            "between warm and cold execution — the acceptance bar is both "
+            "between warm modes — the acceptance bar is all "
             "empty.  Timings are minima of interleaved repeats on a warm "
             "cache (one-sided scheduler noise only inflates wall-clocks, "
             "and interleaving shows every series the same machine phases, "
@@ -217,6 +240,17 @@ def main(tiny: bool = False) -> List[str]:
             "padded_s": round(t_cold_p, 4),
             "speedup": round(ratio("cold_p", "cold_c"), 2),
         },
+        "per_node_warm": {
+            "instances": len(pn_insts),         # the k=4 multi-epoch grid
+            "rounds": [r.rounds for r in pn_res],
+            "per_node_s": round(t_pn, 4),       # default warm-carry mode
+            "single_carry_s": round(t_pn_single, 4),
+            "speedup": round(ratio("pn_single", "pn"), 2),
+            "latches_per_node": sum(r.extra["warm_latches"] for r in pn_res),
+            "latches_single_carry": sum(r.extra["warm_latches"]
+                                        for r in pn_single),
+        },
+        "per_node_mismatch_indices": per_node_bad,
         "parity_b1_ok": not mismatches,
         "parity_b1_mismatch_indices": mismatches,
         "legacy_oracle_disagreements": legacy_disagree,

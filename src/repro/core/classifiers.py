@@ -187,7 +187,7 @@ WARM_OFFSET = 1024.0
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "stages", "warm_steps",
-                                             "warm_offset"))
+                                             "warm_offset", "return_gate"))
 def _svm_solve_batch(
     X: jnp.ndarray,                # (B, N, d) f32; rows with label 0 are padding
     y: jnp.ndarray,                # (B, N) f32 in {+1, -1, 0}
@@ -199,6 +199,7 @@ def _svm_solve_batch(
     warm_ok: Optional[jnp.ndarray] = None,   # (B,) bool — init is trustworthy
     warm_steps: int = WARM_STEPS,
     warm_offset: float = WARM_OFFSET,
+    return_gate: bool = False,
 ):
     """Batched hard-margin-annealed Pegasos: B independent fits in lock-step.
 
@@ -234,7 +235,11 @@ def _svm_solve_batch(
     Returns ``(w, b, converged)`` with shapes (B, d), (B,), (B,) — already
     canonicalized to functional margin 1 at the support points (a positive
     rescale, so every margin-order/sign decision downstream is unaffected by
-    whether canonicalization happened).
+    whether canonicalization happened).  ``return_gate=True`` (static)
+    additionally returns the polish gate bits — the carried separator
+    classified the fit set cleanly (all-False on the cold entry) — so
+    callers instrumenting latch behaviour read the solver's own gate
+    instead of recomputing the margin scan.
     """
     B, N, d = X.shape
     valid = y != 0.0
@@ -288,6 +293,7 @@ def _svm_solve_batch(
         ok0 = margins_min(w0.astype(X.dtype), b0.astype(X.dtype)) > 0.0
         if warm_ok is not None:
             ok0 = ok0 & warm_ok
+        gate = ok0
         lam_p = jnp.full((B,), lam0, X.dtype)
         w_p, b_p = pegasos_stage(w0.astype(X.dtype), b0.astype(X.dtype),
                                  lam_p, warm_steps, jnp.float32(warm_offset))
@@ -297,6 +303,7 @@ def _svm_solve_batch(
         b_best0 = jnp.where(ok_p, b_p, zeros_b)
     else:
         found0 = jnp.zeros((B,), bool)
+        gate = jnp.zeros((B,), bool)
         w_best0, b_best0 = zeros_w, zeros_b
 
     def stage_cond(carry):
@@ -326,6 +333,8 @@ def _svm_solve_batch(
     mmin = margins_min(w, b)
     can = found & jnp.isfinite(mmin) & (mmin > 0.0)
     scale = jnp.where(can, 1.0 / jnp.where(can, mmin, 1.0), 1.0)
+    if return_gate:
+        return w * scale[:, None], b * scale, found, gate
     return w * scale[:, None], b * scale, found
 
 

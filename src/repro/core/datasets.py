@@ -84,6 +84,36 @@ def data3(n_per_node: int = 500, k: int = 2, seed: int = 2) -> List[Shard]:
     return shards
 
 
+def data_mixed_hardness(n_per_node: int = 100, k: int = 4, seed: int = 0,
+                        gap: float = 0.15, n_hard: int = 2) -> List[Shard]:
+    """k-party partition with heterogeneous hardness: ``n_hard`` nodes hold
+    tight near-margin bands around the slanted separator y = x/2 in their
+    own x-columns (driving a multi-epoch MAXMARG support exchange), the
+    rest hold far easy blobs.  The regime the per-node warm carries target:
+    an easy node verifies a mid-epoch proposal clean, adopts it, and its
+    next refit latches through the warm polish."""
+    rng = np.random.default_rng(seed)
+    half = n_per_node // 2
+    xs = np.linspace(-2.0, 2.0, k)
+    shards = []
+    for i in range(k):
+        cx, ly = xs[i], xs[i] / 2.0
+        if i < n_hard:
+            Xp = rng.uniform((cx - 0.3, ly + gap), (cx + 0.3, ly + 2.5 * gap),
+                             size=(half, 2))
+            Xn = rng.uniform((cx - 0.3, ly - 2.5 * gap), (cx + 0.3, ly - gap),
+                             size=(half, 2))
+        else:
+            Xp = rng.uniform((cx - 0.3, ly + 1.2), (cx + 0.3, ly + 2.0),
+                             size=(half, 2))
+            Xn = rng.uniform((cx - 0.3, ly - 2.0), (cx + 0.3, ly - 1.2),
+                             size=(half, 2))
+        X = np.concatenate([Xp, Xn])
+        y = np.concatenate([np.ones(half), -np.ones(half)]).astype(np.int32)
+        shards.append((X, y))
+    return shards
+
+
 def lift_dim(shards: List[Shard], d: int, seed: int = 7, noise: float = 0.05) -> List[Shard]:
     """Embed 2-D shards into R^d (Table 3's high-dimensional variant): the
     informative structure stays in the first two coordinates, the remaining

@@ -34,7 +34,7 @@ from repro.engine.state import (
     transcript_capacity,
 )
 from repro.engine.median import run_compiled, run_instances, step
-from repro.engine import dataplane, maxmarg, oneway
+from repro.engine import dataplane, hotloop, maxmarg, oneway
 
 
 def run_sweep(instances, **kwargs):
@@ -53,9 +53,10 @@ def run_sweep(instances, **kwargs):
     """
     _FIT = ("steps", "stages", "lam")
     _ALLOWED = {
-        "maxmarg": ("eps", "max_epochs", "max_support", "warm", "compact",
-                    "fused_kernel") + _FIT,
-        "median": ("eps", "n_angles", "max_epochs", "cut_kernel"),
+        "maxmarg": ("eps", "max_epochs", "max_support", "warm", "per_node",
+                    "compact", "fused_kernel") + _FIT,
+        "median": ("eps", "n_angles", "max_epochs", "cut_kernel",
+                   "extremes_kernel", "compact"),
         "sampling": ("eps", "vc_dim", "c") + _FIT,
         "naive": _FIT,
         "voting": _FIT,
@@ -95,6 +96,7 @@ __all__ = [
     "ProtocolInstance",
     "ProtocolState",
     "dataplane",
+    "hotloop",
     "maxmarg",
     "maxmarg_transcript_capacity",
     "oneway",

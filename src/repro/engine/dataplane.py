@@ -76,6 +76,24 @@ def median_cut(
     return ref.median_cut_scores_batch_ref(V, dir_ok, lo, hi, X, y)
 
 
+def median_extremes(
+    v: jnp.ndarray,       # (B, d) per-instance proposed directions
+    XW: jnp.ndarray,      # (B, k, nW, d) own ∪ fill-capped transcripts
+    yW: jnp.ndarray,      # (B, k, nW) i32/f32, 0 = padding
+    *,
+    use_pallas: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched per-node extreme-point indices along v — MEDIAN's stage-5
+    per-turn scan at the hot loop's fill-capped width.  On TPU the fused
+    ``kernels.support_margin.median_extremes_batched`` Pallas kernel, else
+    the jitted vmap reference; identical integer row choices (bit-for-bit,
+    tested in tests/test_kernels_interpret.py)."""
+    use_pallas = use_pallas_default() if use_pallas is None else use_pallas
+    if use_pallas:
+        return ops.support_extremes_batch(v, XW, yW)
+    return ref.median_extremes_batch_ref(v, XW, yW)
+
+
 def uncertain(
     V: jnp.ndarray,       # (m, d)
     dir_ok: jnp.ndarray,  # (B, m) bool

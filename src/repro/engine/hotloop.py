@@ -1,0 +1,154 @@
+"""Selector-generic host-driven hot loop (DESIGN.md §shared hot loop).
+
+Both two-way selectors share the same transcript-driven round structure —
+and therefore the same per-round waste: a ``lax.while_loop`` sweep must run
+every turn at the worst-case transcript width with every instance still in
+the batch.  This module owns the machinery that removes it, extracted from
+the MAXMARG-only PR 4 implementation so the MEDIAN selector (and any future
+transcript-driven selector) rides the identical code path:
+
+* **host-driven turn loop** — drive the selector's jitted ``step`` one turn
+  at a time so shapes can change between turns (a while_loop cannot);
+* **packed host transfers** — everything the host needs per turn (done
+  flags, warm-carry flags, live transcript fills) crosses as one (3, B)
+  int32 array;
+* **width compaction** — the per-turn transcript reads run at
+  ``round_up(max live fill + slack, 8)`` rows instead of the static
+  capacity (widths are monotone, so a sweep compiles a handful of step
+  variants that later sweeps of the same shape reuse);
+* **batch compaction** — finished instances drop out of the dispatch: the
+  live set rounds up to a multiple of 4 and pads with *out-of-range*
+  indices, which JAX gathers fill with inert zero rows and JAX scatters
+  drop, so the live count stays a traced value and the compile cache keys
+  only on ``(n_pad, width, warm)``;
+* **warm-carry threading** — the host reads the selector's per-turn
+  warm-latch flags and skips the polish dispatch on turns where no live
+  instance can latch.
+
+The selector supplies three callables (see :func:`run_hot`); everything it
+must guarantee about padding rows is the engine's standing label-0
+convention plus a ``pad_fix`` that marks gathered out-of-range rows inert
+(``done=True``, and for warm selectors: carries trusted, so zero-data pad
+rows latch instantly and can never force solver work the live rows don't
+need).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.engine.state import _round_up
+
+BATCH_MULT = 4   # live batch rounds up to this (compile-cache granularity)
+WIDTH_MULT = 8   # live transcript width rounds up to this
+
+
+def take_instances(tree, idx):
+    """Gather instance rows ``idx`` from every (B, ...) leaf (scalar leaves —
+    the shared turn counter — pass through).  Out-of-range indices gather
+    zero-filled rows: an all-label-0 instance is the engine's inert element
+    (no valid rows ⇒ every masked selection is empty, every masked reduction
+    hits its identity), which is exactly what a hot turn's padding rows must
+    be."""
+    return jax.tree_util.tree_map(
+        lambda a: a if a.ndim == 0
+        else jnp.take(a, idx, axis=0, mode="fill", fill_value=0), tree)
+
+
+def put_instances(full, sub, idx):
+    """Scatter ``sub`` rows back into ``full`` at ``idx`` (scalar leaves take
+    the sub value — the advanced turn counter).  Padding rows carry an
+    out-of-range index, which a JAX scatter *drops*, so they never land."""
+    return jax.tree_util.tree_map(
+        lambda f, s: s if f.ndim == 0 else f.at[idx].set(s), full, sub)
+
+
+def gathered_turn(step_fn, pad_fix, data, state, idx, n_act):
+    """One compacted turn as gather → pad-fix → step → scatter.
+
+    The selector wraps this in its own ``jax.jit`` (its static options
+    differ), so the whole turn stays one device computation: eager per-leaf
+    gathers/scatters cost more than the step they wrap on CPU.  ``idx`` is
+    (n_pad,) i32 with the live rows in front and out-of-range tail indices;
+    ``n_act`` is the traced live count; ``pad_fix(sub_state, pad_row)``
+    marks the gathered tail rows inert for this selector.
+    """
+    sub_data = take_instances(data, idx)
+    sub = take_instances(state, idx)
+    pad_row = jnp.arange(idx.shape[0]) >= n_act
+    sub = pad_fix(sub, pad_row)
+    sub = step_fn(sub_data, sub)
+    return put_instances(state, sub, idx)
+
+
+def run_hot(
+    state,
+    *,
+    k: int,
+    max_turns: int,
+    cap: int,
+    host_view: Callable,      # (state, ci) -> (3, B) i32 [done, warm, fill]
+    dispatch_full: Callable,  # (state, *, t, width, use_warm) -> state
+    dispatch_sub: Callable,   # (state, idx, n_act, *, t, width, use_warm)
+    warm: bool = False,
+    compact: bool = True,
+    width_slack: int = 0,
+):
+    """The generic host-driven sweep loop over a selector's jitted ``step``.
+
+    ``host_view`` must be jitted and return the packed per-turn host
+    knowledge: row 0 done flags, row 1 warm-latch flags for the upcoming
+    coordinator ``ci`` (all zero for selectors without a warm carry), row 2
+    the transcript fills the width compaction keys on.  ``width_slack``
+    widens the compacted read past the turn-start fill — a selector whose
+    step *reads* transcripts after appending to them (MEDIAN's post-S
+    extremes scan) passes the per-turn append bound.
+
+    ``dispatch_full`` runs the whole batch at a compacted ``width``
+    (``None`` on the non-compacted path); ``dispatch_sub`` additionally
+    gathers the ``idx`` rows and scatters them back (see
+    :func:`gathered_turn`).  ``t`` is the host-known turn index, from which
+    a selector derives host-static flags (MEDIAN's constant-folded first
+    turn).
+    """
+    B = int(state.done.shape[0])
+    # the scatter-drop tail is a host-side constant: every pad slot carries
+    # the same out-of-range index B, so build it once, not once per turn
+    pad_tail = np.full(B, B, dtype=np.int32)
+    t = int(state.turn)                    # advanced host-side: one step = +1
+    while t < max_turns:
+        ci = t % k
+        # one packed transfer per turn for everything the host needs
+        done, warm_ok, fills = np.asarray(host_view(state, ci))
+        if bool(done.all()):
+            break
+        act = np.flatnonzero(done == 0)
+        # polish only when it can latch: turn 0 has no carry to polish, and
+        # a turn where no live instance's carried separator can latch falls
+        # through to the cold anneal anyway — skip the polish dispatch
+        use_warm = warm and t > 0 and bool(warm_ok[act].any())
+        turn_t = t
+        t += 1
+        if not compact:
+            state = dispatch_full(state, t=turn_t, width=None,
+                                  use_warm=use_warm)
+            continue
+        n_act = len(act)
+        width = min(cap, _round_up(int(fills[act].max(initial=0))
+                                   + width_slack, WIDTH_MULT))
+        if n_act == B:
+            # full batch: the width compaction is the whole win — skip the
+            # gather/scatter round-trip entirely
+            state = dispatch_full(state, t=turn_t, width=width,
+                                  use_warm=use_warm)
+            continue
+        n_pad = min(B, _round_up(n_act, BATCH_MULT))
+        idx = np.concatenate([act.astype(np.int32),
+                              pad_tail[:n_pad - n_act]])
+        state = dispatch_sub(state, jnp.asarray(idx), jnp.int32(n_act),
+                             t=turn_t, width=width, use_warm=use_warm)
+    return state

@@ -28,17 +28,28 @@ in the fit (no hinge contribution, gradient normalized by the valid count)
 and in every masked selection; transcripts are received-points-only, matching
 the host loop's ``Node.recv``.
 
-Hot path (DESIGN.md §warm-start & transcript compaction): ``run_hot`` drives
-the same ``step`` from the host one turn at a time so it can (a) warm-start
-every refit from the previous turn's separator threaded through
-``MaxMargState.h_w``/``h_b``/``h_valid``, (b) slice the coordinator's
-transcript gather down to the bucket's live width (``w_fill``) instead of
-the worst-case capacity, and (c) drop finished instances from the dispatch.
-All three are decision-preserving — the hard-margin optimum is
-transcript-determined, so warm/compacted and the cold padded
-``run_compiled`` path agree on comm/rounds/convergence on every tested grid
-(tests/test_maxmarg_warm.py enforces it; ``run_instances(warm=False,
-compact=False)`` keeps the exact legacy-oracle execution model).
+Hot path (DESIGN.md §warm-start & transcript compaction, §shared hot loop):
+``run_hot`` drives the same ``step`` from the host one turn at a time — on
+the selector-generic machinery in :mod:`repro.engine.hotloop` — so it can
+(a) warm-start every refit from a carried separator, (b) slice the
+coordinator's transcript gather down to the bucket's live width
+(``w_fill``) instead of the worst-case capacity, and (c) drop finished
+instances from the dispatch.  The warm carry is *per-node* by default
+(``per_node=True``): each node carries the most recent proposal it verified
+clean on everything it knows (zero errors on its shard + margin > 0 on its
+transcript) and polishes from that when it next coordinates, threaded as
+the ``(k,)``-leading leaves ``MaxMargState.c_w``/``c_b``/``c_valid`` with
+the incremental clean-carry flags ``warm_node``.  In long k-party
+multi-epoch sweeps a clean proposal adopted mid-epoch usually survives to
+the node's own turn, where the single previous-*turn* carry (the
+``per_node=False`` mode, kept for the differential latch tests) is only
+ever checked against the immediately-next coordinator and rarely latches.
+All layers are
+decision-preserving — the hard-margin optimum is transcript-determined, so
+warm/compacted and the cold padded ``run_compiled`` path agree on
+comm/rounds/convergence on every tested grid (tests/test_maxmarg_warm.py
+enforces it; ``run_instances(warm=False, compact=False)`` keeps the exact
+legacy-oracle execution model).
 """
 
 from __future__ import annotations
@@ -52,11 +63,11 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.classifiers import _svm_solve_batch
+from repro.engine import hotloop
 from repro.engine.state import (
     EngineData,
     MaxMargState,
     ProtocolInstance,
-    _round_up,
     pack_instances_maxmarg,
 )
 from repro.kernels import ops, ref
@@ -113,6 +124,7 @@ def step(
     lam0: float = 1e-3,
     trans_width: Optional[int] = None,
     warm: bool = False,
+    per_node: bool = True,
     fused_kernel: bool = False,
 ) -> MaxMargState:
     """Advance every active instance by one MAXMARG turn (pure, jittable,
@@ -121,8 +133,11 @@ def step(
     ``trans_width`` (static) compacts the coordinator-transcript gather to
     the first ``trans_width`` rows — sound whenever it covers every active
     instance's live fill (``run_hot`` guarantees this; ``None`` gathers the
-    full capacity).  ``warm`` (static) threads the previous turn's separator
-    into the refit's polish pre-stage.  ``fused_kernel`` (static) routes the
+    full capacity).  ``warm`` (static) threads a carried separator into the
+    refit's polish pre-stage: the last proposal the coordinator *verified
+    clean* on everything it knows when ``per_node`` (static, the default —
+    see the module docstring), else the previous turn's proposal.
+    ``fused_kernel`` (static) routes the
     post-refit margin scan through the fused Pallas support/violation kernel
     (``kernels.support_margin.maxmarg_turn_scan_batched``, the TPU artifact)
     instead of its jnp reference — both produce identical integer decisions
@@ -148,11 +163,26 @@ def step(
         K, yK = Xc, yc
     yKf = yK.astype(K.dtype)
     if warm:
-        w, b, _ = _svm_solve_batch(
+        if per_node and k > 2:
+            # the per-node carry the coordinator verified clean; at k=2 the
+            # carry bookkeeping is statically skipped (see below), so warm
+            # falls back to the single previous-turn carry there
+            w0 = jnp.take(state.c_w, ci, axis=1)
+            b0 = jnp.take(state.c_b, ci, axis=1)
+            wok = jnp.take(state.c_valid, ci, axis=1) \
+                & jnp.take(state.warm_node, ci, axis=1)
+        else:
+            w0, b0, wok = state.h_w, state.h_b, state.h_valid
+        # clean0 is the solver's own polish gate (carried separator
+        # classifies the fit set cleanly) — the latch counter's source,
+        # observability only, never a protocol decision
+        w, b, fit_ok, clean0 = _svm_solve_batch(
             K, yKf, jnp.float32(lam0), steps, stages,
-            w0=state.h_w, b0=state.h_b, warm_ok=state.h_valid)
+            w0=w0, b0=b0, warm_ok=wok, return_gate=True)
     else:
-        w, b, _ = _svm_solve_batch(K, yKf, jnp.float32(lam0), steps, stages)
+        w, b, fit_ok = _svm_solve_batch(K, yKf, jnp.float32(lam0), steps,
+                                        stages)
+        clean0 = jnp.zeros_like(state.done)
 
     # -- 2-4 scans: one fused pass over the proposal --------------------------
     # support band ranks on the fit set, per-node error counts, and per-node
@@ -219,13 +249,59 @@ def step(
         wy = wy.at[:, ci].set(wyc2)
         w_fill = w_fill.at[:, ci].set(fc)
 
-    # -- 5. ε-termination + hypothesis bookkeeping --------------------------
+    # -- 5. ε-termination + hypothesis/warm-carry bookkeeping ---------------
     term = active & (errs <= data.budget)
-    # can the next turn's coordinator warm-start?  Only if this proposal
-    # already classifies its shard cleanly (necessary for the polish latch's
-    # clean-carried-separator gate) — the hot runner reads this to skip
-    # polish dispatches that provably cannot latch
+    # single-carry latch precondition: can the next turn's coordinator warm-
+    # start from *this* proposal?  Only if it already classifies that shard
+    # cleanly (necessary for the polish latch's clean-carry gate)
     err_next = jnp.take(err_k, (ci + 1) % k, axis=1)
+
+    # per-node carries: each node *adopts* this turn's proposal as its carry
+    # whenever it verifies the proposal clean on everything it knows — zero
+    # errors on its own shard (the err_k bits it reports anyway) and margin
+    # > 0 on every row of its current transcript.  A node's own fit can
+    # never survive to its next turn (a continuing turn always lands
+    # violation replies the fit misclassifies in its transcript), but a
+    # *later, cleaner* proposal adopted mid-epoch usually can — that is what
+    # latches in long k-party sweeps.  Flags then degrade incrementally:
+    # the broadcast S block is clean under an adopted carry by construction
+    # (its own support set), checked row-wise under a kept carry, and any
+    # violation reply dirties the coordinator's transcript conservatively.
+    # The carries are only ever read by per-node warm refits, so the
+    # bookkeeping is traced only when this step may feed one (``per_node``
+    # static — the runners pass per_node=False for cold and single-carry
+    # runs).  At k=2 the mechanism is additionally provably inert — the
+    # lone non-coordinator verifying the proposal clean IS the
+    # ε-termination (errs = its error count ≤ budget), so adoption implies
+    # the instance is done — and skipped regardless (k is static).
+    if per_node and k > 2:
+        is_ci = (jnp.arange(k) == ci)[None, :]           # (1, k)
+        viol_any = jnp.any(fire, axis=1)                 # (B,)
+        Wx_all = state.wx if trans_width is None \
+            else state.wx[:, :, :trans_width]            # pre-append rows
+        Wy_all = state.wy if trans_width is None \
+            else state.wy[:, :, :trans_width]
+        mT = Wy_all.astype(K.dtype) * (
+            sum(Wx_all[..., i] * w[:, None, None, i] for i in range(d))
+            + b[:, None, None])                          # (B, k, W)
+        trans_clean = jnp.all((Wy_all == 0) | (mT > 0.0), axis=2)
+        adopt = active[:, None] & fit_ok[:, None] & (err_k == 0) \
+            & trans_clean
+        c_w = jnp.where(adopt[..., None], w[:, None, :], state.c_w)
+        c_b = jnp.where(adopt, b[:, None], state.c_b)
+        mS = S_lab[:, None, :].astype(K.dtype) * (
+            sum(S_pts[:, None, :, i].astype(K.dtype) * c_w[:, :, None, i]
+                for i in range(d)) + c_b[:, :, None])    # (B, k, r)
+        s_clean = jnp.all((S_lab[:, None, :] == 0) | (mS > 0.0), axis=2)
+        recv = active[:, None] & ~is_ci                  # S recipients
+        viol_hit = is_ci & (viol_any & active)[:, None]  # replies landed
+        flag_adopt = jnp.where(is_ci, ~viol_any[:, None], True)
+        flag_keep = state.warm_node & (s_clean | ~recv) & ~viol_hit
+        c_valid = state.c_valid | adopt
+        warm_node = jnp.where(adopt, flag_adopt, flag_keep)
+    else:
+        c_w, c_b = state.c_w, state.c_b
+        c_valid, warm_node = state.c_valid, state.warm_node
     return MaxMargState(
         wx=wx, wy=wy, w_fill=w_fill,
         turn=state.turn + 1,
@@ -235,13 +311,17 @@ def step(
         h_w=jnp.where(active[:, None], w, state.h_w),
         h_b=jnp.where(active, b, state.h_b),
         h_valid=state.h_valid | active,
-        warm_next=jnp.where(active, err_next == 0, state.warm_next),
+        warm_turn=jnp.where(active, err_next == 0, state.warm_turn),
+        c_w=c_w, c_b=c_b,
+        c_valid=c_valid,
+        warm_node=warm_node,
+        latches=state.latches + (active & clean0).astype(jnp.int32),
         comm=comm,
     )
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "k", "max_turns", "max_support", "steps", "stages", "warm",
+    "k", "max_turns", "max_support", "steps", "stages", "warm", "per_node",
     "fused_kernel"))
 def run_compiled(
     data: EngineData,
@@ -254,6 +334,7 @@ def run_compiled(
     stages: int = 3,
     lam0: float = 1e-3,
     warm: bool = False,
+    per_node: bool = True,
     fused_kernel: bool = False,
 ) -> MaxMargState:
     """The whole MAXMARG sweep as one device computation: while_loop over
@@ -268,39 +349,31 @@ def run_compiled(
     def body(s: MaxMargState):
         return step(data, s, k=k, max_support=max_support, steps=steps,
                     stages=stages, lam0=lam0, warm=warm,
+                    per_node=per_node and warm,
                     fused_kernel=fused_kernel)
 
     return lax.while_loop(cond, body, state0)
 
 
-_step_jit = jax.jit(step, static_argnames=(
-    "k", "max_support", "steps", "stages", "trans_width", "warm",
-    "fused_kernel"))
+_STEP_STATICS = ("k", "max_support", "steps", "stages", "trans_width",
+                 "warm", "per_node", "fused_kernel")
+
+_step_jit = jax.jit(step, static_argnames=_STEP_STATICS)
 
 
-def _take_instances(tree, idx):
-    """Gather instance rows ``idx`` from every (B, ...) leaf (scalar leaves —
-    the shared turn counter — pass through).  Out-of-range indices gather
-    zero-filled rows: an all-label-0 instance is the engine's inert element
-    (no valid fit rows ⇒ the solver latches it immediately with an infinite
-    min margin, every masked selection is empty), which is exactly what the
-    hot turn's padding rows must be."""
-    return jax.tree_util.tree_map(
-        lambda a: a if a.ndim == 0
-        else jnp.take(a, idx, axis=0, mode="fill", fill_value=0), tree)
+def _pad_fix(sub: MaxMargState, pad_row: jnp.ndarray) -> MaxMargState:
+    """Mark gathered out-of-range rows inert: done=True masks them out of
+    every decision and comm update, and trusting their (zero) carries lets
+    the warm polish latch them instantly (zero data ⇒ infinite min margin),
+    so padding can never force an annealing stage the live rows don't
+    need."""
+    return sub._replace(done=sub.done | pad_row,
+                        h_valid=sub.h_valid | pad_row,
+                        c_valid=sub.c_valid | pad_row[:, None],
+                        warm_node=sub.warm_node | pad_row[:, None])
 
 
-def _put_instances(full, sub, idx):
-    """Scatter ``sub`` rows back into ``full`` at ``idx`` (scalar leaves take
-    the sub value — the advanced turn counter).  Padding rows carry an
-    out-of-range index, which a JAX scatter *drops*, so they never land."""
-    return jax.tree_util.tree_map(
-        lambda f, s: s if f.ndim == 0 else f.at[idx].set(s), full, sub)
-
-
-@functools.partial(jax.jit, static_argnames=(
-    "k", "max_support", "steps", "stages", "trans_width", "warm",
-    "fused_kernel"))
+@functools.partial(jax.jit, static_argnames=_STEP_STATICS)
 def _hot_turn(
     data: EngineData,
     state: MaxMargState,
@@ -314,35 +387,42 @@ def _hot_turn(
     lam0: float,
     trans_width: int,
     warm: bool,
+    per_node: bool,
     fused_kernel: bool,
 ) -> MaxMargState:
     """One compacted turn as a single dispatch: gather the active instances,
     advance them by one ``step`` at the compacted transcript width, scatter
-    the results back.  Fusing the gather/scatter into the turn's jit keeps
-    the host loop at one device computation per turn (eager per-leaf
-    scatters cost more than the refit they wrap on CPU)."""
-    sub_data = _take_instances(data, idx)
-    sub = _take_instances(state, idx)
-    # tail rows (idx == B, gathered zero-filled) are inert: done=True masks
-    # them out of every decision and comm update, and h_valid=True lets the
-    # warm polish latch them instantly (zero data ⇒ infinite min margin), so
-    # padding can never force an annealing stage the live rows don't need
-    pad_row = jnp.arange(idx.shape[0]) >= n_act
-    sub = sub._replace(done=sub.done | pad_row,
-                       h_valid=sub.h_valid | pad_row)
-    sub = step(sub_data, sub, k=k, max_support=max_support, steps=steps,
-               stages=stages, lam0=lam0, trans_width=trans_width, warm=warm,
-               fused_kernel=fused_kernel)
-    return _put_instances(state, sub, idx)
+    the results back (``hotloop.gathered_turn`` — fusing the gather/scatter
+    into the turn's jit keeps the host loop at one device computation per
+    turn; eager per-leaf scatters cost more than the refit they wrap on
+    CPU)."""
+    step_fn = functools.partial(
+        step, k=k, max_support=max_support, steps=steps, stages=stages,
+        lam0=lam0, trans_width=trans_width, warm=warm, per_node=per_node,
+        fused_kernel=fused_kernel)
+    return hotloop.gathered_turn(step_fn, _pad_fix, data, state, idx, n_act)
 
 
-@jax.jit
-def _host_view(state: MaxMargState, ci: jnp.ndarray) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnames=("per_node",))
+def _host_view(state: MaxMargState, ci: jnp.ndarray, *,
+               per_node: bool = True) -> jnp.ndarray:
     """The hot loop's per-turn host knowledge as one (3, B) i32 transfer:
-    done flags, warm-carry flags, and the coordinator's transcript fills."""
+    done flags, the upcoming coordinator's warm-latch flags, and the
+    transcript fills the width compaction keys on.  With per-node carry
+    tracking the fill row is the max across *all* nodes — the carry
+    bookkeeping's ``trans_clean`` scan reads every transcript, so the
+    capped width must cover every live row (the `w_fill` contract, DESIGN
+    §shared hot loop); otherwise only the coordinator's transcript is read
+    and its fill alone keys the cap."""
+    k = state.w_fill.shape[1]
+    track = per_node and k > 2
+    wflag = (jnp.take(state.warm_node, ci, axis=1) if track
+             else state.warm_turn)
+    fills = (jnp.max(state.w_fill, axis=1) if track
+             else jnp.take(state.w_fill, ci, axis=1))
     return jnp.stack([state.done.astype(jnp.int32),
-                      state.warm_next.astype(jnp.int32),
-                      jnp.take(state.w_fill, ci, axis=1)])
+                      wflag.astype(jnp.int32),
+                      fills])
 
 
 def run_hot(
@@ -356,10 +436,12 @@ def run_hot(
     stages: int = 3,
     lam0: float = 1e-3,
     warm: bool = True,
+    per_node: bool = True,
     compact: bool = True,
     fused_kernel: bool = False,
 ) -> MaxMargState:
-    """The MAXMARG sweep as a host-driven turn loop over the jitted ``step``.
+    """The MAXMARG sweep as a host-driven turn loop over the jitted ``step``
+    (the shared machinery in :mod:`repro.engine.hotloop`).
 
     Relative to ``run_compiled`` (one while_loop at worst-case shapes) this
     trades one dispatch per *turn* — protocol sweeps converge in a few
@@ -375,9 +457,11 @@ def run_hot(
       (the live set rounds up to a multiple of 4 with inert zero-filled
       padding rows), so a long tail of unconverged instances stops paying
       for the whole sweep's refit math;
-    * **warm refits** (``warm=True``): turn ≥ 1 refits polish the previous
-      turn's separator instead of annealing from zero (see
-      ``classifiers._svm_solve_batch``).
+    * **warm refits** (``warm=True``): turn ≥ 1 refits polish a carried
+      separator instead of annealing from zero — the last proposal each
+      node verified clean on its own data when ``per_node`` (the default;
+      see the module docstring), else the previous turn's proposal
+      (see ``classifiers._svm_solve_batch``).
 
     Per-instance results are identical in every protocol decision to
     ``run_compiled`` — solver math differs only by float reassociation
@@ -385,46 +469,29 @@ def run_hot(
     transcript-determined optimum (tests/test_maxmarg_warm.py pins comm/
     rounds/convergence and the canonicalized separator across both paths).
     """
-    B = int(state.done.shape[0])
     cap = int(state.wx.shape[2])
+    # carry bookkeeping must run on *every* turn of a warm per-node run
+    # (including turns whose polish dispatch is skipped) but on none of a
+    # cold or single-carry run, so the tracking flag is run-level, not
+    # per-dispatch
+    track = per_node and warm
     opts = dict(k=k, max_support=max_support, steps=steps, stages=stages,
-                lam0=lam0, fused_kernel=fused_kernel)
-    t = int(state.turn)                    # advanced host-side: one step = +1
-    while t < max_turns:
-        ci = t % k
-        # one packed transfer per turn for everything the host needs:
-        # done / warm-carry flags / the coordinator's live fills
-        done, warm_ok, fills = np.asarray(_host_view(state, ci))
-        if bool(done.all()):
-            break
-        act = np.flatnonzero(done == 0)
-        # polish only when it can latch: turn 0 has no separator to carry,
-        # and a turn where no live instance's carried separator cleanly
-        # classified the incoming coordinator's shard (warm_next) falls
-        # through to the cold anneal anyway — skip the polish dispatch
-        use_warm = warm and t > 0 and bool(warm_ok[act].any())
-        t += 1
-        if not compact:
-            state = _step_jit(data, state, trans_width=None, warm=use_warm,
-                              **opts)
-            continue
-        n_act = len(act)
-        width = min(cap, _round_up(int(fills[act].max(initial=0)), 8))
-        if n_act == B:
-            # full batch: the width compaction is the whole win — skip the
-            # gather/scatter round-trip entirely
-            state = _step_jit(data, state, trans_width=width, warm=use_warm,
-                              **opts)
-            continue
-        n_pad = min(B, _round_up(n_act, 4))
-        # tail indices point out of range: gathers fill them with inert
-        # all-label-0 rows, scatters drop them — so n_act stays a traced
-        # value and the compile cache keys only on (n_pad, width, warm)
-        idx = np.concatenate([act, np.full(n_pad - n_act, B)])
-        state = _hot_turn(data, state, jnp.asarray(idx, jnp.int32),
-                          jnp.int32(n_act), trans_width=width, warm=use_warm,
-                          **opts)
-    return state
+                lam0=lam0, per_node=track, fused_kernel=fused_kernel)
+
+    def dispatch_full(s, *, t, width, use_warm):
+        return _step_jit(data, s, trans_width=width, warm=use_warm, **opts)
+
+    def dispatch_sub(s, idx, n_act, *, t, width, use_warm):
+        return _hot_turn(data, s, idx, n_act, trans_width=width,
+                         warm=use_warm, **opts)
+
+    def host_view(s, ci):
+        return _host_view(s, ci, per_node=track)
+
+    return hotloop.run_hot(state, k=k, max_turns=max_turns, cap=cap,
+                           host_view=host_view, dispatch_full=dispatch_full,
+                           dispatch_sub=dispatch_sub, warm=warm,
+                           compact=compact)
 
 
 def run_instances(
@@ -437,6 +504,7 @@ def run_instances(
     stages: int = 3,
     lam: float = 1e-3,
     warm: bool = True,
+    per_node: bool = True,
     compact: bool = True,
     fused_kernel: Optional[bool] = None,
 ):
@@ -449,9 +517,12 @@ def run_instances(
     ``warm``/``compact`` select the hot path (``run_hot``); passing both as
     False runs the single-dispatch cold padded ``run_compiled`` — the exact
     pre-compaction execution model, kept for legacy-oracle parity and the
-    warm-vs-cold differential gate.  ``fused_kernel`` routes the per-turn
-    margin scans through the Pallas kernel (default: on TPU only, like the
-    MEDIAN selector's ``cut_kernel``).
+    warm-vs-cold differential gate.  ``per_node`` picks the warm-carry mode
+    (the last proposal each node verified clean vs the previous turn's
+    proposal — see the module docstring and ``run_hot``).
+    ``fused_kernel`` routes the per-turn margin scans through
+    the Pallas kernel (default: on TPU only, like the MEDIAN selector's
+    ``cut_kernel``).
     """
     from repro.core import classifiers as clf
     from repro.core.protocols.one_way import ProtocolResult
@@ -467,18 +538,19 @@ def run_instances(
     if warm or compact:
         final = run_hot(data, state0, k=k, max_turns=k * max_epochs,
                         max_support=max_support, steps=steps, stages=stages,
-                        lam0=lam, warm=warm, compact=compact,
-                        fused_kernel=fused_kernel)
+                        lam0=lam, warm=warm, per_node=per_node,
+                        compact=compact, fused_kernel=fused_kernel)
     else:
         final = run_compiled(data, state0, k=k, max_turns=k * max_epochs,
                              max_support=max_support, steps=steps,
-                             stages=stages, lam0=lam,
+                             stages=stages, lam0=lam, per_node=per_node,
                              fused_kernel=fused_kernel)
 
     converged = np.asarray(final.converged)
     epochs = np.asarray(final.epochs)
     h_w = np.asarray(final.h_w, np.float64)
     h_b = np.asarray(final.h_b, np.float64)
+    latches = np.asarray(final.latches)
     comm_np = type(final.comm)(*(np.asarray(a) for a in final.comm))
     d = data.X.shape[3]
     results: List[ProtocolResult] = []
@@ -490,6 +562,8 @@ def run_instances(
             rounds=int(epochs[i]) if converged[i] else max_epochs,
             converged=bool(converged[i]),
             extra={"engine": True, "batch": len(instances),
-                   "selector": "maxmarg", "warm": warm, "compact": compact},
+                   "selector": "maxmarg", "warm": warm, "compact": compact,
+                   "per_node": per_node,
+                   "warm_latches": int(latches[i])},
         ))
     return results

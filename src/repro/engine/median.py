@@ -26,6 +26,15 @@ Turn structure (coordinator ci = turn % k, shared across the batch):
    transcripts] and prune the direction arc (the current v is always
    discarded — certified by the empty band, and enforced explicitly so f32
    rounding can never stall the loop).
+
+Hot path (DESIGN.md §shared hot loop): ``run_hot`` — the ``run_instances``
+default — drives the same ``step`` from the host on the selector-generic
+machinery in :mod:`repro.engine.hotloop`, capping every per-turn transcript
+read at the live fill (``trans_width``) and dropping finished instances
+from the dispatch.  MEDIAN transcripts are mostly empty early, and the
+capped reads drop only label-0 mask identities, so the hot path is
+*bit-exact* against the cold padded ``run_compiled`` model (kept as
+``run_instances(compact=False)``; gated in tests/test_median_hot.py).
 """
 
 from __future__ import annotations
@@ -38,6 +47,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.engine import hotloop
 from repro.engine.state import (
     BatchCommLog,
     EngineData,
@@ -47,6 +57,12 @@ from repro.engine.state import (
 )
 
 _INF = jnp.inf
+
+# MEDIAN's per-turn append bound on any single transcript *before* the
+# stage-5 extremes read: the broadcast S block (≤ 2 rows).  The hot loop's
+# width compaction must cover the turn-start fill plus this slack, because
+# the extremes scan reads the post-S transcripts.
+WIDTH_SLACK = 2
 
 
 def _proj_grid(V: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
@@ -139,9 +155,29 @@ def step(
     k: int,
     first_turn: bool = False,
     cut_kernel: bool = False,
+    extremes_kernel: bool = False,
+    trans_width: Optional[int] = None,
 ) -> ProtocolState:
     """Advance every active instance by one protocol turn (pure, jittable,
     shape-stable — usable under jit/vmap/while_loop).
+
+    ``trans_width`` (static) caps every per-turn transcript *read* — the
+    coordinator band scan and the stage-5 extremes scan — at the first
+    ``trans_width`` rows; appends still write the full-capacity buffers.
+    Sound whenever it covers every active instance's live fill plus the
+    ≤ ``WIDTH_SLACK`` rows the S broadcast appends before the stage-5
+    extremes read (``run_hot`` guarantees this; ``None`` reads the full
+    capacity).  Rows at or beyond the fill are label-0 and contribute only
+    mask identities to the band/extremes max-min reductions, so the cap is
+    *bit-exact*, not merely decision-exact.
+
+    ``extremes_kernel`` (static; TPU default via ``run_instances``, like
+    ``cut_kernel``) routes the stage-5 per-node extremes scan through the
+    fused fill-capped Pallas kernel
+    (:func:`repro.kernels.support_margin.median_extremes_batched`) instead
+    of the inline reduction — integer row choices, bit-for-bit against its
+    jnp reference; the same FMA-boundary tie caveat as ``cut_kernel``
+    applies against the *inline* path.
 
     ``first_turn=True`` constant-folds the (B, m, n) median-cut scan: on the
     fresh state every direction is allowed and the transcript is empty, so
@@ -172,6 +208,9 @@ def step(
     # threshold_ranges rescan of the coordinator's buffer
     Wxc = jnp.take(state.wx, ci, axis=1)                 # (B, cap, d)
     Wyc = jnp.take(state.wy, ci, axis=1)                 # (B, cap)
+    if trans_width is not None:                          # fill-capped read
+        Wxc = Wxc[:, :trans_width]
+        Wyc = Wyc[:, :trans_width]
     lo = jnp.take(state.lo_w, ci, axis=1)                # (B, m)
     hi = jnp.take(state.hi_w, ci, axis=1)
 
@@ -276,10 +315,25 @@ def step(
         messages=comm.messages + jnp.where(fire_err, k - 1, 0),
     )
 
-    # -- 5. per-node extremes along v (post-S transcripts) ------------------
-    XW = jnp.concatenate([data.X, wx], axis=2)           # (B, k, n+cap, d)
-    yW = jnp.concatenate([data.y, wy], axis=2)
-    has_pk, lo_k, p_k, has_qk, hi_k, q_k = _extremes(XW, yW, v)
+    # -- 5. per-node extremes along v (post-S transcripts, fill-capped) -----
+    if trans_width is None:
+        wx_r, wy_r = wx, wy
+    else:
+        wx_r = wx[:, :, :trans_width]
+        wy_r = wy[:, :, :trans_width]
+    XW = jnp.concatenate([data.X, wx_r], axis=2)         # (B, k, n+W, d)
+    yW = jnp.concatenate([data.y, wy_r], axis=2)
+    if extremes_kernel:
+        from repro.engine import dataplane
+        i_p, i_q = dataplane.median_extremes(v, XW, yW, use_pallas=True)
+        has_pk = jnp.any(yW == 1, axis=2)
+        has_qk = jnp.any(yW == -1, axis=2)
+        p_k = _gather_rows2(XW, i_p)
+        q_k = _gather_rows2(XW, i_q)
+        lo_k = jnp.where(has_pk, _proj_dir(p_k, v), -_INF)
+        hi_k = jnp.where(has_qk, _proj_dir(q_k, v), _INF)
+    else:
+        has_pk, lo_k, p_k, has_qk, hi_k, q_k = _extremes(XW, yW, v)
     lo_g = jnp.max(lo_k, axis=1)
     hi_g = jnp.min(hi_k, axis=1)
     best_p = _gather_rows(p_k, jnp.argmax(lo_k, axis=1))  # first max node
@@ -358,7 +412,8 @@ def step(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("k", "max_turns", "cut_kernel"))
+@functools.partial(jax.jit, static_argnames=("k", "max_turns", "cut_kernel",
+                                             "extremes_kernel"))
 def run_compiled(
     data: EngineData,
     V: jnp.ndarray,
@@ -367,19 +422,119 @@ def run_compiled(
     k: int,
     max_turns: int,
     cut_kernel: bool = False,
+    extremes_kernel: bool = False,
 ) -> ProtocolState:
     """The whole sweep as one device computation: the constant-folded first
     turn, then while_loop over ``step`` until every instance terminates or
-    the turn budget is exhausted."""
+    the turn budget is exhausted.  Always reads transcripts at the full
+    static capacity — the cold padded execution model, kept bit-exact as the
+    hot path's differential reference (``run_instances(compact=False)``)."""
 
     def cond(s: ProtocolState):
         return (s.turn < max_turns) & ~jnp.all(s.done)
 
     def body(s: ProtocolState):
-        return step(data, V, s, k=k, cut_kernel=cut_kernel)
+        return step(data, V, s, k=k, cut_kernel=cut_kernel,
+                    extremes_kernel=extremes_kernel)
 
-    return lax.while_loop(cond, body, step(data, V, state0, k=k,
-                                           first_turn=True))
+    return lax.while_loop(cond, body,
+                          step(data, V, state0, k=k, first_turn=True,
+                               extremes_kernel=extremes_kernel))
+
+
+_STEP_STATICS = ("k", "first_turn", "cut_kernel", "extremes_kernel",
+                 "trans_width")
+
+_step_jit = jax.jit(step, static_argnames=_STEP_STATICS)
+
+
+def _pad_fix(sub: ProtocolState, pad_row: jnp.ndarray) -> ProtocolState:
+    """Mark gathered out-of-range rows inert.  done=True masks them out of
+    every decision, comm update and append; their zero-filled leaves are
+    harmless under the label-0 convention (no valid rows ⇒ every masked
+    reduction hits its identity) and the scatter drops them anyway."""
+    return sub._replace(done=sub.done | pad_row)
+
+
+@functools.partial(jax.jit, static_argnames=_STEP_STATICS)
+def _hot_turn(
+    data: EngineData,
+    V: jnp.ndarray,
+    state: ProtocolState,
+    idx: jnp.ndarray,       # (n_pad,) i32 — active rows, tail = B (dropped)
+    n_act: jnp.ndarray,     # () i32 — live prefix of idx
+    *,
+    k: int,
+    first_turn: bool,
+    cut_kernel: bool,
+    extremes_kernel: bool,
+    trans_width: int,
+) -> ProtocolState:
+    """One compacted MEDIAN turn as a single dispatch (gather → step →
+    scatter fused, ``hotloop.gathered_turn``); V is shared across the batch
+    and passes through ungathered."""
+    step_fn = functools.partial(
+        step, k=k, first_turn=first_turn, cut_kernel=cut_kernel,
+        extremes_kernel=extremes_kernel, trans_width=trans_width)
+    return hotloop.gathered_turn(
+        lambda sub_data, sub: step_fn(sub_data, V, sub),
+        _pad_fix, data, state, idx, n_act)
+
+
+@jax.jit
+def _host_view(state: ProtocolState, ci: jnp.ndarray) -> jnp.ndarray:
+    """The hot loop's per-turn host knowledge as one (3, B) i32 transfer:
+    done flags, a zero warm row (MEDIAN has no warm carry), and the max
+    transcript fill across nodes — stage 5 scans *every* node's transcript,
+    so the width compaction keys on the per-instance max, not the
+    coordinator's fill alone."""
+    return jnp.stack([state.done.astype(jnp.int32),
+                      jnp.zeros_like(state.done, jnp.int32),
+                      jnp.max(state.w_fill, axis=1)])
+
+
+def run_hot(
+    data: EngineData,
+    V: jnp.ndarray,
+    state: ProtocolState,
+    *,
+    k: int,
+    max_turns: int,
+    cut_kernel: bool = False,
+    extremes_kernel: bool = False,
+    compact: bool = True,
+) -> ProtocolState:
+    """The MEDIAN sweep as a host-driven turn loop over the jitted ``step``
+    (the shared machinery in :mod:`repro.engine.hotloop`, mirroring
+    ``maxmarg.run_hot``).
+
+    MEDIAN transcripts are mostly empty early — every turn appends a handful
+    of rows into buffers sized for the whole epoch budget — so the per-turn
+    band and extremes scans run at ``round_up(max live fill + WIDTH_SLACK,
+    8)`` rows instead of the static capacity, and finished instances drop
+    out of the dispatch entirely.  Unlike MAXMARG's warm/compacted solver
+    path, both compactions are **bit-exact** here: the capped reads drop
+    only label-0 rows (mask identities of the max/min reductions) and every
+    remaining op is per-row, so hot and cold agree float-for-float, not
+    just decision-for-decision (tests/test_median_hot.py pins both).
+    """
+    cap = int(state.wx.shape[2])
+    opts = dict(k=k, cut_kernel=cut_kernel, extremes_kernel=extremes_kernel)
+
+    def dispatch_full(s, *, t, width, use_warm):
+        return _step_jit(data, V, s, first_turn=(t == 0), trans_width=width,
+                         **opts)
+
+    def dispatch_sub(s, idx, n_act, *, t, width, use_warm):
+        return _hot_turn(data, V, s, idx, n_act, first_turn=(t == 0),
+                         trans_width=width, **opts)
+
+    return hotloop.run_hot(state, k=k, max_turns=max_turns, cap=cap,
+                           host_view=_host_view,
+                           dispatch_full=dispatch_full,
+                           dispatch_sub=dispatch_sub,
+                           warm=False, compact=compact,
+                           width_slack=WIDTH_SLACK)
 
 
 def run_instances(
@@ -389,12 +544,22 @@ def run_instances(
     n_angles: int = 1024,
     max_epochs: int = 48,
     cut_kernel: Optional[bool] = None,
+    extremes_kernel: Optional[bool] = None,
+    compact: bool = True,
 ):
     """Run a batch of MEDIAN/k-party instances as one compiled sweep.
 
     Returns a list of :class:`~repro.core.protocols.one_way.ProtocolResult`,
     one per instance, shaped exactly like the per-instance path's (the
     per-instance path *is* this engine at B=1).
+
+    ``compact=True`` (the default) runs the host-driven hot path
+    (``run_hot``: fill-capped transcript reads + finished instances dropped
+    from the dispatch); ``compact=False`` keeps the cold padded
+    ``run_compiled`` — one while_loop dispatch at worst-case shapes, the
+    bit-exact pre-hot-path execution model and the differential reference.
+    ``cut_kernel``/``extremes_kernel`` route the per-turn scans through
+    their Pallas kernels (default: on TPU only).
     """
     from repro.core import classifiers as clf
     from repro.core import geometry as geo
@@ -402,14 +567,22 @@ def run_instances(
 
     if eps is not None:
         instances = [ProtocolInstance(inst.shards, eps) for inst in instances]
-    if cut_kernel is None:
+    if cut_kernel is None or extremes_kernel is None:
         from repro.engine import dataplane
-        cut_kernel = dataplane.use_pallas_default()
+        tpu = dataplane.use_pallas_default()
+        cut_kernel = tpu if cut_kernel is None else cut_kernel
+        extremes_kernel = tpu if extremes_kernel is None else extremes_kernel
     data, state0, k, _cap = pack_instances(
         instances, n_angles=n_angles, max_epochs=max_epochs)
     V = jnp.asarray(geo.direction_grid(n_angles), jnp.float32)
-    final = run_compiled(data, V, state0, k=k, max_turns=k * max_epochs,
-                         cut_kernel=cut_kernel)
+    if compact:
+        final = run_hot(data, V, state0, k=k, max_turns=k * max_epochs,
+                        cut_kernel=cut_kernel,
+                        extremes_kernel=extremes_kernel)
+    else:
+        final = run_compiled(data, V, state0, k=k, max_turns=k * max_epochs,
+                             cut_kernel=cut_kernel,
+                             extremes_kernel=extremes_kernel)
 
     converged = np.asarray(final.converged)
     epochs = np.asarray(final.epochs)
@@ -425,6 +598,7 @@ def run_instances(
             comm_np.summary(b, dim=2),
             rounds=int(epochs[b]) if converged[b] else max_epochs,
             converged=bool(converged[b]),
-            extra={"engine": True, "batch": len(instances)},
+            extra={"engine": True, "batch": len(instances),
+                   "selector": "median", "compact": compact},
         ))
     return results

@@ -109,12 +109,20 @@ class MaxMargState(NamedTuple):
     points only (the legacy host loop's ``Node.recv`` — MAXMARG nodes fit on
     own ∪ received, never on a sent-ledger).
 
-    Two fields carry the hot path's perf state between turns (DESIGN.md
-    §warm-start & transcript compaction): ``h_w``/``h_b`` double as the
-    *previous turn's separator* the warm-started refit polishes (gated by
-    ``h_valid`` — zeros are not a trustworthy warm init), and ``w_fill`` is
+    Several fields carry the hot path's perf state between turns (DESIGN.md
+    §warm-start & transcript compaction, §shared hot loop): ``w_fill`` is
     the per-instance *live transcript length* per node, from which the
-    host-driven runner picks the compacted refit width for each turn.
+    host-driven runner picks the compacted read width each turn;
+    ``h_w``/``h_b``/``h_valid`` hold the latest proposal (the result
+    hypothesis, and the init the *single-carry* warm mode polishes); the
+    ``(k,)``-leading leaves ``c_w``/``c_b``/``c_valid`` hold each node's
+    carried separator — the most recent *proposal that node verified clean*
+    on everything it knows — which the default per-node warm mode polishes
+    when that node next coordinates, with ``warm_node`` tracking
+    incrementally whether the carry still classifies the node's grown
+    transcript cleanly (the polish-latch precondition the hot runner's skip
+    logic reads).  ``latches`` counts refits whose warm gate passed, purely
+    observability (never a protocol decision).
     """
 
     wx: jnp.ndarray         # (B, k, cap, d) f32 — received-point transcripts
@@ -127,11 +135,17 @@ class MaxMargState(NamedTuple):
     h_w: jnp.ndarray        # (B, d) f32 — current hypothesis weights
     h_b: jnp.ndarray        # (B,) f32 — current hypothesis offset
     h_valid: jnp.ndarray    # (B,) bool — (h_w, h_b) is a fitted separator
-    warm_next: jnp.ndarray  # (B,) bool — proposal cleanly classified the
-    #                         next coordinator's shard (necessary condition
-    #                         for the warm polish to latch; the hot runner
-    #                         skips the polish dispatch when no live
-    #                         instance has it)
+    warm_turn: jnp.ndarray  # (B,) bool — latest proposal cleanly classified
+    #                         the next coordinator's shard (the single-carry
+    #                         warm mode's latch precondition)
+    c_w: jnp.ndarray        # (B, k, d) f32 — per-node carried separators
+    c_b: jnp.ndarray        # (B, k) f32
+    c_valid: jnp.ndarray    # (B, k) bool — node has a previous fit to carry
+    warm_node: jnp.ndarray  # (B, k) bool — node's carry still classifies its
+    #                         grown transcript cleanly (per-node latch
+    #                         precondition; maintained incrementally at
+    #                         append time)
+    latches: jnp.ndarray    # (B,) i32 — warm-gate hits (observability only)
     comm: BatchCommLog
 
 
@@ -220,7 +234,12 @@ def pack_instances_maxmarg(
         h_w=np.zeros((B, d), np.float32),
         h_b=np.zeros((B,), np.float32),
         h_valid=np.zeros((B,), bool),
-        warm_next=np.zeros((B,), bool),
+        warm_turn=np.zeros((B,), bool),
+        c_w=np.zeros((B, k, d), np.float32),
+        c_b=np.zeros((B, k), np.float32),
+        c_valid=np.zeros((B, k), bool),
+        warm_node=np.zeros((B, k), bool),
+        latches=np.zeros((B,), np.int32),
         comm=BatchCommLog(*(np.zeros((B,), np.int32)
                             for _ in BatchCommLog._fields)),
     )

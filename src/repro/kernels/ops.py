@@ -236,6 +236,25 @@ def support_violation_batch(
     return sup, err, viol
 
 
+def support_extremes_batch(
+    v: jnp.ndarray, XW: jnp.ndarray, yW: jnp.ndarray, *,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused MEDIAN extremes scan (per-node extreme band point indices along
+    the proposed direction) for a whole sweep: v (B, d), XW (B, k, nW, d),
+    yW (B, k, nW) with label-0 padding rows.  ``nW`` is *fill-capped* — the
+    hot loop passes transcripts sliced to the live width, and this wrapper
+    only re-pads to tile boundaries (padding rows get label 0 and are never
+    selected; a class with no members yields index 0, gated by the caller's
+    presence flags).  Returns ``(i_p, i_q)`` each (B, k) i32, bit-for-bit
+    ``ref.median_extremes_batch_ref``."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    vp = _pad_to(v, 1, _LANE)
+    Xp = _pad_to(_pad_to(XW, 2, 8), 3, _LANE)
+    yp = _pad_to(yW.astype(jnp.float32), 2, 8)
+    return _sm.median_extremes_batched(vp, Xp, yp, interpret=interpret)
+
+
 def support_uncertain_batch(
     V: jnp.ndarray, dir_ok: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
     X: jnp.ndarray, y: jnp.ndarray, *,

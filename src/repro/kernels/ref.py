@@ -173,6 +173,29 @@ def median_cut_scores_ref(
     return jnp.where(dir_ok, jnp.minimum(below, above), -1).astype(jnp.int32)
 
 
+def median_extremes_ref(
+    v: jnp.ndarray,                # (d,) proposed direction
+    XW: jnp.ndarray,               # (k, nW, d) per-node own ∪ capped transcript
+    yW: jnp.ndarray,               # (k, nW) ±1 (0 = padding row)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """MEDIAN's per-turn extremes scan (single instance): for each node, the
+    row index of its extreme band point along ``v`` per class — the first
+    argmax of the projection over positive rows (``i_p``) and the first
+    argmin over negative rows (``i_q``); index 0 when the class is absent
+    (callers gate on presence, derived from ``yW`` directly).
+
+    Integer row choices only, so the fill-capped Pallas kernel
+    (``kernels.support_margin.median_extremes_batched``) matches
+    bit-for-bit.  "Fill-capped": the hot loop passes transcripts sliced to
+    the live width, not the static capacity — any ``nW`` is valid under the
+    label-0 padding convention.
+    """
+    pj = XW @ v                                          # (k, nW)
+    i_p = jnp.argmax(jnp.where(yW == 1, pj, -jnp.inf), axis=1)
+    i_q = jnp.argmin(jnp.where(yW == -1, pj, jnp.inf), axis=1)
+    return i_p.astype(jnp.int32), i_q.astype(jnp.int32)
+
+
 def _topr_ranks(key: jnp.ndarray, member: jnp.ndarray, r: int) -> jnp.ndarray:
     """Rank of the ``r`` smallest member entries under ascending (key, index)
     order; everything else gets the sentinel ``n``.
@@ -252,6 +275,9 @@ uncertain_mask_batch_ref = jax.jit(
 
 median_cut_scores_batch_ref = jax.jit(
     jax.vmap(median_cut_scores_ref, in_axes=(None, 0, 0, 0, 0, 0)))
+
+median_extremes_batch_ref = jax.jit(
+    jax.vmap(median_extremes_ref, in_axes=(0, 0, 0)))
 
 @functools.partial(jax.jit, static_argnames=("rtol", "max_support",
                                              "viol_ship"))

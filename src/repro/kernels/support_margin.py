@@ -347,6 +347,75 @@ def maxmarg_turn_scan_batched(
     return sup, err, viol
 
 
+def _median_extremes_kernel(v_ref, x_ref, y_ref, ip_ref, iq_ref, *, k: int):
+    """MEDIAN's fused per-turn extremes scan for one instance (grid (B,)).
+
+    One pass over every node's own ∪ transcript rows at the hot loop's
+    fill-capped width: project onto the proposed direction and pick, per
+    node, the first-index max over positive rows and first-index min over
+    negative rows — the band extreme each node would ship.  First-index tie
+    resolution is spelled as a counting min over an iota (``argmax`` picks
+    the first maximum in the jnp reference), so the integer row choices
+    match ``ref.median_extremes_ref`` bit-for-bit.
+    """
+    v = v_ref[0].astype(jnp.float32)                     # (d,)
+    ips, iqs = [], []
+    for j in range(k):                                   # k is static, small
+        Xj = x_ref[0, j].astype(jnp.float32)             # (nW, d)
+        yj = y_ref[0, j].astype(jnp.float32)             # (nW,) ±1, 0 = pad
+        pj = Xj @ v                                      # (nW,) — MXU
+        n = pj.shape[0]
+        iota = lax.broadcasted_iota(jnp.int32, (n, 1), 0)[:, 0]
+        pj_pos = jnp.where(yj == 1.0, pj, -BIG)
+        pj_neg = jnp.where(yj == -1.0, pj, BIG)
+        # first index attaining the masked max/min; all-masked rows reduce
+        # to the mask constant, whose first index is 0 — the same fallback
+        # the reference's argmax-over-(-inf) yields
+        ips.append(jnp.min(jnp.where(pj_pos == jnp.max(pj_pos), iota, n)))
+        iqs.append(jnp.min(jnp.where(pj_neg == jnp.min(pj_neg), iota, n)))
+    ip_ref[0] = jnp.stack(ips)
+    iq_ref[0] = jnp.stack(iqs)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def median_extremes_batched(
+    v: jnp.ndarray,                # (B, d) per-instance proposed directions
+    XW: jnp.ndarray,               # (B, k, nW, d) own ∪ capped transcripts
+    yW: jnp.ndarray,               # (B, k, nW) ±1 (0 = padding row)
+    *,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused extremes scan for a whole MEDIAN sweep in one pallas_call
+    (grid (B,); protocol row counts are hundreds, so the (nW, d) tiles sit
+    comfortably in VMEM).  ``nW`` is whatever width the caller passes — the
+    hot loop's live fill cap, not the static transcript capacity.  Returns
+    ``(i_p (B, k) i32, i_q (B, k) i32)`` matching
+    ``ref.median_extremes_batch_ref`` bit-for-bit (integer row choices
+    only)."""
+    B, k, nW, d = XW.shape
+
+    kernel = functools.partial(_median_extremes_kernel, k=k)
+    ip, iq = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, k, nW, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, k, nW), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(v, XW, yW)
+    return ip, iq
+
+
 def _uncertain_kernel_batched(x_ref, y_ref, v_ref, ok_ref, lo_ref, hi_ref,
                               out_ref, acc_ref, *, num_m_blocks: int):
     """Batched variant: grid (B, nn, nm); per-instance dir_ok/lo/hi masks."""

@@ -77,6 +77,25 @@ def test_median_cut_batched_interpret_bit_for_bit():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_median_extremes_batched_interpret_bit_for_bit():
+    """The MEDIAN hot path's fill-capped per-turn extremes kernel: integer
+    row choices must match the jnp reference exactly, including the
+    absent-class and fully-padded-node fallbacks."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    B, k, nW, d = 4, 3, 60, 2
+    XW = jax.random.normal(ks[0], (B, k, nW, d))
+    yW = jnp.where(jax.random.bernoulli(ks[1], 0.5, (B, k, nW)), 1, -1)
+    yW = yW * jax.random.bernoulli(ks[2], 0.8, (B, k, nW))  # label-0 pads
+    yW = yW.at[0, 0].set(1)      # a node with no negative class
+    yW = yW.at[1, 2].set(0)      # a fully padded node
+    v = jax.random.normal(ks[3], (B, d))
+    with _interpret_ctx():
+        got = ops.support_extremes_batch(v, XW, yW, interpret=True)
+    want = ref.median_extremes_batch_ref(v, XW, yW)
+    for g, e in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+
+
 @pytest.mark.parametrize("max_support,viol_ship", [(4, 2), (8, 2), (2, 1)])
 def test_maxmarg_turn_scan_interpret_bit_for_bit(max_support, viol_ship):
     ks = jax.random.split(jax.random.PRNGKey(11), 8)

@@ -148,11 +148,99 @@ def test_solver_polish_latches_clean_carried_separator():
     assert geo >= 0.9 * 0.5                  # margin quality preserved
 
 
+def test_per_node_latches_end_to_end_with_identical_decisions():
+    """A multi-epoch k-party sweep where the per-node warm carry actually
+    latches (an easy node adopts a clean mid-epoch proposal and polishes
+    from it at its next turn) — and every protocol decision still matches
+    the cold padded model."""
+    inst = [engine.ProtocolInstance(
+        datasets.data_mixed_hardness(seed=0), 0.05, "maxmarg")]
+    rp = engine.maxmarg.run_instances(inst, max_epochs=6)[0]
+    rs = engine.maxmarg.run_instances(inst, max_epochs=6, per_node=False)[0]
+    rc = engine.maxmarg.run_instances(inst, max_epochs=6,
+                                      warm=False, compact=False)[0]
+    assert rp.rounds >= 2, "grid must be multi-epoch for carries to exist"
+    assert rp.extra["warm_latches"] >= 1, "per-node polish never latched"
+    assert rp.extra["warm_latches"] >= rs.extra["warm_latches"]
+    for r in (rp, rs):
+        assert r.comm == rc.comm
+        assert r.rounds == rc.rounds and r.converged == rc.converged
+    assert rp.converged
+
+
+def test_per_node_latch_where_single_carry_provably_falls_through():
+    """The step-level differential the per-node upgrade exists for: a
+    crafted mid-protocol state whose coordinator carries a *verified-clean*
+    separator (per-node mode) while the previous turn's proposal (the
+    single-carry init) misclassifies its fit set.  The per-node polish must
+    latch, the single-carry path must fall through to the cold anneal, the
+    latch counters must differ — and every protocol decision (comm deltas,
+    transcript appends, termination) must be identical across per-node,
+    single-carry, and fully cold execution."""
+    from repro.engine import maxmarg as MM
+
+    rng = np.random.default_rng(5)
+    half = 30
+    shards = []
+    for cx in (-1.0, 0.0, 1.0):     # three easy blob pairs, separator x=0
+        Xp = np.stack([rng.uniform(-2.0, -0.6, half),
+                       rng.uniform(cx - 0.5, cx + 0.5, half)], 1)
+        Xn = np.stack([rng.uniform(0.6, 2.0, half),
+                       rng.uniform(cx - 0.5, cx + 0.5, half)], 1)
+        X = np.concatenate([Xp, Xn]).astype(np.float32)
+        y = np.concatenate([np.ones(half), -np.ones(half)]).astype(np.int32)
+        shards.append((X, y))
+    inst = [engine.ProtocolInstance(shards, 0.05, "maxmarg")]
+    data, state0, k, _cap = engine.pack_instances_maxmarg(
+        inst, max_epochs=8, max_support=4)
+
+    # mid-protocol: node 0 holds two received support points, turn 3 (its
+    # second coordination), carries the true separator as verified-clean;
+    # the "previous turn's proposal" is orthogonal — dirty on everything
+    wx = np.asarray(state0.wx).copy()
+    wy = np.asarray(state0.wy).copy()
+    w_fill = np.asarray(state0.w_fill).copy()
+    wx[0, 0, 0], wy[0, 0, 0] = (-0.7, 0.3), 1
+    wx[0, 0, 1], wy[0, 0, 1] = (0.7, -0.3), -1
+    w_fill[0, 0] = 2
+    base = state0._replace(
+        wx=jnp.asarray(wx), wy=jnp.asarray(wy), w_fill=jnp.asarray(w_fill),
+        turn=jnp.asarray(3, jnp.int32),
+        h_w=jnp.asarray([[0.0, 1.0]], jnp.float32),      # dirty prev proposal
+        h_b=jnp.zeros((1,), jnp.float32),
+        h_valid=jnp.ones((1,), bool),
+        warm_turn=jnp.ones((1,), bool),                  # host would attempt
+        c_w=jnp.asarray(np.broadcast_to(
+            np.asarray([[-1.0, 0.0]], np.float32)[:, None], (1, 3, 2)).copy()),
+        c_b=jnp.zeros((1, 3), jnp.float32),
+        c_valid=jnp.ones((1, 3), bool),
+        warm_node=jnp.ones((1, 3), bool))
+
+    opts = dict(k=k, max_support=4, steps=500, stages=2, lam0=1e-3,
+                trans_width=None, fused_kernel=False)
+    pn = MM._step_jit(data, base, warm=True, per_node=True, **opts)
+    sg = MM._step_jit(data, base, warm=True, per_node=False, **opts)
+    cold = MM._step_jit(data, base, warm=False, per_node=True, **opts)
+
+    assert int(pn.latches[0]) == 1          # clean carry -> polish latch
+    assert int(sg.latches[0]) == 0          # dirty init -> provable gate fail
+    assert int(cold.latches[0]) == 0
+    for other in (sg, cold):
+        for a, b in zip(pn.comm, other.comm):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(pn.wy), np.asarray(other.wy))
+        np.testing.assert_array_equal(np.asarray(pn.w_fill),
+                                      np.asarray(other.w_fill))
+        assert bool(pn.done[0]) == bool(other.done[0])
+        assert bool(pn.converged[0]) == bool(other.converged[0])
+
+
 def test_hot_path_is_default_and_flagged():
     shards = datasets.data1(n_per_node=80, k=2, seed=0)
     r = engine.maxmarg.run_instances(
         [engine.ProtocolInstance(shards, 0.05, "maxmarg")])[0]
     assert r.extra["warm"] and r.extra["compact"]
+    assert r.extra["per_node"] and "warm_latches" in r.extra
     r_cold = engine.maxmarg.run_instances(
         [engine.ProtocolInstance(shards, 0.05, "maxmarg")],
         warm=False, compact=False)[0]

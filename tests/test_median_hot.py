@@ -1,0 +1,130 @@
+"""Differential gate for the MEDIAN hot path (fill-capped transcript reads +
+batch compaction on the shared ``engine.hotloop``) against the cold padded
+execution model.
+
+Unlike MAXMARG's warm/compacted solver path, the MEDIAN compactions are
+**bit-exact**, not merely decision-exact: the capped reads drop only label-0
+rows (mask identities of the band/extremes max-min reductions) and every
+remaining op is per-row, so hot and cold must agree float-for-float — this
+module pins comm totals, rounds, convergence AND the exact final separator
+across the engine test grid, the k-party case, and a staggered-convergence
+batch that exercises the gather/scatter (``n_act < B``) dispatch path.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro import engine
+from repro.core import datasets
+
+N_ANGLES = 512
+MAX_EPOCHS = 24
+
+
+def _grid():
+    """The engine MEDIAN test grid (same shape as tests/test_engine.py)."""
+    out = []
+    for gen in (datasets.data1, datasets.data2, datasets.data3):
+        for eps in (0.1, 0.05):
+            for seed in (0, 1):
+                out.append(engine.ProtocolInstance(
+                    gen(n_per_node=100, k=2, seed=seed), eps))
+    return out
+
+
+@pytest.fixture(scope="module")
+def hot_cold_runs():
+    insts = _grid()
+    hot = engine.run_instances(insts, n_angles=N_ANGLES,
+                               max_epochs=MAX_EPOCHS)          # the default
+    cold = engine.run_instances(insts, n_angles=N_ANGLES,
+                                max_epochs=MAX_EPOCHS, compact=False)
+    return insts, hot, cold
+
+
+def test_hot_cold_identical_comm_rounds_convergence(hot_cold_runs):
+    insts, hot, cold = hot_cold_runs
+    assert len(insts) >= 12
+    for i, (rh, rc) in enumerate(zip(hot, cold)):
+        assert rh.comm == rc.comm, (i, rh.comm, rc.comm)
+        assert rh.rounds == rc.rounds, i
+        assert rh.converged == rc.converged and rh.converged, i
+
+
+def test_hot_cold_same_separator_bit_for_bit(hot_cold_runs):
+    """The capped reads only drop label-0 rows, so the hot path must emit
+    the *identical* separator, not merely an equivalent one."""
+    insts, hot, cold = hot_cold_runs
+    for inst, rh, rc in zip(insts, hot, cold):
+        np.testing.assert_array_equal(rh.classifier.w, rc.classifier.w)
+        assert rh.classifier.b == rc.classifier.b
+        X = np.concatenate([s[0] for s in inst.shards])
+        np.testing.assert_array_equal(rh.classifier.predict(X),
+                                      rc.classifier.predict(X))
+
+
+def test_hot_cold_parity_kparty():
+    """k=4 multi-party: stage-5 reads every node's transcript, so the width
+    compaction keys on the max fill across nodes — this pins it."""
+    for seed, eps in ((0, 0.1), (1, 0.05)):
+        shards = datasets.data3(n_per_node=75, k=4, seed=seed)
+        inst = [engine.ProtocolInstance(shards, eps)]
+        rh = engine.run_instances(inst, n_angles=N_ANGLES,
+                                  max_epochs=MAX_EPOCHS)[0]
+        rc = engine.run_instances(inst, n_angles=N_ANGLES,
+                                  max_epochs=MAX_EPOCHS, compact=False)[0]
+        assert rh.comm == rc.comm
+        assert rh.rounds == rc.rounds and rh.converged == rc.converged
+        np.testing.assert_array_equal(rh.classifier.w, rc.classifier.w)
+
+
+def test_staggered_convergence_exercises_batch_compaction():
+    """A batch whose instances converge at different turns forces the
+    gather/scatter (n_act < B) dispatches — the dropped instances' results
+    must be untouched and the survivors' identical to the cold run."""
+    insts = [engine.ProtocolInstance(
+                 datasets.data1(n_per_node=60, k=2, seed=0), 0.3),
+             engine.ProtocolInstance(
+                 datasets.data2(n_per_node=80, k=2, seed=1), 0.02),
+             engine.ProtocolInstance(
+                 datasets.data3(n_per_node=100, k=2, seed=2), 0.02),
+             engine.ProtocolInstance(
+                 datasets.data1(n_per_node=50, k=2, seed=3), 0.3),
+             engine.ProtocolInstance(
+                 datasets.data3(n_per_node=70, k=2, seed=4), 0.05)]
+    hot = engine.run_instances(insts, n_angles=N_ANGLES,
+                               max_epochs=MAX_EPOCHS)
+    cold = engine.run_instances(insts, n_angles=N_ANGLES,
+                                max_epochs=MAX_EPOCHS, compact=False)
+    for rh, rc in zip(hot, cold):
+        assert rh.comm == rc.comm
+        assert rh.rounds == rc.rounds and rh.converged == rc.converged
+        np.testing.assert_array_equal(rh.classifier.w, rc.classifier.w)
+        assert rh.classifier.b == rc.classifier.b
+
+
+def test_hot_path_is_default_and_flagged():
+    shards = datasets.data1(n_per_node=60, k=2, seed=5)
+    r = engine.run_instances([engine.ProtocolInstance(shards, 0.05)],
+                             n_angles=N_ANGLES, max_epochs=MAX_EPOCHS)[0]
+    assert r.extra["compact"] and r.extra["selector"] == "median"
+    r_cold = engine.run_instances([engine.ProtocolInstance(shards, 0.05)],
+                                  n_angles=N_ANGLES, max_epochs=MAX_EPOCHS,
+                                  compact=False)[0]
+    assert not r_cold.extra["compact"]
+    assert r.comm == r_cold.comm
+
+
+def test_run_sweep_accepts_compact_option():
+    shards = datasets.data1(n_per_node=60, k=2, seed=6)
+    insts = [engine.ProtocolInstance(shards, 0.05)]
+    r_hot = engine.run_sweep(insts, n_angles=N_ANGLES,
+                             max_epochs=MAX_EPOCHS, compact=True)[0]
+    r_cold = engine.run_sweep(insts, n_angles=N_ANGLES,
+                              max_epochs=MAX_EPOCHS, compact=False)[0]
+    assert r_hot.comm == r_cold.comm
