@@ -30,7 +30,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 HEADLINE = ("sequential_s", "batched_s", "speedup", "engine_b1_loop_s",
             "speedup_vs_engine_b1")
 OPTIONAL = ("batched_cold_padded_s", "speedup_vs_cold_padded",
-            "speedup_hot_vs_cold")
+            "speedup_hot_vs_cold", "speedup_sharded_vs_hot")
 BENCHES = ("engine", "maxmarg", "baselines")
 
 NOTES = (
@@ -60,6 +60,7 @@ def extract(path: str) -> Optional[Dict]:
         and not report.get("legacy_oracle_disagreements")
         and not report.get("warm_cold_mismatch_indices")
         and not report.get("hot_cold_mismatch_indices")
+        and not report.get("sharded_mismatch_indices")
         and not report.get("per_node_mismatch_indices"))
     return out
 

@@ -39,14 +39,22 @@ COMMON_SCHEMA = {
 # BENCH_engine.json additionally carries the MEDIAN hot-path series (PR 5):
 # the cold padded while_loop model replayed on the same grid, and the
 # hot/cold decision+separator parity list (bar: empty — the MEDIAN
-# compactions are bit-exact).
+# compactions are bit-exact).  PR 6 adds the sharded series: the same hot
+# loop with its B axis split over a ("data",) mesh (donated buffers +
+# double-buffered dispatch) vs the single-device hot path on a wide
+# long-tail grid, held to the same bit-exactness bar.
 ENGINE_EXTRA_SCHEMA = {
     "hot_vs_cold": dict,
     "speedup_hot_vs_cold": _NUM,
     "hot_cold_mismatch_indices": list,
+    "sharded": dict,
+    "speedup_sharded_vs_hot": _NUM,
+    "sharded_mismatch_indices": list,
 }
 
 HOT_COLD_SCHEMA = {"hot_s": _NUM, "cold_s": _NUM, "speedup": _NUM}
+SHARDED_SCHEMA = {"instances": int, "n_devices": int, "hot_s": _NUM,
+                  "sharded_s": _NUM, "speedup": _NUM}
 
 # BENCH_maxmarg.json additionally carries the hot-path series (PR 4): the
 # cold-padded PR 2 execution model as in-file baseline, the per-layer
@@ -208,6 +216,9 @@ def check(path: str) -> list:
         for field, typ in HOT_COLD_SCHEMA.items():
             expect(report.get("hot_vs_cold", {}), field, typ,
                    f"{path}[hot_vs_cold]")
+        for field, typ in SHARDED_SCHEMA.items():
+            expect(report.get("sharded", {}), field, typ,
+                   f"{path}[sharded]")
 
     # size-independent invariants
     if report.get("per_instance") is not None and \
@@ -220,7 +231,7 @@ def check(path: str) -> list:
     if is_maxmarg:
         lists += ["warm_cold_mismatch_indices", "per_node_mismatch_indices"]
     if is_engine:
-        lists.append("hot_cold_mismatch_indices")
+        lists += ["hot_cold_mismatch_indices", "sharded_mismatch_indices"]
     for lst in lists:
         if report.get(lst):
             errors.append(f"{path}: {lst} is non-empty: {report[lst]}")

@@ -54,9 +54,11 @@ def run_sweep(instances, **kwargs):
     _FIT = ("steps", "stages", "lam")
     _ALLOWED = {
         "maxmarg": ("eps", "max_epochs", "max_support", "warm", "per_node",
-                    "compact", "fused_kernel") + _FIT,
+                    "compact", "fused_kernel", "mesh", "donate",
+                    "overlap") + _FIT,
         "median": ("eps", "n_angles", "max_epochs", "cut_kernel",
-                   "extremes_kernel", "compact"),
+                   "extremes_kernel", "compact", "mesh", "donate",
+                   "overlap"),
         "sampling": ("eps", "vc_dim", "c") + _FIT,
         "naive": _FIT,
         "voting": _FIT,

@@ -23,7 +23,20 @@ transcript-driven selector) rides the identical code path:
   only on ``(n_pad, width, warm)``;
 * **warm-carry threading** — the host reads the selector's per-turn
   warm-latch flags and skips the polish dispatch on turns where no live
-  instance can latch.
+  instance can latch;
+* **sharded dispatch** (DESIGN.md §sharded hot loop) — with ``shards=S``
+  the per-turn sub-batch index is built *per shard* (``balanced_index``):
+  the live set splits into S local slices padded to a common multiple of
+  ``BATCH_MULT``, so every device runs the same shapes and none idles while
+  another runs live rows; the selector's sharded dispatches map them over a
+  1-D ("data",) mesh;
+* **double buffering** (``overlap=True``) — turn t+1 is dispatched from the
+  one-turn-*stale* host view before the host blocks on turn t's view
+  decode, overlapping host decision logic with device compute.  Sound
+  because ``done`` is monotone (stale active sets are supersets whose extra
+  rows are masked no-ops) and the stale fill plus the selector's
+  ``width_growth`` bound covers the true fill; at most one wasted all-done
+  masked dispatch runs at termination.
 
 The selector supplies three callables (see :func:`run_hot`); everything it
 must guarantee about padding rows is the engine's standing label-0
@@ -35,16 +48,24 @@ need).
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.engine.state import _round_up
+from repro.engine.state import _round_up, shard_specs  # noqa: F401 (re-export)
 
 BATCH_MULT = 4   # live batch rounds up to this (compile-cache granularity)
 WIDTH_MULT = 8   # live transcript width rounds up to this
+
+# every compacted dispatch appends its compile-cache key here:
+# (n_pad, width, use_warm, first_turn) with n_pad = B for full-batch turns.
+# tests/test_recompile.py pins that the number of step lowerings never
+# exceeds the distinct keys — i.e. the cache keys on (n_pad, width, warm)
+# only, and shard-aware padding can't silently reintroduce per-turn
+# recompiles.  Bounded observability: the driver clears it per sweep-test.
+KEY_LOG: List[Tuple[int, int, bool, bool]] = []
 
 
 def take_instances(tree, idx):
@@ -85,6 +106,32 @@ def gathered_turn(step_fn, pad_fix, data, state, idx, n_act):
     return put_instances(state, sub, idx)
 
 
+def balanced_index(act: np.ndarray, B: int, shards: int):
+    """Shard-balanced compacted index for a sharded sub-batch dispatch.
+
+    Splits the sorted global active set into per-shard *local* index slices
+    (shard s owns global rows ``[s·B/S, (s+1)·B/S)``), pads every slice to
+    the common ``L = round_up(max per-shard live count, BATCH_MULT)`` with
+    the out-of-range index B (gather-fill / scatter-drop, same convention
+    as the single-device tail), and returns ``(idx, n_act)``: ``idx`` is
+    (S·L,) i32 — shard s's slice at ``idx[s·L:(s+1)·L]`` — and ``n_act`` is
+    the (S,) per-shard live count the sharded dispatch reads locally.  The
+    common L is the balance contract: every device runs the same compacted
+    shapes, so none idles while another runs live rows, and the compile
+    cache keys on L exactly like the single-device path keys on n_pad.
+    """
+    B_loc = B // shards
+    shard_of = act // B_loc
+    counts = np.bincount(shard_of, minlength=shards).astype(np.int32)
+    L = max(BATCH_MULT, _round_up(int(counts.max()), BATCH_MULT))
+    idx = np.full((shards, L), B, np.int32)
+    local = (act - shard_of * B_loc).astype(np.int32)
+    offs = np.concatenate([[0], np.cumsum(counts)])
+    for s in range(shards):          # act is sorted -> slices stay ordered
+        idx[s, :counts[s]] = local[offs[s]:offs[s + 1]]
+    return idx.reshape(-1), counts
+
+
 def run_hot(
     state,
     *,
@@ -97,6 +144,9 @@ def run_hot(
     warm: bool = False,
     compact: bool = True,
     width_slack: int = 0,
+    width_growth: int = 0,
+    overlap: bool = False,
+    shards: Optional[int] = None,
 ):
     """The generic host-driven sweep loop over a selector's jitted ``step``.
 
@@ -114,41 +164,102 @@ def run_hot(
     :func:`gathered_turn`).  ``t`` is the host-known turn index, from which
     a selector derives host-static flags (MEDIAN's constant-folded first
     turn).
+
+    Donation contract: the dispatches MAY donate their ``state`` argument
+    (the sharded path does — the scatter-back then reuses the transcript
+    buffers in place instead of copying them every turn).  The loop keeps a
+    strict single-consumer chain: each state handle is passed to exactly
+    one dispatch, and the ``host_view`` of a handle is always enqueued
+    before the dispatch that donates it.
+
+    ``shards=S`` routes sub-batch turns through :func:`balanced_index` —
+    ``dispatch_sub`` then receives the (S·L,) per-shard index block and the
+    (S,) per-shard live counts instead of a flat prefix index.
+
+    ``overlap=True`` double-buffers the loop: after dispatching turn t from
+    a fresh view, turn t+1 is dispatched immediately from the same —
+    now one-turn-stale — view before the host blocks on turn t's view
+    decode.  Stale parameters are always sound: ``done`` is monotone, so
+    the stale active set is a superset whose extra rows are masked no-ops,
+    and the stale fill plus the selector's ``width_growth`` (its worst-case
+    one-turn transcript growth) covers the true fill.  MEDIAN results stay
+    bit-exact (any covering width is); warm selectors may make different —
+    equally valid — polish-skip choices, which is decision-preserving (the
+    warm gate re-checks on device).  At most one wasted all-done masked
+    dispatch runs at termination.
     """
     B = int(state.done.shape[0])
     # the scatter-drop tail is a host-side constant: every pad slot carries
     # the same out-of-range index B, so build it once, not once per turn
     pad_tail = np.full(B, B, dtype=np.int32)
     t = int(state.turn)                    # advanced host-side: one step = +1
-    while t < max_turns:
-        ci = t % k
-        # one packed transfer per turn for everything the host needs
-        done, warm_ok, fills = np.asarray(host_view(state, ci))
-        if bool(done.all()):
-            break
+
+    if not compact:
+        while t < max_turns:
+            done, warm_ok, fills = np.asarray(host_view(state, t % k))
+            if bool(done.all()):
+                break
+            act = np.flatnonzero(done == 0)
+            use_warm = warm and t > 0 and bool(warm_ok[act].any())
+            state = dispatch_full(state, t=t, width=None, use_warm=use_warm)
+            t += 1
+        return state
+
+    def params(done, warm_ok, fills, t, growth):
+        """Dispatch parameters for turn t from a view (``growth`` is the
+        extra width slack when the view is one turn stale)."""
         act = np.flatnonzero(done == 0)
         # polish only when it can latch: turn 0 has no carry to polish, and
         # a turn where no live instance's carried separator can latch falls
         # through to the cold anneal anyway — skip the polish dispatch
         use_warm = warm and t > 0 and bool(warm_ok[act].any())
-        turn_t = t
-        t += 1
-        if not compact:
-            state = dispatch_full(state, t=turn_t, width=None,
-                                  use_warm=use_warm)
-            continue
-        n_act = len(act)
         width = min(cap, _round_up(int(fills[act].max(initial=0))
-                                   + width_slack, WIDTH_MULT))
+                                   + width_slack + growth, WIDTH_MULT))
+        return act, width, use_warm
+
+    def dispatch(state, act, width, use_warm, t):
+        n_act = len(act)
         if n_act == B:
             # full batch: the width compaction is the whole win — skip the
             # gather/scatter round-trip entirely
-            state = dispatch_full(state, t=turn_t, width=width,
-                                  use_warm=use_warm)
-            continue
+            KEY_LOG.append((B, width, use_warm, t == 0))
+            return dispatch_full(state, t=t, width=width, use_warm=use_warm)
+        if shards:
+            idx, n_vec = balanced_index(act, B, shards)
+            KEY_LOG.append((len(idx), width, use_warm, t == 0))
+            return dispatch_sub(state, jnp.asarray(idx), jnp.asarray(n_vec),
+                                t=t, width=width, use_warm=use_warm)
         n_pad = min(B, _round_up(n_act, BATCH_MULT))
         idx = np.concatenate([act.astype(np.int32),
                               pad_tail[:n_pad - n_act]])
-        state = dispatch_sub(state, jnp.asarray(idx), jnp.int32(n_act),
-                             t=turn_t, width=width, use_warm=use_warm)
+        KEY_LOG.append((n_pad, width, use_warm, t == 0))
+        return dispatch_sub(state, jnp.asarray(idx), jnp.int32(n_act),
+                            t=t, width=width, use_warm=use_warm)
+
+    # one packed transfer per turn for everything the host needs; the seed
+    # view is decoded synchronously (nothing to overlap with yet)
+    view = np.asarray(host_view(state, t % k))
+    while t < max_turns:
+        done, warm_ok, fills = view
+        if bool(done.all()):
+            break
+        act, width, use_warm = params(done, warm_ok, fills, t, 0)
+        state = dispatch(state, act, width, use_warm, t)
+        vh = host_view(state, (t + 1) % k)     # enqueue BEFORE donation of
+        t += 1                                 # this handle (next dispatch)
+        if overlap and t < max_turns:
+            # double buffer: dispatch turn t from the now-stale view before
+            # blocking on the decode of turn t-1's view (vh)
+            act_s, width_s, warm_s = params(done, warm_ok, fills, t,
+                                            width_growth)
+            state = dispatch(state, act_s, width_s, warm_s, t)
+            vh2 = host_view(state, (t + 1) % k)
+            t += 1
+            if bool(np.asarray(vh)[0].all()):
+                # the speculated turn ran on an all-done batch: a masked
+                # no-op — results are untouched, only the turn counter moved
+                break
+            view = np.asarray(vh2)
+        else:
+            view = np.asarray(vh)
     return state

@@ -68,7 +68,9 @@ from repro.engine.state import (
     EngineData,
     MaxMargState,
     ProtocolInstance,
+    device_put_sharded,
     pack_instances_maxmarg,
+    shard_specs,
 )
 from repro.kernels import ops, ref
 
@@ -359,6 +361,11 @@ _STEP_STATICS = ("k", "max_support", "steps", "stages", "trans_width",
                  "warm", "per_node", "fused_kernel")
 
 _step_jit = jax.jit(step, static_argnames=_STEP_STATICS)
+# the donated variant: the per-turn output reuses the input state's buffers
+# in place (jax invalidates the donated handle — run_hot keeps a strict
+# single-consumer chain, see hotloop.run_hot's donation contract)
+_step_jit_don = jax.jit(step, static_argnames=_STEP_STATICS,
+                        donate_argnames=("state",))
 
 
 def _pad_fix(sub: MaxMargState, pad_row: jnp.ndarray) -> MaxMargState:
@@ -373,8 +380,7 @@ def _pad_fix(sub: MaxMargState, pad_row: jnp.ndarray) -> MaxMargState:
                         warm_node=sub.warm_node | pad_row[:, None])
 
 
-@functools.partial(jax.jit, static_argnames=_STEP_STATICS)
-def _hot_turn(
+def _hot_turn_impl(
     data: EngineData,
     state: MaxMargState,
     idx: jnp.ndarray,       # (n_pad,) i32 — active rows, tail = B (dropped)
@@ -401,6 +407,57 @@ def _hot_turn(
         lam0=lam0, trans_width=trans_width, warm=warm, per_node=per_node,
         fused_kernel=fused_kernel)
     return hotloop.gathered_turn(step_fn, _pad_fix, data, state, idx, n_act)
+
+
+_hot_turn = jax.jit(_hot_turn_impl, static_argnames=_STEP_STATICS)
+# donated: the scatter-back lands in the input buffers instead of copying
+# the full (B, k, cap, …) transcript state every tail turn
+_hot_turn_don = jax.jit(_hot_turn_impl, static_argnames=_STEP_STATICS,
+                        donate_argnames=("state",))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_dispatches(mesh, dspec, sspec, opts, donate):
+    """Build (and cache per mesh/spec/static-variant) the sharded per-turn
+    dispatches: jitted ``shard_map``s of the full-batch step and of the
+    gathered sub-batch turn over the ("data",) mesh.  Everything inside a
+    shard is the unmodified single-device program on the local B/S slice —
+    MAXMARG decisions are per-instance, so no cross-shard collective exists.
+    ``check_rep=False``: the scalar turn counter is replicated by
+    construction (every shard advances it identically)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    k, max_support, steps, stages, lam0, fused_kernel = opts
+
+    def full(data, state, *, trans_width, warm, per_node):
+        def body(d, s):
+            return step(d, s, k=k, max_support=max_support, steps=steps,
+                        stages=stages, lam0=lam0, trans_width=trans_width,
+                        warm=warm, per_node=per_node,
+                        fused_kernel=fused_kernel)
+        return shard_map(body, mesh=mesh, in_specs=(dspec, sspec),
+                         out_specs=sspec, check_rep=False)(data, state)
+
+    def sub(data, state, idx, n_act, *, trans_width, warm, per_node):
+        # idx is the (S·L,) per-shard block from hotloop.balanced_index and
+        # n_act the (S,) per-shard live counts — each shard sees its (L,)
+        # local slice and (1,) count and runs the plain gathered turn
+        def body(d, s, ix, na):
+            step_fn = functools.partial(
+                step, k=k, max_support=max_support, steps=steps,
+                stages=stages, lam0=lam0, trans_width=trans_width,
+                warm=warm, per_node=per_node, fused_kernel=fused_kernel)
+            return hotloop.gathered_turn(step_fn, _pad_fix, d, s, ix, na[0])
+        return shard_map(body, mesh=mesh,
+                         in_specs=(dspec, sspec, P("data"), P("data")),
+                         out_specs=sspec, check_rep=False)(
+                             data, state, idx, n_act)
+
+    statics = ("trans_width", "warm", "per_node")
+    dn = (1,) if donate else ()
+    return (jax.jit(full, static_argnames=statics, donate_argnums=dn),
+            jax.jit(sub, static_argnames=statics, donate_argnums=dn))
 
 
 @functools.partial(jax.jit, static_argnames=("per_node",))
@@ -439,6 +496,9 @@ def run_hot(
     per_node: bool = True,
     compact: bool = True,
     fused_kernel: bool = False,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    donate: Optional[bool] = None,
+    overlap: Optional[bool] = None,
 ) -> MaxMargState:
     """The MAXMARG sweep as a host-driven turn loop over the jitted ``step``
     (the shared machinery in :mod:`repro.engine.hotloop`).
@@ -468,7 +528,23 @@ def run_hot(
     across padding widths and by warm-vs-cold approximation of the same
     transcript-determined optimum (tests/test_maxmarg_warm.py pins comm/
     rounds/convergence and the canonicalized separator across both paths).
+
+    ``mesh`` (a 1-D ("data",) mesh, ``launch.mesh.make_data_mesh``) routes
+    every dispatch through ``shard_map`` over the leading B axis — B must
+    be a multiple of the axis size (``pack_instances_maxmarg(..., mesh=``
+    pads with born-done dummies) and sub-batch turns come shard-balanced
+    from ``hotloop.balanced_index``.  ``donate``/``overlap`` default on
+    there (in-place scatter-back + double-buffered host loop; the
+    stale-view width grows by the worst one-turn transcript growth:
+    ``max(max_support, VIOL_SHIP·(k−1))`` — the S broadcast on a receiving
+    node vs the ≤2-row replies from each of k−1 peers on the coordinator).
+    MAXMARG decisions are per-instance, so sharding itself is exact; the
+    stale warm-gate under ``overlap`` may make different — equally valid —
+    polish-skip choices, decision-preserving like the warm gate itself.
+    Single-device defaults keep this path the unchanged oracle;
+    ``donate=True``/``overlap=True`` opt in.
     """
+    B = int(state.done.shape[0])
     cap = int(state.wx.shape[2])
     # carry bookkeeping must run on *every* turn of a warm per-node run
     # (including turns whose polish dispatch is skipped) but on none of a
@@ -477,21 +553,62 @@ def run_hot(
     track = per_node and warm
     opts = dict(k=k, max_support=max_support, steps=steps, stages=stages,
                 lam0=lam0, per_node=track, fused_kernel=fused_kernel)
-
-    def dispatch_full(s, *, t, width, use_warm):
-        return _step_jit(data, s, trans_width=width, warm=use_warm, **opts)
-
-    def dispatch_sub(s, idx, n_act, *, t, width, use_warm):
-        return _hot_turn(data, s, idx, n_act, trans_width=width,
-                         warm=use_warm, **opts)
+    width_growth = max(max_support, VIOL_SHIP * (k - 1))
 
     def host_view(s, ci):
         return _host_view(s, ci, per_node=track)
 
+    if mesh is not None:
+        if not compact:
+            raise ValueError("sharded sweeps require the compacted hot path")
+        S = int(mesh.shape["data"])
+        if B % S:
+            raise ValueError(
+                f"B={B} not divisible by mesh axis {S}; pack with mesh=")
+        donate = True if donate is None else donate
+        overlap = True if overlap is None else overlap
+        data = device_put_sharded(data, mesh)
+        state = device_put_sharded(state, mesh)
+        full_j, sub_j = _sharded_dispatches(
+            mesh, shard_specs(data), shard_specs(state),
+            (k, max_support, steps, stages, lam0, fused_kernel), donate)
+
+        def dispatch_full(s, *, t, width, use_warm):
+            return full_j(data, s, trans_width=width, warm=use_warm,
+                          per_node=track)
+
+        def dispatch_sub(s, idx, n_act, *, t, width, use_warm):
+            return sub_j(data, s, idx, n_act, trans_width=width,
+                         warm=use_warm, per_node=track)
+
+        return hotloop.run_hot(state, k=k, max_turns=max_turns, cap=cap,
+                               host_view=host_view,
+                               dispatch_full=dispatch_full,
+                               dispatch_sub=dispatch_sub, warm=warm,
+                               compact=True, width_growth=width_growth,
+                               overlap=overlap, shards=S)
+
+    donate = bool(donate)
+    overlap = bool(overlap)
+    if donate:
+        # donating host numpy buffers is silently ignored — upload first so
+        # the in-place scatter actually engages
+        state = jax.tree_util.tree_map(jnp.asarray, state)
+    step_d = _step_jit_don if donate else _step_jit
+    turn_d = _hot_turn_don if donate else _hot_turn
+
+    def dispatch_full(s, *, t, width, use_warm):
+        return step_d(data, s, trans_width=width, warm=use_warm, **opts)
+
+    def dispatch_sub(s, idx, n_act, *, t, width, use_warm):
+        return turn_d(data, s, idx, n_act, trans_width=width,
+                      warm=use_warm, **opts)
+
     return hotloop.run_hot(state, k=k, max_turns=max_turns, cap=cap,
                            host_view=host_view, dispatch_full=dispatch_full,
                            dispatch_sub=dispatch_sub, warm=warm,
-                           compact=compact)
+                           compact=compact, width_growth=width_growth,
+                           overlap=overlap)
 
 
 def run_instances(
@@ -507,6 +624,9 @@ def run_instances(
     per_node: bool = True,
     compact: bool = True,
     fused_kernel: Optional[bool] = None,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    donate: Optional[bool] = None,
+    overlap: Optional[bool] = None,
 ):
     """Run a batch of MAXMARG instances as one compiled sweep.
 
@@ -522,24 +642,30 @@ def run_instances(
     proposal — see the module docstring and ``run_hot``).
     ``fused_kernel`` routes the per-turn margin scans through
     the Pallas kernel (default: on TPU only, like the MEDIAN selector's
-    ``cut_kernel``).
+    ``cut_kernel``).  ``mesh`` shards the hot path over a 1-D ("data",)
+    device mesh (requires ``compact=True``); ``donate``/``overlap`` opt the
+    per-turn dispatches into buffer donation and the double-buffered host
+    loop (mesh default: both on).
     """
     from repro.core import classifiers as clf
     from repro.core.protocols.one_way import ProtocolResult
     from repro.engine import dataplane
 
+    if mesh is not None and not compact:
+        raise ValueError("sharded sweeps require the compacted hot path")
     if eps is not None:
         instances = [ProtocolInstance(inst.shards, eps, "maxmarg")
                      for inst in instances]
     if fused_kernel is None:
         fused_kernel = dataplane.use_pallas_default()
     data, state0, k, _cap = pack_instances_maxmarg(
-        instances, max_epochs=max_epochs, max_support=max_support)
+        instances, max_epochs=max_epochs, max_support=max_support, mesh=mesh)
     if warm or compact:
         final = run_hot(data, state0, k=k, max_turns=k * max_epochs,
                         max_support=max_support, steps=steps, stages=stages,
                         lam0=lam, warm=warm, per_node=per_node,
-                        compact=compact, fused_kernel=fused_kernel)
+                        compact=compact, fused_kernel=fused_kernel,
+                        mesh=mesh, donate=donate, overlap=overlap)
     else:
         final = run_compiled(data, state0, k=k, max_turns=k * max_epochs,
                              max_support=max_support, steps=steps,
@@ -553,6 +679,11 @@ def run_instances(
     latches = np.asarray(final.latches)
     comm_np = type(final.comm)(*(np.asarray(a) for a in final.comm))
     d = data.X.shape[3]
+    extra = {"engine": True, "batch": len(instances),
+             "selector": "maxmarg", "warm": warm, "compact": compact,
+             "per_node": per_node}
+    if mesh is not None:
+        extra["devices"] = int(mesh.shape["data"])
     results: List[ProtocolResult] = []
     for i in range(len(instances)):
         h = clf.LinearSeparator(h_w[i], float(h_b[i]))
@@ -561,9 +692,6 @@ def run_instances(
             comm_np.summary(i, dim=d),
             rounds=int(epochs[i]) if converged[i] else max_epochs,
             converged=bool(converged[i]),
-            extra={"engine": True, "batch": len(instances),
-                   "selector": "maxmarg", "warm": warm, "compact": compact,
-                   "per_node": per_node,
-                   "warm_latches": int(latches[i])},
+            extra=dict(extra, warm_latches=int(latches[i])),
         ))
     return results

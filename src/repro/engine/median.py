@@ -53,7 +53,9 @@ from repro.engine.state import (
     EngineData,
     ProtocolInstance,
     ProtocolState,
+    device_put_sharded,
     pack_instances,
+    shard_specs,
 )
 
 _INF = jnp.inf
@@ -446,6 +448,11 @@ _STEP_STATICS = ("k", "first_turn", "cut_kernel", "extremes_kernel",
                  "trans_width")
 
 _step_jit = jax.jit(step, static_argnames=_STEP_STATICS)
+# the donated variant: the per-turn output state reuses the input state's
+# buffers in place (jax invalidates the donated handle — run_hot keeps a
+# strict single-consumer chain, see hotloop.run_hot's donation contract)
+_step_jit_don = jax.jit(step, static_argnames=_STEP_STATICS,
+                        donate_argnames=("state",))
 
 
 def _pad_fix(sub: ProtocolState, pad_row: jnp.ndarray) -> ProtocolState:
@@ -456,8 +463,7 @@ def _pad_fix(sub: ProtocolState, pad_row: jnp.ndarray) -> ProtocolState:
     return sub._replace(done=sub.done | pad_row)
 
 
-@functools.partial(jax.jit, static_argnames=_STEP_STATICS)
-def _hot_turn(
+def _hot_turn_impl(
     data: EngineData,
     V: jnp.ndarray,
     state: ProtocolState,
@@ -479,6 +485,60 @@ def _hot_turn(
     return hotloop.gathered_turn(
         lambda sub_data, sub: step_fn(sub_data, V, sub),
         _pad_fix, data, state, idx, n_act)
+
+
+_hot_turn = jax.jit(_hot_turn_impl, static_argnames=_STEP_STATICS)
+# donated: the scatter-back lands in the input buffers instead of copying
+# the full (B, k, cap, …) transcript state every tail turn
+_hot_turn_don = jax.jit(_hot_turn_impl, static_argnames=_STEP_STATICS,
+                        donate_argnames=("state",))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_dispatches(mesh, dspec, sspec, opts, donate):
+    """Build (and cache per mesh/spec/static-variant) the sharded per-turn
+    dispatches: jitted ``shard_map``s of the full-batch step and of the
+    gathered sub-batch turn over the ("data",) mesh.  Everything inside a
+    shard is the unmodified single-device program on the local B/S slice —
+    MEDIAN decisions are per-instance, so no cross-shard collective exists
+    and the sharded sweep is bit-exact against the single-device hot path.
+    ``check_rep=False``: the scalar turn counter is replicated by
+    construction (every shard advances it identically)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    k, cut_kernel, extremes_kernel = opts
+    vspec = P(None, None)
+
+    def full(data, V, state, *, first_turn, trans_width):
+        def body(d, v, s):
+            return step(d, v, s, k=k, first_turn=first_turn,
+                        cut_kernel=cut_kernel,
+                        extremes_kernel=extremes_kernel,
+                        trans_width=trans_width)
+        return shard_map(body, mesh=mesh, in_specs=(dspec, vspec, sspec),
+                         out_specs=sspec, check_rep=False)(data, V, state)
+
+    def sub(data, V, state, idx, n_act, *, first_turn, trans_width):
+        # idx is the (S·L,) per-shard block from hotloop.balanced_index and
+        # n_act the (S,) per-shard live counts — each shard sees its (L,)
+        # local slice and (1,) count and runs the plain gathered turn
+        def body(d, v, s, ix, na):
+            step_fn = functools.partial(
+                step, k=k, first_turn=first_turn, cut_kernel=cut_kernel,
+                extremes_kernel=extremes_kernel, trans_width=trans_width)
+            return hotloop.gathered_turn(
+                lambda sub_data, sub_s: step_fn(sub_data, v, sub_s),
+                _pad_fix, d, s, ix, na[0])
+        return shard_map(body, mesh=mesh,
+                         in_specs=(dspec, vspec, sspec, P("data"), P("data")),
+                         out_specs=sspec, check_rep=False)(
+                             data, V, state, idx, n_act)
+
+    statics = ("first_turn", "trans_width")
+    dn = (2,) if donate else ()
+    return (jax.jit(full, static_argnames=statics, donate_argnums=dn),
+            jax.jit(sub, static_argnames=statics, donate_argnums=dn))
 
 
 @jax.jit
@@ -503,6 +563,9 @@ def run_hot(
     cut_kernel: bool = False,
     extremes_kernel: bool = False,
     compact: bool = True,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    donate: Optional[bool] = None,
+    overlap: Optional[bool] = None,
 ) -> ProtocolState:
     """The MEDIAN sweep as a host-driven turn loop over the jitted ``step``
     (the shared machinery in :mod:`repro.engine.hotloop`, mirroring
@@ -517,24 +580,83 @@ def run_hot(
     only label-0 rows (mask identities of the max/min reductions) and every
     remaining op is per-row, so hot and cold agree float-for-float, not
     just decision-for-decision (tests/test_median_hot.py pins both).
+
+    ``mesh`` (a 1-D ("data",) mesh, see ``launch.mesh.make_data_mesh``)
+    routes every per-turn dispatch through ``shard_map`` over the leading B
+    axis — B must be a multiple of the axis size (``pack_instances(...,
+    mesh=...)`` pads with born-done dummies) and the sub-batch index comes
+    shard-balanced from ``hotloop.balanced_index``.  On the mesh path
+    ``donate`` and ``overlap`` default on: donation makes the per-turn
+    scatter-back reuse the transcript buffers in place instead of copying
+    the full (B, k, cap, d) state, and the double-buffered loop dispatches
+    turn t+1 before blocking on turn t's view decode (``WIDTH_GROWTH =
+    2k+2`` rows cover the worst one-turn fill growth: the S block, the ≤2
+    reply rows from each of k-1 peers, and the pivot pair).  Both remain
+    bit-exact — MEDIAN is per-instance (no cross-shard collective) and any
+    covering width is exact.  Single-device defaults keep this path the
+    unchanged PR-5 oracle; ``donate=True``/``overlap=True`` opt in.
     """
+    B = int(state.done.shape[0])
     cap = int(state.wx.shape[2])
     opts = dict(k=k, cut_kernel=cut_kernel, extremes_kernel=extremes_kernel)
+    width_growth = 2 * k + 2
+
+    if mesh is not None:
+        if not compact:
+            raise ValueError("sharded sweeps require the compacted hot path")
+        S = int(mesh.shape["data"])
+        if B % S:
+            raise ValueError(
+                f"B={B} not divisible by mesh axis {S}; pack with mesh=")
+        donate = True if donate is None else donate
+        overlap = True if overlap is None else overlap
+        data = device_put_sharded(data, mesh)
+        state = device_put_sharded(state, mesh)
+        V = jnp.asarray(V, jnp.float32)
+        full_j, sub_j = _sharded_dispatches(
+            mesh, shard_specs(data), shard_specs(state),
+            (k, cut_kernel, extremes_kernel), donate)
+
+        def dispatch_full(s, *, t, width, use_warm):
+            return full_j(data, V, s, first_turn=(t == 0), trans_width=width)
+
+        def dispatch_sub(s, idx, n_act, *, t, width, use_warm):
+            return sub_j(data, V, s, idx, n_act, first_turn=(t == 0),
+                         trans_width=width)
+
+        return hotloop.run_hot(state, k=k, max_turns=max_turns, cap=cap,
+                               host_view=_host_view,
+                               dispatch_full=dispatch_full,
+                               dispatch_sub=dispatch_sub,
+                               warm=False, compact=True,
+                               width_slack=WIDTH_SLACK,
+                               width_growth=width_growth,
+                               overlap=overlap, shards=S)
+
+    donate = bool(donate)
+    overlap = bool(overlap)
+    if donate:
+        # donating host numpy buffers is silently ignored — upload first so
+        # the in-place scatter actually engages
+        state = jax.tree_util.tree_map(jnp.asarray, state)
+    step_d = _step_jit_don if donate else _step_jit
+    turn_d = _hot_turn_don if donate else _hot_turn
 
     def dispatch_full(s, *, t, width, use_warm):
-        return _step_jit(data, V, s, first_turn=(t == 0), trans_width=width,
-                         **opts)
+        return step_d(data, V, s, first_turn=(t == 0), trans_width=width,
+                      **opts)
 
     def dispatch_sub(s, idx, n_act, *, t, width, use_warm):
-        return _hot_turn(data, V, s, idx, n_act, first_turn=(t == 0),
-                         trans_width=width, **opts)
+        return turn_d(data, V, s, idx, n_act, first_turn=(t == 0),
+                      trans_width=width, **opts)
 
     return hotloop.run_hot(state, k=k, max_turns=max_turns, cap=cap,
                            host_view=_host_view,
                            dispatch_full=dispatch_full,
                            dispatch_sub=dispatch_sub,
                            warm=False, compact=compact,
-                           width_slack=WIDTH_SLACK)
+                           width_slack=WIDTH_SLACK,
+                           width_growth=width_growth, overlap=overlap)
 
 
 def run_instances(
@@ -546,6 +668,9 @@ def run_instances(
     cut_kernel: Optional[bool] = None,
     extremes_kernel: Optional[bool] = None,
     compact: bool = True,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    donate: Optional[bool] = None,
+    overlap: Optional[bool] = None,
 ):
     """Run a batch of MEDIAN/k-party instances as one compiled sweep.
 
@@ -559,12 +684,17 @@ def run_instances(
     ``run_compiled`` — one while_loop dispatch at worst-case shapes, the
     bit-exact pre-hot-path execution model and the differential reference.
     ``cut_kernel``/``extremes_kernel`` route the per-turn scans through
-    their Pallas kernels (default: on TPU only).
+    their Pallas kernels (default: on TPU only).  ``mesh`` shards the hot
+    path over a 1-D ("data",) device mesh (requires ``compact=True``);
+    ``donate``/``overlap`` opt the per-turn dispatches into buffer donation
+    and the double-buffered host loop (mesh default: both on).
     """
     from repro.core import classifiers as clf
     from repro.core import geometry as geo
     from repro.core.protocols.one_way import ProtocolResult
 
+    if mesh is not None and not compact:
+        raise ValueError("sharded sweeps require the compacted hot path")
     if eps is not None:
         instances = [ProtocolInstance(inst.shards, eps) for inst in instances]
     if cut_kernel is None or extremes_kernel is None:
@@ -573,12 +703,13 @@ def run_instances(
         cut_kernel = tpu if cut_kernel is None else cut_kernel
         extremes_kernel = tpu if extremes_kernel is None else extremes_kernel
     data, state0, k, _cap = pack_instances(
-        instances, n_angles=n_angles, max_epochs=max_epochs)
+        instances, n_angles=n_angles, max_epochs=max_epochs, mesh=mesh)
     V = jnp.asarray(geo.direction_grid(n_angles), jnp.float32)
     if compact:
         final = run_hot(data, V, state0, k=k, max_turns=k * max_epochs,
                         cut_kernel=cut_kernel,
-                        extremes_kernel=extremes_kernel)
+                        extremes_kernel=extremes_kernel,
+                        mesh=mesh, donate=donate, overlap=overlap)
     else:
         final = run_compiled(data, V, state0, k=k, max_turns=k * max_epochs,
                              cut_kernel=cut_kernel,
@@ -590,6 +721,10 @@ def run_instances(
     h_t = np.asarray(final.h_t, np.float64)
     # one host transfer per counter array, not one per instance×field
     comm_np = type(final.comm)(*(np.asarray(a) for a in final.comm))
+    extra = {"engine": True, "batch": len(instances),
+             "selector": "median", "compact": compact}
+    if mesh is not None:
+        extra["devices"] = int(mesh.shape["data"])
     results: List[ProtocolResult] = []
     for b in range(len(instances)):
         h = clf.LinearSeparator(-h_v[b], float(h_t[b]))
@@ -598,7 +733,6 @@ def run_instances(
             comm_np.summary(b, dim=2),
             rounds=int(epochs[b]) if converged[b] else max_epochs,
             converged=bool(converged[b]),
-            extra={"engine": True, "batch": len(instances),
-                   "selector": "median", "compact": compact},
+            extra=dict(extra),
         ))
     return results

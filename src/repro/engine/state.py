@@ -23,9 +23,10 @@ See DESIGN.md §"Batched engine" for the capacity bound and padding rules.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, NamedTuple, Sequence, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core.comm import wire_bytes
@@ -168,6 +169,37 @@ def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
+def shard_specs(tree):
+    """The engine's one sharding rule as a PartitionSpec pytree: axis 0 of
+    every batched leaf splits over the mesh's "data" axis, scalar leaves
+    (the shared turn counter) replicate.  Works on any engine pytree —
+    :class:`EngineData`, :class:`ProtocolState`, :class:`MaxMargState`."""
+    from jax.sharding import PartitionSpec
+    return jax.tree_util.tree_map(
+        lambda a: PartitionSpec() if np.ndim(a) == 0
+        else PartitionSpec("data", *([None] * (np.ndim(a) - 1))), tree)
+
+
+def device_put_sharded(tree, mesh):
+    """Place an engine pytree on ``mesh`` under :func:`shard_specs` — host
+    (numpy) leaves upload straight to their shards, so a packed sweep is
+    *born sharded* rather than materialized on one device and resharded."""
+    from jax.sharding import NamedSharding
+    return jax.tree_util.tree_map(
+        lambda a, p: jax.device_put(a, NamedSharding(mesh, p)),
+        tree, shard_specs(tree))
+
+
+def _mesh_batch(B: int, mesh) -> int:
+    """Pad the instance count to a multiple of the mesh's "data" axis so
+    every shard carries an equal slice; the pad rows are *born-done* dummy
+    instances (zero data, zero budget) that never join a dispatch's active
+    set and accrue nothing."""
+    if mesh is None:
+        return B
+    return _round_up(B, mesh.shape["data"])
+
+
 def maxmarg_transcript_capacity(k: int, max_epochs: int,
                                 max_support: int) -> int:
     """Static per-node transcript bound for the MAXMARG selector.  Per epoch
@@ -187,12 +219,15 @@ def pack_instances_maxmarg(
     *,
     max_epochs: int,
     max_support: int,
+    mesh=None,
 ) -> Tuple[EngineData, MaxMargState, int, int]:
     """Pad a MAXMARG sweep onto the engine's static shapes.
 
     Returns ``(data, state0, k, cap)``.  All instances must share the party
     count k and the dimension d (any d ≥ 2 — MAXMARG has no direction grid);
-    shard sizes may be ragged (label-0 padding).
+    shard sizes may be ragged (label-0 padding).  With ``mesh`` the batch
+    pads to a multiple of the data-axis size with born-done dummy rows and
+    uploads born-sharded (:func:`device_put_sharded`).
     """
     assert instances, "need at least one instance"
     ks = {len(inst.shards) for inst in instances}
@@ -201,7 +236,7 @@ def pack_instances_maxmarg(
     ds = {s[0].shape[1] for inst in instances for s in inst.shards}
     assert len(ds) == 1, f"instances must share the dimension, got {ds}"
     d = ds.pop()
-    B = len(instances)
+    B = _mesh_batch(len(instances), mesh)
     n_max = _round_up(max(s[0].shape[0] for inst in instances
                           for s in inst.shards), 8)
     cap = maxmarg_transcript_capacity(k, max_epochs, max_support)
@@ -218,8 +253,10 @@ def pack_instances_maxmarg(
             y[b, j, :n] = ys
             n_total += n
         budget[b] = int(np.floor(inst.eps * n_total))
+    done0 = np.zeros((B,), bool)
+    done0[len(instances):] = True                    # born-done mesh padding
 
-    data = EngineData(jnp.asarray(X), jnp.asarray(y), jnp.asarray(budget))
+    data = EngineData(X, y, budget)
     # numpy zeros for the initial state: the leaves upload at the first
     # dispatch like any jit input, without one eager device op per field
     # (a dozen tiny dispatches of pure overhead per sweep otherwise)
@@ -228,7 +265,7 @@ def pack_instances_maxmarg(
         wy=np.zeros((B, k, cap), np.int32),
         w_fill=np.zeros((B, k), np.int32),
         turn=np.zeros((), np.int32),
-        done=np.zeros((B,), bool),
+        done=done0,
         converged=np.zeros((B,), bool),
         epochs=np.zeros((B,), np.int32),
         h_w=np.zeros((B, d), np.float32),
@@ -243,6 +280,10 @@ def pack_instances_maxmarg(
         comm=BatchCommLog(*(np.zeros((B,), np.int32)
                             for _ in BatchCommLog._fields)),
     )
+    if mesh is not None:
+        return (device_put_sharded(data, mesh),
+                device_put_sharded(state0, mesh), k, cap)
+    data = EngineData(jnp.asarray(X), jnp.asarray(y), jnp.asarray(budget))
     return data, state0, k, cap
 
 
@@ -261,13 +302,16 @@ def pack_instances(
     *,
     n_angles: int,
     max_epochs: int,
+    mesh=None,
 ) -> Tuple[EngineData, ProtocolState, int, int]:
     """Pad a sweep onto the engine's static shapes.
 
     Returns ``(data, state0, k, cap)``.  All instances must share the party
     count k and dimension d=2; shard sizes may be ragged (label-0 padding).
     ``n_max`` and ``cap`` are rounded up to multiples of 8 so repeated sweeps
-    of similar sizes reuse the compiled runner.
+    of similar sizes reuse the compiled runner.  With ``mesh`` the batch
+    pads to a multiple of the data-axis size with born-done dummy rows and
+    uploads born-sharded (:func:`device_put_sharded`).
     """
     assert instances, "need at least one instance"
     ks = {len(inst.shards) for inst in instances}
@@ -275,7 +319,7 @@ def pack_instances(
     k = ks.pop()
     ds = {s[0].shape[1] for inst in instances for s in inst.shards}
     assert ds == {2}, f"MEDIAN engine is specified for R^2, got d={ds}"
-    B = len(instances)
+    B = _mesh_batch(len(instances), mesh)
     n_max = _round_up(max(s[0].shape[0] for inst in instances
                           for s in inst.shards), 8)
     cap = transcript_capacity(k, max_epochs)
@@ -292,22 +336,32 @@ def pack_instances(
             y[b, j, :n] = ys
             n_total += n
         budget[b] = int(np.floor(inst.eps * n_total))
+    done0 = np.zeros((B,), bool)
+    done0[len(instances):] = True                    # born-done mesh padding
 
-    data = EngineData(jnp.asarray(X), jnp.asarray(y), jnp.asarray(budget))
+    data = EngineData(X, y, budget)
     state0 = ProtocolState(
-        dir_ok=jnp.ones((B, n_angles), bool),
-        wx=jnp.zeros((B, k, cap, 2), jnp.float32),
-        wy=jnp.zeros((B, k, cap), jnp.int32),
-        w_fill=jnp.zeros((B, k), jnp.int32),
-        lo_w=jnp.full((B, k, n_angles), -jnp.inf, jnp.float32),
-        hi_w=jnp.full((B, k, n_angles), jnp.inf, jnp.float32),
-        turn=jnp.zeros((), jnp.int32),
-        done=jnp.zeros((B,), bool),
-        converged=jnp.zeros((B,), bool),
-        epochs=jnp.zeros((B,), jnp.int32),
-        h_v=jnp.zeros((B, 2), jnp.float32),
-        h_t=jnp.zeros((B,), jnp.float32),
-        h_valid=jnp.zeros((B,), bool),
-        comm=BatchCommLog.zeros(B),
+        dir_ok=np.ones((B, n_angles), bool),
+        wx=np.zeros((B, k, cap, 2), np.float32),
+        wy=np.zeros((B, k, cap), np.int32),
+        w_fill=np.zeros((B, k), np.int32),
+        lo_w=np.full((B, k, n_angles), -np.inf, np.float32),
+        hi_w=np.full((B, k, n_angles), np.inf, np.float32),
+        turn=np.zeros((), np.int32),
+        done=done0,
+        converged=np.zeros((B,), bool),
+        epochs=np.zeros((B,), np.int32),
+        h_v=np.zeros((B, 2), np.float32),
+        h_t=np.zeros((B,), np.float32),
+        h_valid=np.zeros((B,), bool),
+        comm=BatchCommLog(*(np.zeros((B,), np.int32)
+                            for _ in BatchCommLog._fields)),
     )
+    if mesh is not None:
+        return (device_put_sharded(data, mesh),
+                device_put_sharded(state0, mesh), k, cap)
+    data = EngineData(jnp.asarray(X), jnp.asarray(y), jnp.asarray(budget))
+    # jnp leaves on the legacy path: callers step this state eagerly (the
+    # constant-fold differential test) and functional .at updates need them
+    state0 = jax.tree_util.tree_map(jnp.asarray, state0)
     return data, state0, k, cap

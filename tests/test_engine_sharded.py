@@ -1,0 +1,197 @@
+"""Sharded-vs-single-device differential gate for the multi-device hot loop
+(DESIGN.md §sharded hot loop).
+
+The sharded path splits the leading B axis over a 1-D ("data",) mesh with
+donated state buffers and the double-buffered host loop both ON (the mesh
+defaults) — everything inside a shard is the unmodified single-device
+program on its local slice, so MEDIAN must stay *bit-exact* and MAXMARG
+decision-exact (comm/rounds/convergence + prediction-level separator, the
+same standard the warm gate holds) against the unchanged single-device hot
+path.  Grids cover B divisible and non-divisible by the device count, the
+k-party case, a staggered-convergence batch that exercises the
+shard-balanced compacted dispatch (``hotloop.balanced_index``), the
+overlap toggle, and the ``run_sweep`` mesh pass-through.
+
+Needs >1 device: CI runs this module in the hot-path-parity step under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; standalone runs get
+the same flag set below (it must land before jax initializes — under a full
+tier-1 run where another module already imported jax, the module skips on
+the device count instead).
+"""
+
+import os
+import sys
+
+if "jax" not in sys.modules:                     # must precede jax init
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+from repro import engine
+from repro.core import datasets
+from repro.launch.mesh import make_data_mesh
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="sharded hot loop needs >1 device "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+N_ANGLES = 256
+MAX_EPOCHS = 24
+_GENS = (datasets.data1, datasets.data2, datasets.data3)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_data_mesh()
+
+
+def _grid(n, k=2, selector="median", n_per_node=40):
+    """n instances cycling datasets/eps/seeds — convergence times differ, so
+    batches stagger and the compacted sub-dispatch path engages."""
+    return [engine.ProtocolInstance(
+        _GENS[i % 3](n_per_node=n_per_node, k=k, seed=i),
+        (0.1, 0.05)[i % 2], selector) for i in range(n)]
+
+
+def _assert_bitexact(insts, sharded, ref):
+    for i, (a, b) in enumerate(zip(sharded, ref)):
+        assert a.comm == b.comm, (i, a.comm, b.comm)
+        assert a.rounds == b.rounds, i
+        assert a.converged == b.converged and a.converged, i
+        np.testing.assert_array_equal(a.classifier.w, b.classifier.w)
+        assert a.classifier.b == b.classifier.b, i
+
+
+def _assert_decision_exact(insts, sharded, ref):
+    for i, (inst, a, b) in enumerate(zip(insts, sharded, ref)):
+        assert a.comm == b.comm, (i, a.comm, b.comm)
+        assert a.rounds == b.rounds, i
+        assert a.converged == b.converged and a.converged, i
+        X = np.concatenate([s[0] for s in inst.shards])
+        np.testing.assert_array_equal(a.classifier.predict(X),
+                                      b.classifier.predict(X))
+
+
+# ---------------------------------------------------------------- MEDIAN --
+
+def test_median_sharded_divisible(mesh):
+    """B = 2 × devices: full-batch sharded dispatches engage; MEDIAN sharded
+    results must be bit-exact vs the single-device hot path."""
+    insts = _grid(2 * len(mesh.devices))
+    sh = engine.run_instances(insts, n_angles=N_ANGLES,
+                              max_epochs=MAX_EPOCHS, mesh=mesh)
+    ref = engine.run_instances(insts, n_angles=N_ANGLES,
+                               max_epochs=MAX_EPOCHS)
+    _assert_bitexact(insts, sh, ref)
+    assert all(r.extra["devices"] == len(mesh.devices) for r in sh)
+
+
+def test_median_sharded_nondivisible(mesh):
+    """B not a multiple of the device count: the pack pads with born-done
+    dummies; results for the real instances are untouched."""
+    insts = _grid(len(mesh.devices) + 5)
+    sh = engine.run_instances(insts, n_angles=N_ANGLES,
+                              max_epochs=MAX_EPOCHS, mesh=mesh)
+    ref = engine.run_instances(insts, n_angles=N_ANGLES,
+                               max_epochs=MAX_EPOCHS)
+    _assert_bitexact(insts, sh, ref)
+
+
+def test_median_sharded_kparty(mesh):
+    insts = [engine.ProtocolInstance(
+        datasets.data3(n_per_node=30, k=4, seed=s), eps)
+        for s, eps in ((0, 0.1), (1, 0.05), (2, 0.1), (3, 0.05))]
+    sh = engine.run_instances(insts, n_angles=N_ANGLES,
+                              max_epochs=MAX_EPOCHS, mesh=mesh)
+    ref = engine.run_instances(insts, n_angles=N_ANGLES,
+                               max_epochs=MAX_EPOCHS)
+    _assert_bitexact(insts, sh, ref)
+
+
+def test_median_overlap_toggle(mesh):
+    """Double buffering speculates turn t+1 from a stale view — MEDIAN must
+    stay bit-exact with it on or off (any covering width is exact and stale
+    active sets are masked no-op supersets)."""
+    insts = _grid(len(mesh.devices) + 3)
+    on = engine.run_instances(insts, n_angles=N_ANGLES,
+                              max_epochs=MAX_EPOCHS, mesh=mesh, overlap=True)
+    off = engine.run_instances(insts, n_angles=N_ANGLES,
+                               max_epochs=MAX_EPOCHS, mesh=mesh,
+                               overlap=False)
+    _assert_bitexact(insts, on, off)
+
+
+# --------------------------------------------------------------- MAXMARG --
+
+def test_maxmarg_sharded_divisible(mesh):
+    insts = _grid(2 * len(mesh.devices), selector="maxmarg")
+    sh = engine.maxmarg.run_instances(insts, max_epochs=MAX_EPOCHS,
+                                      mesh=mesh)
+    ref = engine.maxmarg.run_instances(insts, max_epochs=MAX_EPOCHS)
+    _assert_decision_exact(insts, sh, ref)
+    assert all(r.extra["devices"] == len(mesh.devices) for r in sh)
+
+
+def test_maxmarg_sharded_nondivisible(mesh):
+    """Non-divisible B + k=3, the per-node warm-carry tracking path."""
+    insts = _grid(len(mesh.devices) + 5, k=3, selector="maxmarg",
+                  n_per_node=30)
+    sh = engine.maxmarg.run_instances(insts, max_epochs=MAX_EPOCHS,
+                                      mesh=mesh)
+    ref = engine.maxmarg.run_instances(insts, max_epochs=MAX_EPOCHS)
+    _assert_decision_exact(insts, sh, ref)
+
+
+# --------------------------------------------------------------- plumbing --
+
+def test_run_sweep_mesh_passthrough(mesh):
+    """A mixed MEDIAN+MAXMARG sweep rides the sharded path per bucket."""
+    insts = (_grid(3) + _grid(3, selector="maxmarg"))
+    sh = engine.run_sweep(insts, n_angles=N_ANGLES, max_epochs=MAX_EPOCHS,
+                          mesh=mesh)
+    ref = engine.run_sweep(insts, n_angles=N_ANGLES, max_epochs=MAX_EPOCHS)
+    _assert_decision_exact(insts, sh, ref)
+    assert all(r.extra["devices"] == len(mesh.devices) for r in sh)
+
+
+def test_mesh_requires_compact(mesh):
+    insts = _grid(2)
+    with pytest.raises(ValueError, match="compact"):
+        engine.run_instances(insts, n_angles=N_ANGLES,
+                             max_epochs=MAX_EPOCHS, mesh=mesh,
+                             compact=False)
+    with pytest.raises(ValueError, match="compact"):
+        engine.maxmarg.run_instances(
+            _grid(2, selector="maxmarg"), max_epochs=MAX_EPOCHS, mesh=mesh,
+            compact=False)
+
+
+def test_balanced_index_contract():
+    """Per-shard slices are local, ordered, padded to a common multiple of
+    BATCH_MULT with the out-of-range index, and counts match."""
+    from repro.engine import hotloop
+
+    B, S = 24, 4
+    act = np.array([0, 1, 5, 6, 7, 8, 13, 18, 19, 20, 21, 22, 23])
+    idx, counts = hotloop.balanced_index(act, B, S)
+    B_loc = B // S
+    L = len(idx) // S
+    assert L % hotloop.BATCH_MULT == 0
+    assert counts.tolist() == [3, 3, 1, 6]
+    assert L == 8          # round_up(max count 6, 4)
+    rebuilt = []
+    for s in range(S):
+        sl = idx[s * L:(s + 1) * L]
+        c = counts[s]
+        assert (sl[c:] == B).all()          # pad tail = out-of-range
+        assert (np.diff(sl[:c]) > 0).all()  # ordered
+        assert ((0 <= sl[:c]) & (sl[:c] < B_loc)).all()
+        rebuilt.extend((sl[:c] + s * B_loc).tolist())
+    assert rebuilt == act.tolist()
