@@ -42,11 +42,30 @@ NOTES = (
 )
 
 
+def _load_json(path: str, what: str) -> Dict:
+    """Load a JSON artifact with a clear failure mode: a missing, truncated
+    or non-object file exits with a one-line diagnosis, never a traceback
+    (these artifacts are machine-written and a killed benchmark run leaves
+    half-written files behind)."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
+        raise SystemExit(
+            f"{path}: unreadable or truncated JSON ({e}) — the {what} is "
+            f"corrupt; re-run the producing benchmark (or delete the file "
+            f"to start a fresh history)")
+    if not isinstance(data, dict):
+        raise SystemExit(
+            f"{path}: top level is {type(data).__name__}, wanted an object "
+            f"— not a {what}")
+    return data
+
+
 def extract(path: str) -> Optional[Dict]:
     if not os.path.exists(path):
         return None
-    with open(path) as f:
-        report = json.load(f)
+    report = _load_json(path, "BENCH artifact")
     out = {}
     for field in HEADLINE:
         if field in report:
@@ -78,8 +97,11 @@ def fold(label: str, bench_dir: str, out_path: str,
 
     history = {"notes": NOTES, "entries": []}
     if os.path.exists(out_path):
-        with open(out_path) as f:
-            history = json.load(f)
+        history = _load_json(out_path, "history file")
+        if not isinstance(history.get("entries", []), list):
+            raise SystemExit(
+                f"{out_path}: 'entries' is not a list — not a history file; "
+                f"refusing to overwrite it")
     history["notes"] = NOTES
     entry = {"label": label, "tiny": tiny, "benches": benches}
     entries: List[Dict] = [e for e in history.get("entries", [])

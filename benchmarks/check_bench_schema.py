@@ -126,6 +126,34 @@ BASELINES_PER_INSTANCE = {
     "parity_b1": bool,
 }
 
+# BENCH_service.json: the fault-tolerant streaming session-pool benchmark
+# (benchmarks/service_sweep.py).  Wall-clocks are machine-local and not
+# gated; what IS gated is the robustness contract: zero steady-state
+# recompiles (admission refills slots at pinned cache keys), healthy
+# sessions bit-exact against the fault-free run_instances oracle, and a
+# seeded chaos run that actually exercised every fault channel it claims.
+SERVICE_SCHEMA = {
+    "notes": str,
+    "sessions": int,
+    "slots": int,
+    "k": int,
+    "n_pad": int,
+    "selector": str,
+    "schedule": dict,
+    "statuses": dict,
+    "stats": dict,
+    "fault_free_s": _NUM,
+    "faulted_s": _NUM,
+    "sessions_per_s_fault_free": _NUM,
+    "sessions_per_s_faulted": _NUM,
+    "steady_state_recompiles": int,
+    "oracle_checked": int,
+    "oracle_mismatches": list,
+}
+
+SERVICE_STATUSES = ("converged", "budget_exhausted", "quarantined")
+
+
 GAP_ENTRY_SCHEMA = {
     "dataset": str,
     "eps": _NUM,
@@ -171,11 +199,75 @@ def _check_history(path: str, report: dict) -> list:
     return errors
 
 
+def _check_service(path: str, report: dict) -> list:
+    errors = []
+
+    def expect(obj, field, typ, where):
+        if field not in obj:
+            errors.append(f"{where}: missing key {field!r}")
+        elif not isinstance(obj[field], typ):
+            errors.append(f"{where}: {field!r} has type "
+                          f"{type(obj[field]).__name__}, wanted {typ}")
+
+    for field, typ in SERVICE_SCHEMA.items():
+        expect(report, field, typ, path)
+
+    statuses = report.get("statuses") or {}
+    for s in SERVICE_STATUSES:
+        if not isinstance(statuses.get(s), int):
+            errors.append(f"{path}[statuses]: missing int count for {s!r}")
+    if isinstance(report.get("sessions"), int) and \
+            all(isinstance(statuses.get(s), int) for s in SERVICE_STATUSES):
+        total = sum(statuses[s] for s in SERVICE_STATUSES)
+        if total != report["sessions"]:
+            errors.append(f"{path}: statuses sum to {total}, not "
+                          f"sessions={report['sessions']} — some sessions "
+                          f"never reached a terminal state")
+
+    # the robustness gates (size-independent)
+    if report.get("steady_state_recompiles") != 0:
+        errors.append(
+            f"{path}: steady_state_recompiles is "
+            f"{report.get('steady_state_recompiles')!r}, wanted 0 — "
+            f"admission/dispatch moved a compile-cache key")
+    if report.get("oracle_mismatches"):
+        errors.append(f"{path}: oracle_mismatches is non-empty: "
+                      f"{report['oracle_mismatches']} — healthy sessions "
+                      f"must be bit-exact vs the fault-free oracle")
+    if report.get("oracle_checked") == 0:
+        errors.append(f"{path}: oracle_checked is 0 — the bit-exactness "
+                      f"gate never ran")
+
+    # a chaos artifact must have exercised the channels it claims
+    sched = report.get("schedule") or {}
+    if any(sched.get(p, 0) > 0 for p in
+           ("p_dropout", "p_drop_msg", "p_straggle", "p_corrupt")):
+        stats = report.get("stats") or {}
+        injected = sum(stats.get(c, 0) for c in
+                       ("dropouts", "drop_msgs", "straggles", "corruptions"))
+        if injected == 0:
+            errors.append(f"{path}: schedule has nonzero fault rates but "
+                          f"stats show zero injected faults")
+    return errors
+
+
 def check(path: str) -> list:
-    with open(path) as f:
-        report = json.load(f)
+    if not os.path.exists(path):
+        return [f"{path}: artifact not found — run the producing benchmark "
+                f"first (benchmarks/*_sweep.py writes it)"]
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
+        return [f"{path}: unreadable or truncated JSON ({e}) — the artifact "
+                f"is corrupt; re-run the producing benchmark"]
+    if not isinstance(report, dict):
+        return [f"{path}: top level is {type(report).__name__}, wanted an "
+                f"object — not a BENCH artifact"]
     if "history" in os.path.basename(path):
         return _check_history(path, report)
+    if "service" in os.path.basename(path):
+        return _check_service(path, report)
     errors = []
     is_baselines = "baselines" in os.path.basename(path)
     is_maxmarg = "maxmarg" in os.path.basename(path)

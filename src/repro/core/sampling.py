@@ -97,3 +97,23 @@ class Reservoir:
 
     def sample(self) -> Tuple[np.ndarray, np.ndarray]:
         return self.X[: self.filled].copy(), self.y[: self.filled].copy()
+
+    def sample_padded(self, n_pad: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Snapshot padded to exactly ``n_pad`` rows with the engine's
+        label-0 convention (zero rows are inert in every masked reduction).
+
+        The streaming session pool admits sessions at *pinned* shard shapes
+        so the compacted dispatch's compile-cache keys never move
+        (``engine/session_pool``): each ingest node keeps a reservoir of
+        capacity ≤ n_pad and admission takes this fixed-shape snapshot, not
+        the ragged :meth:`sample` one.
+        """
+        if self.capacity > n_pad:
+            raise ValueError(
+                f"reservoir capacity {self.capacity} exceeds the pool's "
+                f"pinned shard shape n_pad={n_pad}")
+        X = np.zeros((n_pad, self.X.shape[1]))
+        y = np.zeros((n_pad,), np.int32)
+        X[: self.filled] = self.X[: self.filled]
+        y[: self.filled] = self.y[: self.filled]
+        return X, y

@@ -55,10 +55,10 @@ def run_sweep(instances, **kwargs):
     _ALLOWED = {
         "maxmarg": ("eps", "max_epochs", "max_support", "warm", "per_node",
                     "compact", "fused_kernel", "mesh", "donate",
-                    "overlap") + _FIT,
+                    "overlap", "stats") + _FIT,
         "median": ("eps", "n_angles", "max_epochs", "cut_kernel",
                    "extremes_kernel", "compact", "mesh", "donate",
-                   "overlap"),
+                   "overlap", "stats"),
         "sampling": ("eps", "vc_dim", "c") + _FIT,
         "naive": _FIT,
         "voting": _FIT,

@@ -68,6 +68,16 @@ WIDTH_MULT = 8   # live transcript width rounds up to this
 KEY_LOG: List[Tuple[int, int, bool, bool]] = []
 
 
+def gather_rows(arr, idx):
+    """arr (B, N, ...), idx (B,) -> (B, ...): per-instance row gather.
+
+    The engine's turn counter is per-instance, so the coordinator index
+    ``ci = turn % k`` is a (B,) vector and every "the coordinator's shard /
+    transcript" access is this vmapped gather rather than a shared-axis
+    ``jnp.take``.  Gathers are exact, so vectorizing ci changes no float."""
+    return jax.vmap(lambda a, i: a[i])(arr, idx)
+
+
 def take_instances(tree, idx):
     """Gather instance rows ``idx`` from every (B, ...) leaf (scalar leaves —
     the shared turn counter — pass through).  Out-of-range indices gather
@@ -104,6 +114,22 @@ def gathered_turn(step_fn, pad_fix, data, state, idx, n_act):
     sub = pad_fix(sub, pad_row)
     sub = step_fn(sub_data, sub)
     return put_instances(state, sub, idx)
+
+
+def shard_skew(counts: np.ndarray) -> float:
+    """Imbalance of a per-shard live-count vector as the max/mean ratio.
+
+    1.0 is perfectly balanced; S (the shard count) means one shard owns the
+    whole live set.  The common padded length L in :func:`balanced_index`
+    is set by the *max* count, so every device pays the skewed shard's
+    shapes — this ratio is exactly the padding-waste factor and the signal
+    any future cross-shard rebalancing must drive down (ROADMAP).  An
+    all-dead vector reports 0.0 (no dispatch, no waste)."""
+    counts = np.asarray(counts, dtype=np.float64)
+    mean = counts.mean() if counts.size else 0.0
+    if mean <= 0:
+        return 0.0
+    return float(counts.max() / mean)
 
 
 def balanced_index(act: np.ndarray, B: int, shards: int):
@@ -147,6 +173,7 @@ def run_hot(
     width_growth: int = 0,
     overlap: bool = False,
     shards: Optional[int] = None,
+    stats: Optional[dict] = None,
 ):
     """The generic host-driven sweep loop over a selector's jitted ``step``.
 
@@ -187,12 +214,21 @@ def run_hot(
     equally valid — polish-skip choices, which is decision-preserving (the
     warm gate re-checks on device).  At most one wasted all-done masked
     dispatch runs at termination.
+
+    ``stats`` (optional dict) collects host-side observability: on sharded
+    sweeps every :func:`balanced_index` call folds its per-shard live-count
+    skew (:func:`shard_skew`) into ``stats["shard_skew_max"]`` /
+    ``stats["shard_skew_last"]`` and counts dispatches in
+    ``stats["shard_dispatches"]`` — the measurable rebalancing signal the
+    ROADMAP's skewed-shard item asks for.  Never read for decisions.
     """
     B = int(state.done.shape[0])
     # the scatter-drop tail is a host-side constant: every pad slot carries
     # the same out-of-range index B, so build it once, not once per turn
     pad_tail = np.full(B, B, dtype=np.int32)
-    t = int(state.turn)                    # advanced host-side: one step = +1
+    # turn is per-instance; a sweep advances every row in lock-step, so the
+    # host-side loop counter resumes from the common (max) value
+    t = int(np.asarray(state.turn).max(initial=0))
 
     if not compact:
         while t < max_turns:
@@ -226,6 +262,13 @@ def run_hot(
             return dispatch_full(state, t=t, width=width, use_warm=use_warm)
         if shards:
             idx, n_vec = balanced_index(act, B, shards)
+            if stats is not None:
+                skew = shard_skew(n_vec)
+                stats["shard_skew_last"] = skew
+                stats["shard_skew_max"] = max(
+                    stats.get("shard_skew_max", 0.0), skew)
+                stats["shard_dispatches"] = \
+                    stats.get("shard_dispatches", 0) + 1
             KEY_LOG.append((len(idx), width, use_warm, t == 0))
             return dispatch_sub(state, jnp.asarray(idx), jnp.asarray(n_vec),
                                 t=t, width=width, use_warm=use_warm)

@@ -77,6 +77,10 @@ from repro.kernels import ops, ref
 RTOL = 0.15          # active-margin band width, = classifiers.support_points
 VIOL_SHIP = 2        # most-violated points shipped per violated node
 
+# (B, N, ...) × (B,) -> (B, ...): coordinator-indexed gathers — ci is a
+# per-instance vector (see hotloop.gather_rows)
+_gather_rows = hotloop.gather_rows
+
 
 def _append_block(wx, wy, fill, pts, labs, do):
     """Append an r-row block to each instance's transcript at its fill.
@@ -146,15 +150,15 @@ def step(
     (bit-for-bit tested)."""
     B = state.done.shape[0]
     n_max, d = data.X.shape[2], data.X.shape[3]
-    ci = state.turn % k
+    ci = state.turn % k                                # (B,) per-instance
     active = ~state.done
     comm = state.comm
 
     # -- 1. batched max-margin refit on coord's own ∪ transcript ------------
-    Xc = jnp.take(data.X, ci, axis=1)                  # (B, n_max, d)
-    yc = jnp.take(data.y, ci, axis=1)                  # (B, n_max)
-    Wxc = jnp.take(state.wx, ci, axis=1)               # (B, cap, d)
-    Wyc = jnp.take(state.wy, ci, axis=1)               # (B, cap)
+    Xc = _gather_rows(data.X, ci)                      # (B, n_max, d)
+    yc = _gather_rows(data.y, ci)                      # (B, n_max)
+    Wxc = _gather_rows(state.wx, ci)                   # (B, cap, d)
+    Wyc = _gather_rows(state.wy, ci)                   # (B, cap)
     if trans_width is not None:                        # compacted gather
         Wxc = Wxc[:, :trans_width]
         Wyc = Wyc[:, :trans_width]
@@ -169,10 +173,10 @@ def step(
             # the per-node carry the coordinator verified clean; at k=2 the
             # carry bookkeeping is statically skipped (see below), so warm
             # falls back to the single previous-turn carry there
-            w0 = jnp.take(state.c_w, ci, axis=1)
-            b0 = jnp.take(state.c_b, ci, axis=1)
-            wok = jnp.take(state.c_valid, ci, axis=1) \
-                & jnp.take(state.warm_node, ci, axis=1)
+            w0 = _gather_rows(state.c_w, ci)
+            b0 = _gather_rows(state.c_b, ci)
+            wok = _gather_rows(state.c_valid, ci) \
+                & _gather_rows(state.warm_node, ci)
         else:
             w0, b0, wok = state.h_w, state.h_b, state.h_valid
         # clean0 is the solver's own polish gate (carried separator
@@ -230,33 +234,34 @@ def step(
     # -- 4. violated nodes ship their 2 most-violated points ----------------
     n_valid_k = jnp.sum(data.y != 0, axis=2)
     node_ids = jnp.arange(k)[None, :]
-    fire = active[:, None] & (node_ids != ci) & (err_k > 0)
+    fire = active[:, None] & (node_ids != ci[:, None]) & (err_k > 0)
     nv = jnp.minimum(VIOL_SHIP, n_valid_k).astype(jnp.int32)      # (B, k)
     comm = comm._replace(
         points=comm.points + jnp.sum(jnp.where(fire, nv, 0), axis=1),
         messages=comm.messages + jnp.sum(fire, axis=1, dtype=jnp.int32),
     )
     # every reply targets only the coordinator's transcript, so gather that
-    # one buffer at the traced index ci and scatter it back — k appends per
-    # turn, not the k² a per-target loop would trace
+    # one buffer at the per-instance index ci and scatter it back — k appends
+    # per turn, not the k² a per-target loop would trace
+    bidx = jnp.arange(B)
     for i in range(k):
         rank_i = viol_rank[:, i]
         sel_i = rank_i < VIOL_SHIP
         V_pts, V_lab = _compact_rows(data.X[:, i], data.y[:, i], sel_i,
                                      nv[:, i], VIOL_SHIP, order=rank_i)
         wxc, wyc2, fc = _append_block(
-            jnp.take(wx, ci, axis=1), jnp.take(wy, ci, axis=1),
-            jnp.take(w_fill, ci, axis=1), V_pts, V_lab, fire[:, i])
-        wx = wx.at[:, ci].set(wxc)
-        wy = wy.at[:, ci].set(wyc2)
-        w_fill = w_fill.at[:, ci].set(fc)
+            _gather_rows(wx, ci), _gather_rows(wy, ci),
+            _gather_rows(w_fill, ci), V_pts, V_lab, fire[:, i])
+        wx = wx.at[bidx, ci].set(wxc)
+        wy = wy.at[bidx, ci].set(wyc2)
+        w_fill = w_fill.at[bidx, ci].set(fc)
 
     # -- 5. ε-termination + hypothesis/warm-carry bookkeeping ---------------
     term = active & (errs <= data.budget)
     # single-carry latch precondition: can the next turn's coordinator warm-
     # start from *this* proposal?  Only if it already classifies that shard
     # cleanly (necessary for the polish latch's clean-carry gate)
-    err_next = jnp.take(err_k, (ci + 1) % k, axis=1)
+    err_next = _gather_rows(err_k, (ci + 1) % k)
 
     # per-node carries: each node *adopts* this turn's proposal as its carry
     # whenever it verifies the proposal clean on everything it knows — zero
@@ -277,7 +282,7 @@ def step(
     # ε-termination (errs = its error count ≤ budget), so adoption implies
     # the instance is done — and skipped regardless (k is static).
     if per_node and k > 2:
-        is_ci = (jnp.arange(k) == ci)[None, :]           # (1, k)
+        is_ci = (jnp.arange(k)[None, :] == ci[:, None])  # (B, k)
         viol_any = jnp.any(fire, axis=1)                 # (B,)
         Wx_all = state.wx if trans_width is None \
             else state.wx[:, :, :trans_width]            # pre-append rows
@@ -346,7 +351,7 @@ def run_compiled(
     the legacy-parity reference for the hot path."""
 
     def cond(s: MaxMargState):
-        return (s.turn < max_turns) & ~jnp.all(s.done)
+        return (jnp.min(s.turn) < max_turns) & ~jnp.all(s.done)
 
     def body(s: MaxMargState):
         return step(data, s, k=k, max_support=max_support, steps=steps,
@@ -423,8 +428,8 @@ def _sharded_dispatches(mesh, dspec, sspec, opts, donate):
     gathered sub-batch turn over the ("data",) mesh.  Everything inside a
     shard is the unmodified single-device program on the local B/S slice —
     MAXMARG decisions are per-instance, so no cross-shard collective exists.
-    ``check_rep=False``: the scalar turn counter is replicated by
-    construction (every shard advances it identically)."""
+    ``check_rep=False``: every leaf (including the per-instance turn
+    counter) shards over the batch axis; nothing is replicated."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -499,6 +504,7 @@ def run_hot(
     mesh: Optional[jax.sharding.Mesh] = None,
     donate: Optional[bool] = None,
     overlap: Optional[bool] = None,
+    stats: Optional[dict] = None,
 ) -> MaxMargState:
     """The MAXMARG sweep as a host-driven turn loop over the jitted ``step``
     (the shared machinery in :mod:`repro.engine.hotloop`).
@@ -586,7 +592,7 @@ def run_hot(
                                dispatch_full=dispatch_full,
                                dispatch_sub=dispatch_sub, warm=warm,
                                compact=True, width_growth=width_growth,
-                               overlap=overlap, shards=S)
+                               overlap=overlap, shards=S, stats=stats)
 
     donate = bool(donate)
     overlap = bool(overlap)
@@ -608,7 +614,7 @@ def run_hot(
                            host_view=host_view, dispatch_full=dispatch_full,
                            dispatch_sub=dispatch_sub, warm=warm,
                            compact=compact, width_growth=width_growth,
-                           overlap=overlap)
+                           overlap=overlap, stats=stats)
 
 
 def run_instances(
@@ -627,6 +633,7 @@ def run_instances(
     mesh: Optional[jax.sharding.Mesh] = None,
     donate: Optional[bool] = None,
     overlap: Optional[bool] = None,
+    stats: Optional[dict] = None,
 ):
     """Run a batch of MAXMARG instances as one compiled sweep.
 
@@ -665,7 +672,8 @@ def run_instances(
                         max_support=max_support, steps=steps, stages=stages,
                         lam0=lam, warm=warm, per_node=per_node,
                         compact=compact, fused_kernel=fused_kernel,
-                        mesh=mesh, donate=donate, overlap=overlap)
+                        mesh=mesh, donate=donate, overlap=overlap,
+                        stats=stats)
     else:
         final = run_compiled(data, state0, k=k, max_turns=k * max_epochs,
                              max_support=max_support, steps=steps,

@@ -8,7 +8,9 @@ are masked no-ops until every instance terminates or the turn budget runs
 out.  The single-instance public API is exactly this engine with B=1, so
 batched-vs-sequential parity is structural, not approximate.
 
-Turn structure (coordinator ci = turn % k, shared across the batch):
+Turn structure (coordinator ci = turn % k, per-instance — the turn counter
+is a (B,) leaf, so a dispatch may mix sessions at different phases; a plain
+sweep keeps every row in lock-step):
 
 1. coordinator ranges over its transcript → per-direction (lo, hi);
 2. at-risk matrix over its own shard, full-scan weighted-median direction v;
@@ -85,9 +87,7 @@ def _proj_dir(X: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
     return sum(X[..., i] * vb[..., i] for i in range(d))
 
 
-def _gather_rows(arr: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
-    """arr (B, N, ...), idx (B,) -> (B, ...)."""
-    return jax.vmap(lambda a, i: a[i])(arr, idx)
+_gather_rows = hotloop.gather_rows           # (B, N, ...) × (B,) -> (B, ...)
 
 
 def _gather_rows2(arr: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
@@ -201,24 +201,24 @@ def step(
     interpret-mode Pallas inside a hot loop is pathologically slow.
     """
     B, m = state.dir_ok.shape
-    ci = state.turn % k
+    ci = state.turn % k                                  # (B,) per-instance
     active = ~state.done
     comm = state.comm
 
     # -- 1. coordinator's consistent-threshold ranges over its transcript ---
     # maintained incrementally at append time (see _append2); identical to a
     # threshold_ranges rescan of the coordinator's buffer
-    Wxc = jnp.take(state.wx, ci, axis=1)                 # (B, cap, d)
-    Wyc = jnp.take(state.wy, ci, axis=1)                 # (B, cap)
+    Wxc = _gather_rows(state.wx, ci)                     # (B, cap, d)
+    Wyc = _gather_rows(state.wy, ci)                     # (B, cap)
     if trans_width is not None:                          # fill-capped read
         Wxc = Wxc[:, :trans_width]
         Wyc = Wyc[:, :trans_width]
-    lo = jnp.take(state.lo_w, ci, axis=1)                # (B, m)
-    hi = jnp.take(state.hi_w, ci, axis=1)
+    lo = _gather_rows(state.lo_w, ci)                    # (B, m)
+    hi = _gather_rows(state.hi_w, ci)
 
     # -- 2. at-risk matrix + full-scan weighted-median direction ------------
-    Xc = jnp.take(data.X, ci, axis=1)                    # (B, n, d)
-    yc = jnp.take(data.y, ci, axis=1)                    # (B, n)
+    Xc = _gather_rows(data.X, ci)                        # (B, n, d)
+    yc = _gather_rows(data.y, ci)                        # (B, n)
     if first_turn:
         v_idx = jnp.zeros((B,), jnp.int32)
     elif cut_kernel:
@@ -343,7 +343,8 @@ def step(
 
     node_ids = jnp.arange(k)[None, :]
     n_pts_k = has_pk.astype(jnp.int32) + has_qk.astype(jnp.int32)
-    reply = (active & ~term_eps)[:, None] & (node_ids != ci) & (n_pts_k > 0)
+    reply = ((active & ~term_eps)[:, None] & (node_ids != ci[:, None])
+             & (n_pts_k > 0))
     comm = comm._replace(
         points=comm.points + jnp.sum(jnp.where(reply, n_pts_k, 0), axis=1),
         messages=comm.messages + jnp.sum(reply, axis=1, dtype=jnp.int32),
@@ -433,7 +434,7 @@ def run_compiled(
     hot path's differential reference (``run_instances(compact=False)``)."""
 
     def cond(s: ProtocolState):
-        return (s.turn < max_turns) & ~jnp.all(s.done)
+        return (jnp.min(s.turn) < max_turns) & ~jnp.all(s.done)
 
     def body(s: ProtocolState):
         return step(data, V, s, k=k, cut_kernel=cut_kernel,
@@ -502,8 +503,8 @@ def _sharded_dispatches(mesh, dspec, sspec, opts, donate):
     shard is the unmodified single-device program on the local B/S slice —
     MEDIAN decisions are per-instance, so no cross-shard collective exists
     and the sharded sweep is bit-exact against the single-device hot path.
-    ``check_rep=False``: the scalar turn counter is replicated by
-    construction (every shard advances it identically)."""
+    ``check_rep=False``: every leaf (including the per-instance turn
+    counter) shards over the batch axis; nothing is replicated."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -566,6 +567,7 @@ def run_hot(
     mesh: Optional[jax.sharding.Mesh] = None,
     donate: Optional[bool] = None,
     overlap: Optional[bool] = None,
+    stats: Optional[dict] = None,
 ) -> ProtocolState:
     """The MEDIAN sweep as a host-driven turn loop over the jitted ``step``
     (the shared machinery in :mod:`repro.engine.hotloop`, mirroring
@@ -631,7 +633,7 @@ def run_hot(
                                warm=False, compact=True,
                                width_slack=WIDTH_SLACK,
                                width_growth=width_growth,
-                               overlap=overlap, shards=S)
+                               overlap=overlap, shards=S, stats=stats)
 
     donate = bool(donate)
     overlap = bool(overlap)
@@ -656,7 +658,8 @@ def run_hot(
                            dispatch_sub=dispatch_sub,
                            warm=False, compact=compact,
                            width_slack=WIDTH_SLACK,
-                           width_growth=width_growth, overlap=overlap)
+                           width_growth=width_growth, overlap=overlap,
+                           stats=stats)
 
 
 def run_instances(
@@ -671,6 +674,7 @@ def run_instances(
     mesh: Optional[jax.sharding.Mesh] = None,
     donate: Optional[bool] = None,
     overlap: Optional[bool] = None,
+    stats: Optional[dict] = None,
 ):
     """Run a batch of MEDIAN/k-party instances as one compiled sweep.
 
@@ -687,7 +691,10 @@ def run_instances(
     their Pallas kernels (default: on TPU only).  ``mesh`` shards the hot
     path over a 1-D ("data",) device mesh (requires ``compact=True``);
     ``donate``/``overlap`` opt the per-turn dispatches into buffer donation
-    and the double-buffered host loop (mesh default: both on).
+    and the double-buffered host loop (mesh default: both on).  ``stats``
+    (a dict) collects host-side observability — on sharded sweeps the
+    per-dispatch shard skew (``hotloop.shard_skew``) — and is never read
+    for decisions.
     """
     from repro.core import classifiers as clf
     from repro.core import geometry as geo
@@ -709,7 +716,8 @@ def run_instances(
         final = run_hot(data, V, state0, k=k, max_turns=k * max_epochs,
                         cut_kernel=cut_kernel,
                         extremes_kernel=extremes_kernel,
-                        mesh=mesh, donate=donate, overlap=overlap)
+                        mesh=mesh, donate=donate, overlap=overlap,
+                        stats=stats)
     else:
         final = run_compiled(data, V, state0, k=k, max_turns=k * max_epochs,
                              cut_kernel=cut_kernel,

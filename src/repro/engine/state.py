@@ -71,9 +71,12 @@ class BatchCommLog(NamedTuple):
 class ProtocolState(NamedTuple):
     """Per-instance protocol state advanced by ``median.step`` (a pytree).
 
-    All leading axes are the batch axis B except ``turn`` (a scalar: the
-    engine runs the whole batch in lock-step, so the coordinator index
-    ``turn % k`` is shared and finished instances are masked no-ops).
+    All leading axes are the batch axis B, including ``turn``: the
+    coordinator index ``ci = turn % k`` is *per-instance*, so one dispatch
+    may mix sessions at different protocol phases (the streaming session
+    pool admits into freed slots mid-stream).  A lock-step sweep keeps
+    every row's turn identical — ``step`` advances all of them together —
+    so the sweep paths behave exactly like the old shared scalar counter.
     """
 
     dir_ok: jnp.ndarray     # (B, m) bool — allowed direction arc
@@ -82,7 +85,7 @@ class ProtocolState(NamedTuple):
     w_fill: jnp.ndarray     # (B, k) i32 — transcript fill counters
     lo_w: jnp.ndarray       # (B, k, m) f32 — running per-node threshold lo
     hi_w: jnp.ndarray       # (B, k, m) f32 — running per-node threshold hi
-    turn: jnp.ndarray       # () i32 — global turn counter
+    turn: jnp.ndarray       # (B,) i32 — per-instance turn counter
     done: jnp.ndarray       # (B,) bool
     converged: jnp.ndarray  # (B,) bool
     epochs: jnp.ndarray     # (B,) i32 — 1-based epoch at termination
@@ -103,8 +106,8 @@ class EngineData(NamedTuple):
 class MaxMargState(NamedTuple):
     """Per-instance MAXMARG protocol state advanced by ``maxmarg.step``.
 
-    Same conventions as :class:`ProtocolState` (leading batch axis B, shared
-    scalar ``turn``, label-0 transcript padding) but no direction grid: the
+    Same conventions as :class:`ProtocolState` (leading batch axis B,
+    per-instance ``turn``, label-0 transcript padding) but no direction grid: the
     MAXMARG selector refits a max-margin separator per turn instead of
     maintaining a consistent-direction arc.  Transcripts hold *received*
     points only (the legacy host loop's ``Node.recv`` — MAXMARG nodes fit on
@@ -129,7 +132,7 @@ class MaxMargState(NamedTuple):
     wx: jnp.ndarray         # (B, k, cap, d) f32 — received-point transcripts
     wy: jnp.ndarray         # (B, k, cap) i32 — transcript labels (0 = empty)
     w_fill: jnp.ndarray     # (B, k) i32 — live transcript length per node
-    turn: jnp.ndarray       # () i32 — global turn counter
+    turn: jnp.ndarray       # (B,) i32 — per-instance turn counter
     done: jnp.ndarray       # (B,) bool
     converged: jnp.ndarray  # (B,) bool
     epochs: jnp.ndarray     # (B,) i32 — 1-based epoch at termination
@@ -172,8 +175,8 @@ def _round_up(x: int, mult: int) -> int:
 def shard_specs(tree):
     """The engine's one sharding rule as a PartitionSpec pytree: axis 0 of
     every batched leaf splits over the mesh's "data" axis, scalar leaves
-    (the shared turn counter) replicate.  Works on any engine pytree —
-    :class:`EngineData`, :class:`ProtocolState`, :class:`MaxMargState`."""
+    replicate.  Works on any engine pytree — :class:`EngineData`,
+    :class:`ProtocolState`, :class:`MaxMargState`."""
     from jax.sharding import PartitionSpec
     return jax.tree_util.tree_map(
         lambda a: PartitionSpec() if np.ndim(a) == 0
@@ -264,7 +267,7 @@ def pack_instances_maxmarg(
         wx=np.zeros((B, k, cap, d), np.float32),
         wy=np.zeros((B, k, cap), np.int32),
         w_fill=np.zeros((B, k), np.int32),
-        turn=np.zeros((), np.int32),
+        turn=np.zeros((B,), np.int32),
         done=done0,
         converged=np.zeros((B,), bool),
         epochs=np.zeros((B,), np.int32),
@@ -347,7 +350,7 @@ def pack_instances(
         w_fill=np.zeros((B, k), np.int32),
         lo_w=np.full((B, k, n_angles), -np.inf, np.float32),
         hi_w=np.full((B, k, n_angles), np.inf, np.float32),
-        turn=np.zeros((), np.int32),
+        turn=np.zeros((B,), np.int32),
         done=done0,
         converged=np.zeros((B,), bool),
         epochs=np.zeros((B,), np.int32),

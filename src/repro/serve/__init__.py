@@ -1,1 +1,14 @@
-from repro.serve.engine import ServeConfig, ServingEngine, make_serve_step  # noqa: F401
+"""Serving package.  Primary entry point: :class:`ProtocolService` —
+streaming protocol sessions over the fault-tolerant session pool.  The
+token-decode stub keeps its old names available for the decode dry-runs.
+"""
+
+from repro.serve.service import ProtocolService  # noqa: F401
+from repro.engine.session_pool import PoolConfig  # noqa: F401
+from repro.engine.faults import FAULT_FREE, FaultSchedule  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    ServeConfig,
+    ServingEngine,
+    TokenServingEngine,
+    make_serve_step,
+)

@@ -1,8 +1,17 @@
-"""Serving: jit'd serve_step (one token, batched requests) + a host engine.
+"""Token-decode stub (NOT the protocol service).
 
-``make_serve_step`` is what the decode-shape dry-runs lower: one new token
-per request against caches of ``cache_len`` (KV, MLA-latent, or SSM state
-depending on the architecture).
+This module is the seed's generic LLM-decode scaffolding — a jit'd
+``serve_step`` (one token, batched requests) plus a minimal greedy host
+engine over ``repro.models``.  It exists so the decode-shape dry-runs have
+something to lower; it has nothing to do with serving the paper's
+classifier protocols.
+
+The *protocol* serving entry point is :class:`repro.serve.service.\
+ProtocolService` — streaming ingest over the fault-tolerant session pool
+(``repro.engine.session_pool``).  Use that unless you specifically want
+the token decoder, which now lives under its explicit name
+:class:`TokenServingEngine` (``ServingEngine`` remains as a compatibility
+alias).
 """
 
 from __future__ import annotations
@@ -38,8 +47,12 @@ def make_serve_step(cfg: ModelConfig, sc: ServeConfig) -> Callable:
     return serve_step
 
 
-class ServingEngine:
-    """Minimal batched greedy decoder over the functional model API."""
+class TokenServingEngine:
+    """Minimal batched greedy decoder over the functional model API.
+
+    Explicitly the token-decode stub — see the module docstring; protocol
+    sessions are served by ``repro.serve.service.ProtocolService``.
+    """
 
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig, jit: bool = True):
         self.cfg, self.params, self.sc = cfg, params, sc
@@ -68,3 +81,8 @@ class ServingEngine:
             out.append(np.asarray(tok))
             self.pos += 1
         return np.concatenate(out, axis=1)
+
+
+# Compatibility alias: the decode stub shipped under this generic name
+# before the protocol service took over the package's front door.
+ServingEngine = TokenServingEngine

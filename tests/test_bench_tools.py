@@ -1,0 +1,205 @@
+"""Bench-tooling failure-mode gates (ISSUE 7 satellite).
+
+The BENCH artifacts are machine-written; a killed benchmark leaves a
+truncated file behind, and CI later reads it.  Both consumers —
+``benchmarks/check_bench_schema.py`` (the schema gate) and
+``benchmarks/bench_history.py`` (the cumulative fold) — must diagnose a
+missing / truncated / wrong-shaped artifact in one clear line, never a
+traceback.  Also pins the BENCH_service.json branch of the schema gate:
+the robustness invariants (zero steady-state recompiles, empty oracle
+mismatch list, terminal-status accounting, chaos runs that actually
+injected faults) must each fail loudly when violated.
+"""
+
+import json
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, ROOT)
+sys.path.insert(0, os.path.join(ROOT, "benchmarks"))
+
+import bench_history
+import check_bench_schema as cbs
+
+
+# ---------------------------------------------------------------------------
+# check_bench_schema: degraded artifacts
+# ---------------------------------------------------------------------------
+
+
+def test_missing_artifact_is_one_clear_error(tmp_path):
+    errs = cbs.check(str(tmp_path / "BENCH_engine.json"))
+    assert len(errs) == 1
+    assert "not found" in errs[0] and "producing benchmark" in errs[0]
+
+
+def test_truncated_artifact_is_one_clear_error(tmp_path):
+    p = tmp_path / "BENCH_engine.json"
+    p.write_text('{"notes": "half-written, benchmark was kil')
+    errs = cbs.check(str(p))
+    assert len(errs) == 1
+    assert "unreadable or truncated" in errs[0]
+
+
+def test_binary_garbage_is_one_clear_error(tmp_path):
+    p = tmp_path / "BENCH_maxmarg.json"
+    p.write_bytes(b"\x80\x81\xfe\xff" * 16)
+    errs = cbs.check(str(p))
+    assert len(errs) == 1
+    assert "unreadable or truncated" in errs[0]
+
+
+def test_wrong_toplevel_is_one_clear_error(tmp_path):
+    p = tmp_path / "BENCH_engine.json"
+    p.write_text("[1, 2, 3]")
+    errs = cbs.check(str(p))
+    assert len(errs) == 1
+    assert "top level is list" in errs[0]
+
+
+def test_main_reports_and_returns_nonzero(tmp_path, capsys):
+    rc = cbs.main([str(tmp_path / "BENCH_engine.json")])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "1 problem(s)" in out and "not found" in out
+
+
+def test_committed_artifacts_still_pass():
+    paths = [os.path.join(ROOT, f"BENCH_{n}.json")
+             for n in ("engine", "maxmarg", "baselines", "history",
+                       "service")]
+    present = [p for p in paths if os.path.exists(p)]
+    assert present, "no committed BENCH artifacts found"
+    for p in present:
+        assert cbs.check(p) == [], p
+
+
+# ---------------------------------------------------------------------------
+# check_bench_schema: the BENCH_service.json branch
+# ---------------------------------------------------------------------------
+
+
+def _service_report():
+    return {
+        "notes": "x",
+        "sessions": 4, "slots": 2, "k": 2, "n_pad": 8,
+        "selector": "median",
+        "schedule": {"seed": 0, "p_dropout": 0.1, "p_drop_msg": 0.0,
+                     "p_straggle": 0.0, "p_corrupt": 0.0, "straggle_max": 3},
+        "statuses": {"converged": 2, "budget_exhausted": 1,
+                     "quarantined": 1},
+        "stats": {"dropouts": 3, "drop_msgs": 0, "straggles": 0,
+                  "corruptions": 0},
+        "fault_free_s": 0.1, "faulted_s": 0.2,
+        "sessions_per_s_fault_free": 40.0, "sessions_per_s_faulted": 20.0,
+        "steady_state_recompiles": 0,
+        "oracle_checked": 4, "oracle_mismatches": [],
+    }
+
+
+def _check_service(tmp_path, report):
+    p = tmp_path / "BENCH_service.json"
+    p.write_text(json.dumps(report))
+    return cbs.check(str(p))
+
+
+def test_service_schema_accepts_valid_report(tmp_path):
+    assert _check_service(tmp_path, _service_report()) == []
+
+
+def test_service_schema_gates_recompiles(tmp_path):
+    r = _service_report()
+    r["steady_state_recompiles"] = 2
+    errs = _check_service(tmp_path, r)
+    assert any("steady_state_recompiles" in e and "wanted 0" in e
+               for e in errs)
+
+
+def test_service_schema_gates_oracle_mismatches(tmp_path):
+    r = _service_report()
+    r["oracle_mismatches"] = [{"sid": 3, "arm": "chaos_vs_fault_free"}]
+    errs = _check_service(tmp_path, r)
+    assert any("oracle_mismatches" in e and "bit-exact" in e for e in errs)
+
+
+def test_service_schema_gates_unchecked_oracle(tmp_path):
+    r = _service_report()
+    r["oracle_checked"] = 0
+    errs = _check_service(tmp_path, r)
+    assert any("never ran" in e for e in errs)
+
+
+def test_service_schema_gates_status_accounting(tmp_path):
+    r = _service_report()
+    r["statuses"]["converged"] = 1          # 3 != sessions=4
+    errs = _check_service(tmp_path, r)
+    assert any("never reached a terminal state" in e for e in errs)
+
+
+def test_service_schema_gates_phantom_chaos(tmp_path):
+    """A report claiming nonzero fault rates but zero injected faults
+    means the chaos arm never actually ran chaotically."""
+    r = _service_report()
+    r["stats"] = {"dropouts": 0, "drop_msgs": 0, "straggles": 0,
+                  "corruptions": 0}
+    errs = _check_service(tmp_path, r)
+    assert any("zero injected faults" in e for e in errs)
+
+
+def test_service_schema_missing_key(tmp_path):
+    r = _service_report()
+    del r["steady_state_recompiles"]
+    errs = _check_service(tmp_path, r)
+    assert any("missing key 'steady_state_recompiles'" in e for e in errs)
+
+
+# ---------------------------------------------------------------------------
+# bench_history: degraded inputs
+# ---------------------------------------------------------------------------
+
+
+def test_history_extract_missing_returns_none(tmp_path):
+    assert bench_history.extract(str(tmp_path / "BENCH_engine.json")) is None
+
+
+def test_history_loader_truncated_exits_cleanly(tmp_path):
+    p = tmp_path / "BENCH_engine.json"
+    p.write_text('{"sequential_s": 1.0, "batched')
+    with pytest.raises(SystemExit, match="unreadable or truncated"):
+        bench_history.extract(str(p))
+
+
+def test_history_loader_wrong_toplevel_exits_cleanly(tmp_path):
+    p = tmp_path / "BENCH_engine.json"
+    p.write_text('["not", "an", "object"]')
+    with pytest.raises(SystemExit, match="top level is list"):
+        bench_history.extract(str(p))
+
+
+def test_history_fold_refuses_corrupt_history(tmp_path):
+    bench = tmp_path / "BENCH_engine.json"
+    bench.write_text(json.dumps({"sequential_s": 1.0, "batched_s": 0.5,
+                                 "speedup": 2.0, "instances": 4,
+                                 "parity_b1_ok": True}))
+    out = tmp_path / "BENCH_history.json"
+    out.write_text(json.dumps({"notes": "x", "entries": {"not": "a list"}}))
+    with pytest.raises(SystemExit, match="refusing to overwrite"):
+        bench_history.fold("pr7", str(tmp_path), str(out))
+
+
+def test_history_fold_truncated_history_exits_cleanly(tmp_path):
+    bench = tmp_path / "BENCH_engine.json"
+    bench.write_text(json.dumps({"sequential_s": 1.0}))
+    out = tmp_path / "BENCH_history.json"
+    out.write_text('{"notes": "x", "entries": [{"label"')
+    with pytest.raises(SystemExit, match="unreadable or truncated"):
+        bench_history.fold("pr7", str(tmp_path), str(out))
+
+
+def test_history_fold_no_artifacts_exits_cleanly(tmp_path):
+    with pytest.raises(SystemExit, match="no BENCH_"):
+        bench_history.fold("pr7", str(tmp_path),
+                           str(tmp_path / "BENCH_history.json"))

@@ -1,0 +1,144 @@
+"""Fault-schedule determinism gates (ISSUE 7 satellite).
+
+The session pool's whole robustness story rests on ``engine/faults.py``
+being a *pure hash*: same (seed, session id, pool turn) ⇒ same draw, no
+RNG state to checkpoint, and a retried turn keyed on the *pool* turn faces
+a fresh draw (no deterministic retry livelock).  This module pins those
+properties directly on ``FaultSchedule.draws`` — the pool-level
+consequences (identical eviction sets, bit-exact survivors, restore
+replay) live in tests/test_session_pool.py.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.engine import faults as F
+from repro.engine.faults import FAULT_FREE, FaultSchedule
+
+CHANNELS = ("dropout", "drop_msg", "straggle", "corrupt")
+SIDS = np.arange(64, dtype=np.int64)
+
+
+def _all_draws(sched, sids=SIDS, turns=32):
+    return [sched.draws(sids, t) for t in range(turns)]
+
+
+def test_draws_deterministic_across_instances():
+    """Two separately-constructed equal schedules agree draw-for-draw —
+    there is no hidden state, so nothing needs checkpointing."""
+    a = FaultSchedule(seed=7, p_dropout=0.3, p_drop_msg=0.2,
+                      p_straggle=0.3, p_corrupt=0.2)
+    b = FaultSchedule(seed=7, p_dropout=0.3, p_drop_msg=0.2,
+                      p_straggle=0.3, p_corrupt=0.2)
+    for da, db in zip(_all_draws(a), _all_draws(b)):
+        for ch in CHANNELS:
+            np.testing.assert_array_equal(da[ch], db[ch])
+
+
+def test_draws_order_independent():
+    """A draw depends only on (seed, sid, turn) — not on which other
+    sessions share the dispatch (batch composition must not leak)."""
+    s = FaultSchedule(seed=3, p_dropout=0.4, p_corrupt=0.4)
+    whole = s.draws(SIDS, 5)
+    perm = np.random.default_rng(0).permutation(SIDS.size)
+    shuffled = s.draws(SIDS[perm], 5)
+    for ch in CHANNELS:
+        np.testing.assert_array_equal(whole[ch][perm], shuffled[ch])
+    solo = s.draws(SIDS[3:4], 5)
+    for ch in CHANNELS:
+        assert solo[ch][0] == whole[ch][3]
+
+
+def test_seed_moves_every_channel():
+    a = FaultSchedule(seed=0, p_dropout=0.5, p_drop_msg=0.5,
+                      p_straggle=0.5, p_corrupt=0.5)
+    b = FaultSchedule(seed=1, p_dropout=0.5, p_drop_msg=0.5,
+                      p_straggle=0.5, p_corrupt=0.5)
+    for ch in CHANNELS:
+        assert any(
+            not np.array_equal(da[ch], db[ch])
+            for da, db in zip(_all_draws(a), _all_draws(b))), ch
+
+
+def test_channels_use_distinct_salts():
+    """At equal probabilities the channels must not fire in lockstep —
+    each has its own salt."""
+    s = FaultSchedule(seed=9, p_dropout=0.5, p_drop_msg=0.5,
+                      p_straggle=0.5, p_corrupt=0.5)
+    d = s.draws(np.arange(512), 0)
+    assert not np.array_equal(d["dropout"], d["drop_msg"])
+    assert not np.array_equal(d["dropout"], d["straggle"] > 0)
+    assert not np.array_equal(d["dropout"], d["corrupt"] >= 0)
+
+
+def test_fault_free_is_inert():
+    assert not FAULT_FREE.any_faults
+    for d in _all_draws(FAULT_FREE, turns=8):
+        assert not d["dropout"].any()
+        assert not d["drop_msg"].any()
+        assert (d["straggle"] == 0).all()
+        assert (d["corrupt"] == -1).all()
+
+
+def test_probability_one_and_value_ranges():
+    s = FaultSchedule(seed=2, p_dropout=1.0, p_drop_msg=1.0,
+                      p_straggle=1.0, p_corrupt=1.0, straggle_max=4)
+    for d in _all_draws(s, turns=8):
+        assert d["dropout"].all() and d["drop_msg"].all()
+        assert ((d["straggle"] >= 1) & (d["straggle"] <= 4)).all()
+        assert np.isin(d["corrupt"],
+                       np.arange(F.N_CORRUPT_KINDS)).all()
+    # every corruption kind is reachable
+    kinds = np.concatenate([d["corrupt"] for d in _all_draws(s, turns=8)])
+    assert set(np.unique(kinds)) == set(range(F.N_CORRUPT_KINDS))
+
+
+def test_empirical_rates_track_probabilities():
+    s = FaultSchedule(seed=5, p_dropout=0.2, p_drop_msg=0.1,
+                      p_straggle=0.3, p_corrupt=0.15)
+    n = 0
+    hits = dict.fromkeys(CHANNELS, 0)
+    for d in _all_draws(s, sids=np.arange(256), turns=40):
+        n += 256
+        hits["dropout"] += int(d["dropout"].sum())
+        hits["drop_msg"] += int(d["drop_msg"].sum())
+        hits["straggle"] += int((d["straggle"] > 0).sum())
+        hits["corrupt"] += int((d["corrupt"] >= 0).sum())
+    for ch, p in (("dropout", 0.2), ("drop_msg", 0.1),
+                  ("straggle", 0.3), ("corrupt", 0.15)):
+        assert abs(hits[ch] / n - p) < 0.02, (ch, hits[ch] / n)
+
+
+def test_retry_faces_fresh_draw():
+    """Keying on the pool turn means a session hit at turn t is NOT
+    deterministically hit at t+1 — the retry livelock guard."""
+    s = FaultSchedule(seed=0, p_dropout=0.5)
+    hit = np.stack([s.draws(SIDS, t)["dropout"] for t in range(16)])
+    # some session recovers right after a hit, and none is hit forever
+    assert (hit[:-1] & ~hit[1:]).any()
+    assert not hit.all(axis=0).any()
+
+
+def test_json_roundtrip():
+    s = FaultSchedule(seed=13, p_dropout=0.05, p_drop_msg=0.03,
+                      p_straggle=0.06, p_corrupt=0.01, straggle_max=5)
+    assert FaultSchedule.from_json(s.to_json()) == s
+    d0 = s.draws(SIDS, 3)
+    d1 = FaultSchedule.from_json(s.to_json()).draws(SIDS, 3)
+    for ch in CHANNELS:
+        np.testing.assert_array_equal(d0[ch], d1[ch])
+
+
+@pytest.mark.parametrize("bad", [
+    dict(p_dropout=-0.1), dict(p_drop_msg=1.5),
+    dict(p_straggle=2.0), dict(p_corrupt=-1e-9),
+    dict(straggle_max=0),
+])
+def test_validation_rejects_bad_config(bad):
+    with pytest.raises(ValueError):
+        FaultSchedule(seed=0, **bad)

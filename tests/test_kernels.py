@@ -248,7 +248,8 @@ def test_median_cut_on_engine_grid_bit_for_bit():
     V = jnp.asarray(geo.direction_grid(256), jnp.float32)
     state = M.step(data, V, state, k=k, first_turn=True)
     for _ in range(5):
-        ci = state.turn % k
+        # lock-step sweep: every per-instance turn is identical
+        ci = int(np.asarray(state.turn)[0]) % k
         lo = jnp.take(state.lo_w, ci, axis=1)
         hi = jnp.take(state.hi_w, ci, axis=1)
         Xc = jnp.take(data.X, ci, axis=1)
@@ -301,7 +302,8 @@ def test_maxmarg_turn_scan_on_engine_grid_bit_for_bit():
     data, state, k, _ = engine.pack_instances_maxmarg(insts, max_epochs=8,
                                                       max_support=4)
     for _ in range(3):
-        ci = state.turn % k
+        # lock-step sweep: every per-instance turn is identical
+        ci = int(np.asarray(state.turn)[0]) % k
         Xc = jnp.take(data.X, ci, axis=1)
         yc = jnp.take(data.y, ci, axis=1)
         Wxc = jnp.take(state.wx, ci, axis=1)

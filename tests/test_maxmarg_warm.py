@@ -205,7 +205,7 @@ def test_per_node_latch_where_single_carry_provably_falls_through():
     w_fill[0, 0] = 2
     base = state0._replace(
         wx=jnp.asarray(wx), wy=jnp.asarray(wy), w_fill=jnp.asarray(w_fill),
-        turn=jnp.asarray(3, jnp.int32),
+        turn=jnp.full((1,), 3, jnp.int32),   # per-instance (B,) turn
         h_w=jnp.asarray([[0.0, 1.0]], jnp.float32),      # dirty prev proposal
         h_b=jnp.zeros((1,), jnp.float32),
         h_valid=jnp.ones((1,), bool),

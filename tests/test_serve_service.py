@@ -1,0 +1,163 @@
+"""Protocol-service front-end gates (ISSUE 7 tentpole, serve layer).
+
+``repro.serve.ProtocolService`` is the streaming entry point over the
+session pool: open a session, feed labeled batches per node (reservoir
+ingest), close to enqueue, pump the pool.  The service adds no decision
+logic, so these tests pin the wrapper semantics only: streamed ingest
+that fits the reservoir reaches the pool byte-identical to a direct
+``submit`` (results bitwise equal), oversized streams downsample at the
+pinned shape, the supervision surface passes through, checkpointing
+refuses open handles, and the satellite-6 API split holds — the
+token-decode stub stays importable under its explicit name while the
+protocol service is the package's primary export.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.serve import (
+    FAULT_FREE,
+    FaultSchedule,
+    PoolConfig,
+    ProtocolService,
+    ServingEngine,
+    TokenServingEngine,
+)
+
+K = 2
+N_PAD = 16
+
+
+def _cfg(**kw):
+    base = dict(slots=4, k=K, n_pad=N_PAD, n_angles=64, max_epochs=8)
+    base.update(kw)
+    return PoolConfig(**base)
+
+
+def _shards(seed, n=N_PAD, k=K):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=2)
+    w /= np.linalg.norm(w)
+    out = []
+    for _ in range(k):
+        X = rng.normal(size=(n, 2)).astype(np.float32)
+        out.append((X, np.where(X @ w > 0, 1, -1).astype(np.int32)))
+    return out
+
+
+def test_streamed_ingest_matches_direct_submit():
+    """Feeding ≤ capacity points in chunks must reach the pool as exactly
+    the direct-submit instance — bitwise-equal results."""
+    svc = ProtocolService(_cfg())
+    direct = ProtocolService(_cfg())
+    sids = {}
+    for seed in range(6):
+        shards = _shards(seed)
+        h = svc.open()
+        for node, (X, y) in enumerate(shards):
+            for lo in range(0, N_PAD, 5):          # ragged chunks
+                svc.feed(h, node, X[lo:lo + 5], y[lo:lo + 5])
+        sids[seed] = (svc.close(h), direct.submit(shards))
+    svc.run()
+    direct.run()
+    for seed, (sa, sb) in sids.items():
+        ra, rb = svc.result(sa), direct.result(sb)
+        assert svc.status(sa) == "converged"
+        assert np.array_equal(np.asarray(ra.classifier.w),
+                              np.asarray(rb.classifier.w))
+        assert float(ra.classifier.b) == float(rb.classifier.b)
+        assert ra.comm == rb.comm and ra.rounds == rb.rounds
+
+
+def test_partial_fill_streams_admit():
+    """A reservoir closed below capacity submits its ragged snapshot; the
+    pool pads with inert label-0 rows and the session still converges."""
+    svc = ProtocolService(_cfg())
+    shards = _shards(40, n=5)                     # 5 < n_pad real rows
+    h = svc.open()
+    for node, (X, y) in enumerate(shards):
+        svc.feed(h, node, X, y)
+    sid = svc.close(h)
+    svc.run()
+    assert svc.status(sid) == "converged"
+    assert svc.result(sid).converged
+
+
+def test_oversized_stream_downsamples_at_pinned_shape():
+    """Feeding far more than the reservoir capacity still admits one
+    pinned-shape instance (Vitter downsampling), and converges."""
+    svc = ProtocolService(_cfg(), ingest_seed=1)
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=2)
+    w /= np.linalg.norm(w)
+    h = svc.open()
+    for node in range(K):
+        for _ in range(10):                       # 10 * 64 points per node
+            X = rng.normal(size=(64, 2)).astype(np.float32)
+            svc.feed(h, node, X, np.where(X @ w > 0, 1, -1))
+    sid = svc.close(h)
+    svc.run()
+    assert svc.status(sid) == "converged"
+    assert svc.stats["admitted"] == 1
+
+
+def test_ingest_validation():
+    svc = ProtocolService(_cfg())
+    with pytest.raises(ValueError, match="exceeds pinned n_pad"):
+        svc.open(reservoir_capacity=N_PAD + 1)
+    h = svc.open()
+    with pytest.raises(ValueError, match="node 2 outside"):
+        svc.feed(h, 2, np.zeros((1, 2), np.float32), np.ones(1))
+    with pytest.raises(ValueError, match="empty node"):
+        svc.close(h)                              # node 1 never fed
+    h = svc.open()
+    svc.feed(h, 0, np.zeros((1, 2), np.float32), np.ones(1))
+    with pytest.raises(ValueError, match="empty node"):
+        svc.close(h)
+
+
+def test_checkpoint_refuses_open_handles(tmp_path):
+    svc = ProtocolService(_cfg())
+    h = svc.open()
+    with pytest.raises(RuntimeError, match="still open"):
+        svc.checkpoint(str(tmp_path))
+    svc.feed(h, 0, np.zeros((1, 2), np.float32), np.ones(1))
+    svc.feed(h, 1, np.zeros((1, 2), np.float32), np.ones(1))
+    svc.close(h)
+    svc.checkpoint(str(tmp_path))                 # closed handles are fine
+    restored = ProtocolService.restore(str(tmp_path))
+    restored.run()
+    assert len(restored.pool.results) == 1
+
+
+def test_faulted_service_surfaces_supervision():
+    svc = ProtocolService(
+        _cfg(), schedule=FaultSchedule(seed=3, p_dropout=0.15,
+                                       p_straggle=0.1))
+    for seed in range(8):
+        svc.submit(_shards(seed))
+    svc.run()
+    assert svc.stats["dropouts"] + svc.stats["straggles"] > 0
+    for sid in range(8):
+        rec = svc.session(sid)
+        assert rec["status"] in ("converged", "budget_exhausted",
+                                 "quarantined")
+        if rec["status"] == "quarantined":
+            assert svc.result(sid) is None
+
+
+def test_token_stub_kept_behind_explicit_name():
+    """Satellite 6: the decode stub is NOT the protocol service — it lives
+    on under TokenServingEngine (ServingEngine aliased for compat), and
+    its docstring says so."""
+    assert ServingEngine is TokenServingEngine
+    assert "stub" in (TokenServingEngine.__doc__ or "").lower()
+    import repro.serve as serve
+    assert serve.ProtocolService is ProtocolService
+    assert "ProtocolService" in (serve.engine.__doc__ or "")
+    assert not FAULT_FREE.any_faults

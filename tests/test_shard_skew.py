@@ -1,0 +1,183 @@
+"""Shard-skew observability gates (ISSUE 7 satellite; ROADMAP's
+skewed-shard item).
+
+``hotloop.shard_skew`` turns :func:`hotloop.balanced_index`'s per-shard
+live counts into the max/mean padding-waste ratio, and ``run_hot`` folds
+it into a caller-supplied ``stats`` dict on every sharded dispatch.  This
+module property-tests both halves over adversarially skewed live masks —
+all-in-one-shard, alternating, single survivor, saturated, empty — plus
+seeded random masks: the balanced index must partition the live set
+exactly (each row once, in its own shard's slice, pad tail all
+out-of-range), and the skew ratio must report 1.0 at balance, S at full
+concentration and 0.0 when nothing is live.
+
+Needs >1 device only for the end-to-end stats-threading case (same
+XLA_FLAGS arrangement as tests/test_engine_sharded.py); the pure-host
+properties run anywhere.
+"""
+
+import os
+import sys
+
+if "jax" not in sys.modules:                     # must precede jax init
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+from repro import engine
+from repro.core import datasets
+from repro.engine import hotloop
+
+
+# ---------------------------------------------------------------------------
+# shard_skew
+# ---------------------------------------------------------------------------
+
+
+def test_skew_balanced_is_one():
+    assert hotloop.shard_skew(np.array([5, 5, 5, 5])) == 1.0
+
+
+def test_skew_all_dead_is_zero():
+    assert hotloop.shard_skew(np.zeros(4, np.int32)) == 0.0
+    assert hotloop.shard_skew(np.array([])) == 0.0
+
+
+def test_skew_full_concentration_is_shard_count():
+    for s in (2, 4, 8):
+        counts = np.zeros(s, np.int32)
+        counts[0] = 17
+        assert hotloop.shard_skew(counts) == float(s)
+
+
+def test_skew_monotone_under_concentration():
+    """Moving live rows from a lighter shard to the heaviest one never
+    decreases the ratio (same total, worse balance)."""
+    counts = np.array([8, 8, 8, 8])
+    prev = hotloop.shard_skew(counts)
+    while counts[1] > 0:
+        counts[0] += 1
+        counts[1] -= 1
+        cur = hotloop.shard_skew(counts)
+        assert cur >= prev
+        prev = cur
+    assert prev == hotloop.shard_skew(np.array([16, 0, 8, 8]))
+
+
+# ---------------------------------------------------------------------------
+# balanced_index partition properties
+# ---------------------------------------------------------------------------
+
+
+def _check_partition(act, B, S):
+    """The balanced index must be a padded exact partition of ``act``."""
+    act = np.asarray(act, np.int64)
+    idx, n_act = hotloop.balanced_index(act, B, S)
+    B_loc = B // S
+    L = idx.size // S
+    assert idx.size == S * L
+    assert L % hotloop.BATCH_MULT == 0 and L >= hotloop.BATCH_MULT
+    assert n_act.shape == (S,)
+    np.testing.assert_array_equal(
+        n_act, np.bincount(act // B_loc, minlength=S))
+    assert L >= int(n_act.max(initial=0))       # every live row covered
+    recovered = []
+    for s in range(S):
+        sl = idx[s * L:(s + 1) * L]
+        c = int(n_act[s])
+        assert (sl[c:] == B).all()              # pad tail: scatter-drop OOB
+        local = sl[:c]
+        assert ((0 <= local) & (local < B_loc)).all()
+        recovered.extend((local.astype(np.int64) + s * B_loc).tolist())
+    # exactly the live set, each row once, ordered within its shard
+    assert recovered == sorted(act.tolist())
+    return n_act
+
+
+ADVERSARIAL = [
+    ("one_shard_full", lambda B, S: np.arange(B // S)),
+    ("last_shard_only", lambda B, S: np.arange(B - B // S, B)),
+    ("alternating", lambda B, S: np.arange(0, B, 2)),
+    ("single_survivor", lambda B, S: np.array([B - 1])),
+    ("one_per_shard", lambda B, S: np.arange(S) * (B // S)),
+    ("saturated", lambda B, S: np.arange(B)),
+    ("empty", lambda B, S: np.array([], np.int64)),
+]
+
+
+@pytest.mark.parametrize("name,gen", ADVERSARIAL, ids=[n for n, _ in ADVERSARIAL])
+@pytest.mark.parametrize("B,S", [(16, 2), (32, 4), (64, 8)])
+def test_balanced_index_adversarial(name, gen, B, S):
+    act = np.sort(np.asarray(gen(B, S), np.int64))
+    n_act = _check_partition(act, B, S)
+    skew = hotloop.shard_skew(n_act)
+    if name == "empty":
+        assert skew == 0.0
+    elif name in ("one_shard_full", "last_shard_only", "single_survivor"):
+        assert skew == float(S)                 # worst case: one shard owns all
+    elif name in ("saturated", "one_per_shard"):
+        assert skew == 1.0
+    else:
+        assert 1.0 <= skew <= float(S)
+
+
+@pytest.mark.parametrize("B,S", [(16, 2), (32, 4), (64, 8), (48, 4)])
+def test_balanced_index_random_masks(B, S):
+    rng = np.random.default_rng(B * 31 + S)
+    for trial in range(50):
+        # bias some trials hard toward one shard to walk the skew range
+        p = rng.uniform(0.05, 0.95)
+        mask = rng.random(B) < p
+        if trial % 3 == 0:
+            mask[B // S:] &= rng.random(B - B // S) < 0.1
+        act = np.flatnonzero(mask)
+        if act.size == 0:
+            continue
+        n_act = _check_partition(act, B, S)
+        assert 1.0 <= hotloop.shard_skew(n_act) <= float(S)
+
+
+# ---------------------------------------------------------------------------
+# stats threading through the sharded hot loop
+# ---------------------------------------------------------------------------
+
+
+def test_single_device_sweep_accepts_stats_dict():
+    """An unsharded sweep takes the stats dict without touching the shard
+    keys (no balanced_index call) and without perturbing results."""
+    insts = [engine.ProtocolInstance(
+        datasets.data1(n_per_node=24, k=2, seed=i), 0.1) for i in range(4)]
+    stats = {}
+    res = engine.run_sweep(insts, n_angles=64, max_epochs=8, stats=stats)
+    assert all(r.converged for r in res)
+    assert "shard_skew_max" not in stats
+    assert "shard_dispatches" not in stats
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="sharded stats threading needs >1 device "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+def test_sharded_sweep_records_skew():
+    """A staggered-convergence sharded sweep must fold every
+    balanced_index call's skew into the stats dict."""
+    from repro.launch.mesh import make_data_mesh
+    mesh = make_data_mesh()
+    gens = (datasets.data1, datasets.data2, datasets.data3)
+    insts = [engine.ProtocolInstance(
+        gens[i % 3](n_per_node=40, k=2, seed=i), (0.1, 0.05)[i % 2])
+        for i in range(16)]
+    stats = {}
+    res = engine.run_sweep(insts, n_angles=128, max_epochs=16,
+                           mesh=mesh, stats=stats)
+    assert all(r.converged for r in res)
+    assert stats["shard_dispatches"] >= 1
+    n_dev = len(mesh.devices.ravel())
+    assert 1.0 <= stats["shard_skew_last"] <= float(n_dev)
+    assert stats["shard_skew_last"] <= stats["shard_skew_max"] <= float(n_dev)
