@@ -1,1 +1,18 @@
-from repro.analysis.roofline import RooflineReport, analyze_compiled, parse_collectives  # noqa: F401
+"""Analysis tooling: roofline/HLO cost models and the static linter.
+
+The roofline re-exports are lazy (PEP 562) so that the stdlib-only lint
+CLI (``python -m repro.analysis.lint``) can run on an interpreter with no
+jax installed — CI's dep-free ``lint`` job depends on this.
+"""
+
+_ROOFLINE_EXPORTS = ("RooflineReport", "analyze_compiled", "parse_collectives")
+
+__all__ = list(_ROOFLINE_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _ROOFLINE_EXPORTS:
+        from repro.analysis import roofline
+
+        return getattr(roofline, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,114 @@
+"""Baseline suppression with a shrink-only ratchet.
+
+The baseline file records the accepted debt: a list of finding keys
+``(rule, path, line-content-hash)`` plus a ``budget`` — the historical
+minimum count.  The gate is two-sided:
+
+* a finding NOT in the baseline is **new** → fail;
+* a baseline entry matching NO finding is **stale** → fail (the debt
+  shrank; the file must be re-written so it can never silently grow
+  back).
+
+``--write-baseline`` refuses to grow the budget unless ``--allow-growth``
+is passed, which is the CI shrink-only gate in file form.
+
+All failure modes diagnose in one line (BaselineError), mirroring the
+bench tooling convention from ``benchmarks/check_bench_schema.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+VERSION = 1
+
+
+class BaselineError(Exception):
+    """Raised with a single human-readable line; the CLI prints it as-is."""
+
+
+@dataclasses.dataclass
+class Baseline:
+    path: str
+    budget: int
+    entries: List[Tuple[str, str, str]]     # (rule, path, content-hash)
+
+    def counts(self) -> Dict[Tuple[str, str, str], int]:
+        out: Dict[Tuple[str, str, str], int] = {}
+        for e in self.entries:
+            out[e] = out.get(e, 0) + 1
+        return out
+
+
+def load_baseline(path: str) -> Baseline:
+    if not os.path.exists(path):
+        raise BaselineError(
+            f"lint baseline error: {path}: not found — create it with "
+            "--write-baseline")
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            data = json.load(fh)
+    except (OSError, ValueError, UnicodeDecodeError):
+        raise BaselineError(
+            f"lint baseline error: {path}: unreadable or truncated — "
+            "re-create it with --write-baseline")
+    if not isinstance(data, dict):
+        raise BaselineError(
+            f"lint baseline error: {path}: top level is "
+            f"{type(data).__name__}, wanted object")
+    if data.get("version") != VERSION:
+        raise BaselineError(
+            f"lint baseline error: {path}: version {data.get('version')!r}, "
+            f"this tool writes version {VERSION}")
+    budget = data.get("budget")
+    if not isinstance(budget, int) or budget < 0:
+        raise BaselineError(
+            f"lint baseline error: {path}: budget must be a non-negative "
+            "integer")
+    raw = data.get("findings")
+    if not isinstance(raw, list):
+        raise BaselineError(
+            f"lint baseline error: {path}: findings must be a list")
+    entries: List[Tuple[str, str, str]] = []
+    for i, e in enumerate(raw):
+        if (not isinstance(e, dict)
+                or not all(isinstance(e.get(k), str)
+                           for k in ("rule", "path", "hash"))):
+            raise BaselineError(
+                f"lint baseline error: {path}: findings[{i}] needs string "
+                "keys rule/path/hash")
+        entries.append((e["rule"], e["path"], e["hash"]))
+    if len(entries) > budget:
+        raise BaselineError(
+            f"lint baseline error: {path}: {len(entries)} entries exceed "
+            f"budget {budget} — the baseline may only shrink")
+    return Baseline(path=path, budget=budget, entries=entries)
+
+
+def write_baseline(
+    path: str,
+    keys: List[Tuple[str, str, str]],
+    previous: Optional[Baseline],
+    allow_growth: bool = False,
+) -> Baseline:
+    budget = len(keys)
+    if previous is not None and budget > previous.budget and not allow_growth:
+        raise BaselineError(
+            f"lint baseline error: {path}: refusing to grow the baseline "
+            f"({previous.budget} -> {budget} findings); fix the new "
+            "findings or pass --allow-growth")
+    data = {
+        "version": VERSION,
+        "budget": budget,
+        "findings": [
+            {"rule": r, "path": p, "hash": h}
+            for (r, p, h) in sorted(keys)
+        ],
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(data, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return Baseline(path=path, budget=budget, entries=list(keys))

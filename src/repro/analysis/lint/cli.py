@@ -1,0 +1,182 @@
+"""CLI: ``python -m repro.analysis.lint src benchmarks [options]``.
+
+Exit codes: 0 clean (modulo baseline), 1 findings / stale baseline,
+2 config or baseline file errors (diagnosed in one line, never a
+traceback).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .baseline import Baseline, BaselineError, load_baseline, write_baseline
+from .config import LintConfig, LintConfigError, find_pyproject, load_config
+from .engine import lint_tree
+from .registry import Finding, all_rules
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Tracing-invariant static analyzer for the repro engine "
+                    "(dispatch-key, donation, RNG, and Pallas contracts).")
+    p.add_argument("paths", nargs="*", default=["src", "benchmarks"],
+                   help="files or directories to lint (default: src benchmarks)")
+    p.add_argument("--baseline", default=None, metavar="FILE",
+                   help="baseline suppression file (default: "
+                        ".lint-baseline.json when present)")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="re-write the baseline from this run's findings "
+                        "(shrink-only unless --allow-growth)")
+    p.add_argument("--allow-growth", action="store_true",
+                   help="permit --write-baseline to grow the budget")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument("--annotate", action="store_true",
+                   help="emit GitHub Actions ::error annotations")
+    p.add_argument("--config", default=None, metavar="PYPROJECT",
+                   help="pyproject.toml to read [tool.repro-lint] from "
+                        "(default: nearest pyproject.toml)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule registry and exit")
+    p.add_argument("-v", "--verbose", action="store_true",
+                   help="also print suppressed findings and manifest skips")
+    return p
+
+
+def _relativize(findings: List[Finding], root: str) -> List[Finding]:
+    out = []
+    for f in findings:
+        rel = os.path.relpath(os.path.abspath(f.path), root).replace(os.sep, "/")
+        out.append(Finding(f.rule, rel, f.line, f.col, f.message))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.id} {rule.name:28s} gate: {rule.gate}")
+            print(f"     {rule.summary}")
+        return 0
+
+    config_path = args.config
+    if config_path is None:
+        start = args.paths[0] if args.paths else os.getcwd()
+        config_path = find_pyproject(
+            start if os.path.isdir(start) else os.path.dirname(start) or ".")
+    try:
+        config = load_config(config_path)
+    except LintConfigError as e:
+        print(str(e))
+        return 2
+
+    result, contexts = lint_tree(args.paths, config)
+
+    baseline_path = args.baseline
+    if baseline_path is None and os.path.exists(
+            os.path.join(config.root, ".lint-baseline.json")):
+        baseline_path = os.path.join(config.root, ".lint-baseline.json")
+
+    # Baseline keys use config-root-relative paths so CI and local runs
+    # agree regardless of cwd.
+    rel_findings = _relativize(result.findings, config.root)
+    keys = []
+    for f, rel in zip(result.findings, rel_findings):
+        fc = contexts.get(f.path)
+        keys.append(rel.key(fc.line_text(f.line) if fc else ""))
+
+    if args.write_baseline:
+        if baseline_path is None:
+            baseline_path = os.path.join(config.root, ".lint-baseline.json")
+        previous: Optional[Baseline] = None
+        if os.path.exists(baseline_path):
+            try:
+                previous = load_baseline(baseline_path)
+            except BaselineError as e:
+                print(str(e))
+                return 2
+        try:
+            write_baseline(baseline_path, keys, previous,
+                           allow_growth=args.allow_growth)
+        except BaselineError as e:
+            print(str(e))
+            return 2
+        print(f"wrote {baseline_path}: {len(keys)} finding(s)")
+        return 0
+
+    new: List[Tuple[Finding, Finding]] = []      # (abs-path finding, rel)
+    stale: List[Tuple[str, str, str]] = []
+    if baseline_path is not None:
+        try:
+            baseline = load_baseline(baseline_path)
+        except BaselineError as e:
+            print(str(e))
+            return 2
+        remaining = baseline.counts()
+        for f, rel, key in zip(result.findings, rel_findings, keys):
+            if remaining.get(key, 0) > 0:
+                remaining[key] -= 1
+            else:
+                new.append((f, rel))
+        stale = [k for k, n in remaining.items() for _ in range(n)]
+    else:
+        new = list(zip(result.findings, rel_findings))
+
+    return _report(args, result, contexts, new, stale, baseline_path)
+
+
+def _report(args, result, contexts, new, stale, baseline_path) -> int:
+    ok = not new and not stale
+    if args.format == "json":
+        payload = {
+            "version": 1,
+            "findings": [
+                {"rule": rel.rule, "path": rel.path, "line": rel.line,
+                 "col": rel.col, "message": rel.message}
+                for _, rel in new
+            ],
+            "stale_baseline": [
+                {"rule": r, "path": p, "hash": h} for (r, p, h) in stale
+            ],
+            "counts": {
+                "files": len(result.files),
+                "findings": len(new),
+                "suppressed": len(result.suppressed),
+                "baselined": len(result.findings) - len(new),
+                "stale": len(stale),
+            },
+            "ok": ok,
+        }
+        print(json.dumps(payload, indent=2, sort_keys=True))
+    else:
+        for f, _ in new:
+            print(f.render())
+        for (r, p, h) in stale:
+            print(f"{p}: stale baseline entry {r}/{h} — the finding is "
+                  "gone; shrink the baseline with --write-baseline")
+        if args.verbose:
+            for f in result.suppressed:
+                print(f"suppressed: {f.render()}")
+            for path, reason in result.skipped:
+                print(f"skipped (manifest): {path} — {reason}")
+        summary = (f"{len(result.files)} file(s), {len(new)} finding(s), "
+                   f"{len(result.suppressed)} suppressed")
+        if baseline_path is not None:
+            summary += f", {len(result.findings) - len(new)} baselined"
+            if stale:
+                summary += f", {len(stale)} stale baseline entr(y/ies)"
+        print(summary)
+    if args.annotate:
+        for f, rel in new:
+            msg = f.message.replace("\n", " ")
+            print(f"::error file={rel.path},line={f.line},"
+                  f"title={f.rule}::{msg}")
+        for (r, p, h) in stale:
+            print(f"::error file={p},title=stale-baseline::stale baseline "
+                  f"entry {r}/{h}; shrink the baseline")
+    return 0 if ok else 1

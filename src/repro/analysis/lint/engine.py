@@ -1,0 +1,150 @@
+"""Lint driver: walk paths, parse, run every registered rule, apply
+inline disables, and enforce the mandatory-reason contract on them."""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .config import LintConfig
+from .context import FileContext, Project
+from .registry import META_RULE, Finding, all_rules
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]
+    suppressed: List[Finding]           # disabled with a valid reason
+    files: List[str]                    # files actually linted
+    skipped: List[Tuple[str, str]]      # (path, manifest reason)
+
+    def keys(self, contexts: Dict[str, "FileContext"]) -> List[Tuple[str, str, str]]:
+        out = []
+        for f in self.findings:
+            fc = contexts.get(f.path)
+            line_text = fc.line_text(f.line) if fc is not None else ""
+            out.append(f.key(line_text))
+        return out
+
+
+def collect_files(
+    paths: Sequence[str], config: LintConfig
+) -> Tuple[List[str], List[Tuple[str, str]]]:
+    """Expand files/dirs into .py files, honoring the exclusion manifest."""
+    files: List[str] = []
+    skipped: List[Tuple[str, str]] = []
+    seen = set()
+
+    def add(p: str) -> None:
+        ap = os.path.abspath(p)
+        if ap in seen:
+            return
+        seen.add(ap)
+        ex = config.excluded(p)
+        if ex is not None:
+            skipped.append((p, ex.reason))
+            return
+        files.append(p)
+
+    for path in paths:
+        if os.path.isfile(path):
+            add(path)
+        elif os.path.isdir(path):
+            for dirpath, dirnames, filenames in os.walk(path):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if d not in {"__pycache__", ".git", ".pytest_cache"})
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        add(os.path.join(dirpath, fn))
+    return files, skipped
+
+
+def lint_tree(
+    paths: Sequence[str], config: LintConfig
+) -> Tuple[LintResult, Dict[str, FileContext]]:
+    files, skipped = collect_files(paths, config)
+    contexts: Dict[str, FileContext] = {}
+    findings: List[Finding] = []
+    for path in files:
+        try:
+            with open(path, "r", encoding="utf-8") as fh:
+                src = fh.read()
+        except (OSError, UnicodeDecodeError) as e:
+            findings.append(Finding(META_RULE, path, 1, 0,
+                                    f"unreadable file ({e})"))
+            continue
+        try:
+            tree = ast.parse(src)
+        except SyntaxError as e:
+            findings.append(Finding(
+                META_RULE, path, e.lineno or 1, (e.offset or 1) - 1,
+                f"syntax error: {e.msg}"))
+            continue
+        contexts[path] = FileContext(path, src, tree)
+
+    project = Project(contexts.values(), config=config)
+    for path, fc in contexts.items():
+        for rule in all_rules():
+            assert rule.check is not None
+            findings.extend(rule.check(fc, project))
+    findings = _dedupe(findings)
+
+    kept, suppressed = _apply_disables(findings, contexts)
+    kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return (
+        LintResult(findings=kept, suppressed=suppressed, files=files,
+                   skipped=skipped),
+        contexts,
+    )
+
+
+def _dedupe(findings: List[Finding]) -> List[Finding]:
+    seen = set()
+    out = []
+    for f in findings:
+        key = (f.rule, f.path, f.line, f.col, f.message)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out
+
+
+def _apply_disables(
+    findings: List[Finding], contexts: Dict[str, FileContext]
+) -> Tuple[List[Finding], List[Finding]]:
+    kept: List[Finding] = []
+    suppressed: List[Finding] = []
+    for f in findings:
+        fc = contexts.get(f.path)
+        if fc is None or f.rule == META_RULE:
+            kept.append(f)
+            continue
+        d = fc.disable_for(f.line)
+        if d is None or f.rule not in d.rules:
+            kept.append(f)
+        elif not d.reason:
+            # Disabled, but the mandatory reason string is missing: the
+            # suppression is void AND the malformed comment is itself a
+            # finding.
+            kept.append(f)
+        else:
+            suppressed.append(f)
+    # Every disable comment must carry a reason, used or not.
+    for path, fc in contexts.items():
+        for d in fc.disables.values():
+            if not d.reason:
+                kept.append(Finding(
+                    META_RULE, path, d.line, 0,
+                    "disable comment without a reason — write "
+                    "'# lint: disable=R00x (why this is a false positive)'"))
+    kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return kept, suppressed
+
+
+def lint_paths(paths: Sequence[str], config: LintConfig) -> List[Finding]:
+    """Convenience wrapper used by tests: findings only."""
+    result, _ = lint_tree(paths, config)
+    return result.findings

@@ -1,0 +1,67 @@
+"""Rule registry and the Finding record.
+
+A rule is a pure function ``check(fc, project) -> list[Finding]`` over a
+parsed :class:`~repro.analysis.lint.context.FileContext`.  Registration
+carries the metadata the satellite gates assert on: the runtime gate the
+rule mirrors and the DESIGN.md anchor documenting it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+# Meta rule id used for checker-level diagnostics that are not part of
+# the registered invariant set: malformed disable comments (a disable
+# without a mandatory reason string) and unparseable files.
+META_RULE = "R000"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str           # path as given on the command line (posix-ish)
+    line: int           # 1-indexed
+    col: int            # 0-indexed
+    message: str
+
+    def key(self, line_text: str) -> tuple:
+        """Baseline identity: stable across pure line-number drift."""
+        import hashlib
+
+        h = hashlib.sha1(line_text.strip().encode("utf-8")).hexdigest()[:12]
+        return (self.rule, self.path, h)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str             # "R001"
+    name: str           # "use-after-donate"
+    gate: str           # runtime gate this rule mirrors
+    summary: str        # one line, shown by --list-rules
+    check: Optional[Callable] = None
+
+
+REGISTRY: Dict[str, Rule] = {}
+
+
+def register(rule: Rule):
+    """Decorator: attach a check function to ``rule`` and register it."""
+
+    def deco(fn: Callable) -> Callable:
+        if rule.id in REGISTRY:
+            raise ValueError(f"duplicate lint rule id {rule.id}")
+        REGISTRY[rule.id] = dataclasses.replace(rule, check=fn)
+        return fn
+
+    return deco
+
+
+def all_rules() -> List[Rule]:
+    # Import for side effect: rule modules self-register on first use.
+    from . import rules as _rules  # noqa: F401
+
+    return [REGISTRY[k] for k in sorted(REGISTRY)]

@@ -1,0 +1,9 @@
+"""Rule modules self-register on import; one module per rule so the
+registry-completeness gate can map rule → module → fixtures 1:1."""
+
+from . import r001_use_after_donate  # noqa: F401
+from . import r002_unpinned_dispatch_key  # noqa: F401
+from . import r003_host_sync_hot_loop  # noqa: F401
+from . import r004_prng_key_reuse  # noqa: F401
+from . import r005_tracer_control_flow  # noqa: F401
+from . import r006_pallas_hygiene  # noqa: F401

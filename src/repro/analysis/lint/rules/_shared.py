@@ -1,0 +1,137 @@
+"""Execution-order walking and small expression predicates shared by the
+dataflow rules (R001/R004) and the scoped scanners (R002/R003)."""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Callable, Dict, Iterable, List, Optional, Set
+
+
+class StmtRule:
+    """Protocol for :func:`walk_body`: a rule supplies leaf-statement and
+    expression handlers plus branch-state copy/merge.
+
+    ``walk_body`` approximates execution order: loop bodies run twice (so
+    loop-carried hazards surface on the second pass), ``if``/``try``
+    branches run on copies and merge conservatively (a hazard survives the
+    merge only if every branch agrees — under-approximate, zero false
+    positives by construction).
+    """
+
+    def on_stmt(self, stmt: ast.stmt, state: dict) -> None:  # leaf
+        raise NotImplementedError
+
+    def on_expr(self, expr: ast.AST, state: dict) -> None:   # header expr
+        raise NotImplementedError
+
+    def on_bind(self, target: ast.AST, state: dict) -> None:
+        raise NotImplementedError
+
+    def copy(self, state: dict) -> dict:
+        raise NotImplementedError
+
+    def merge(self, state: dict, branches: List[dict]) -> None:
+        raise NotImplementedError
+
+
+def walk_body(body: Iterable[ast.stmt], state: dict, rule: StmtRule) -> None:
+    for stmt in body:
+        if isinstance(stmt, ast.If):
+            rule.on_expr(stmt.test, state)
+            b1 = rule.copy(state)
+            b2 = rule.copy(state)
+            walk_body(stmt.body, b1, rule)
+            walk_body(stmt.orelse, b2, rule)
+            rule.merge(state, [b1, b2])
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            rule.on_expr(stmt.iter, state)
+            rule.on_bind(stmt.target, state)
+            for _ in range(2):
+                walk_body(stmt.body, state, rule)
+            walk_body(stmt.orelse, state, rule)
+        elif isinstance(stmt, ast.While):
+            for _ in range(2):
+                rule.on_expr(stmt.test, state)
+                walk_body(stmt.body, state, rule)
+            walk_body(stmt.orelse, state, rule)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                rule.on_expr(item.context_expr, state)
+                if item.optional_vars is not None:
+                    rule.on_bind(item.optional_vars, state)
+            walk_body(stmt.body, state, rule)
+        elif isinstance(stmt, ast.Try):
+            walk_body(stmt.body, state, rule)
+            for h in stmt.handlers:
+                walk_body(h.body, rule.copy(state), rule)
+            walk_body(stmt.orelse, state, rule)
+            walk_body(stmt.finalbody, state, rule)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            # Nested defs are separate scopes; rules that care about them
+            # visit them explicitly.
+            continue
+        else:
+            rule.on_stmt(stmt, state)
+
+
+def load_names(node: ast.AST) -> List[ast.Name]:
+    """Name nodes read (Load ctx) anywhere under ``node``."""
+    return [
+        n for n in ast.walk(node)
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+    ]
+
+
+def last_segment(func: ast.AST) -> Optional[str]:
+    """Trailing identifier of a call target: ``median._hot_turn`` → ``_hot_turn``."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def compile_patterns(patterns: Iterable[str]) -> List[re.Pattern]:
+    return [re.compile(p) for p in patterns]
+
+
+def matches_any(name: Optional[str], patterns: List[re.Pattern]) -> bool:
+    return name is not None and any(p.search(name) for p in patterns)
+
+
+def contains_call_to(expr: ast.AST, names: Set[str]) -> bool:
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call):
+            seg = last_segment(node.func)
+            if seg in names:
+                return True
+    return False
+
+
+def walk_pruned(node: ast.AST, prune=(ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.Lambda)):
+    """ast.walk that does not descend into nested function scopes."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, prune):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def iter_functions(tree: ast.AST):
+    """(qualname, FunctionDef) for every def, outermost first."""
+    def visit(node: ast.AST, prefix: str):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                yield qual, child
+                yield from visit(child, qual + ".")
+            elif isinstance(child, ast.ClassDef):
+                yield from visit(child, f"{prefix}{child.name}.")
+            else:
+                yield from visit(child, prefix)
+
+    yield from visit(tree, "")

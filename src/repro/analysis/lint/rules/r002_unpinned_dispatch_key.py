@@ -1,0 +1,118 @@
+"""R002 unpinned-dispatch-key hazard — the static twin of
+tests/test_recompile.py and the session pool's pinned-key determinism.
+
+The hot loops compile against a pinned ``(n_pad, width, warm)`` key set;
+steady-state recompiles are gated == 0, and the pool's bit-exactness
+across admission timing depends on ONE key.  A Python-varying value —
+a loop variable, a raw ``len()``/``.shape`` read, an f-string — flowing
+into a static/shape-determining kwarg of a jitted dispatch inside a turn
+loop mints a fresh compile key every iteration.
+
+A value is blessed when it passes through a configured quantizer
+(``_round_up`` — the width-growth lattice) or is a comparison (bounded
+bool, e.g. ``first_turn=(t == 0)``).  Only provable hazards fire: a kwarg
+whose provenance is unknown is silent.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from ..context import FileContext, Project
+from ..registry import Finding, Rule, register
+from . import _shared
+
+
+def _loop_vars(loop: ast.AST) -> Set[str]:
+    """Names that vary per iteration: For targets plus names aug-assigned
+    in the body (the ``t += 1`` of a while-loop turn counter)."""
+    out: Set[str] = set()
+    if isinstance(loop, (ast.For, ast.AsyncFor)):
+        for n in ast.walk(loop.target):
+            if isinstance(n, ast.Name):
+                out.add(n.id)
+    for node in ast.walk(loop):
+        if isinstance(node, ast.AugAssign) and isinstance(node.target, ast.Name):
+            out.add(node.target.id)
+    return out
+
+
+def _hazard(expr: ast.AST, loop_vars: Set[str], quantizers: Set[str]) -> Optional[str]:
+    if _shared.contains_call_to(expr, quantizers):
+        return None                      # quantized onto the key lattice
+    if isinstance(expr, ast.Compare):
+        return None                      # bounded bool (first_turn=(t == 0))
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            if node.id in loop_vars:
+                return f"loop-varying value '{node.id}'"
+        elif isinstance(node, ast.Call):
+            seg = _shared.last_segment(node.func)
+            if seg == "len":
+                return "raw len() read"
+            if seg in {"str", "repr", "format"}:
+                return "python string"
+        elif isinstance(node, ast.Attribute) and node.attr == "shape":
+            return "raw .shape read"
+        elif isinstance(node, ast.JoinedStr):
+            return "f-string"
+    return None
+
+
+@register(Rule(
+    id="R002",
+    name="unpinned-dispatch-key",
+    gate="tests/test_recompile.py + pinned-key determinism "
+         "(DESIGN.md §session pool)",
+    summary="Python-varying values must not flow into static/"
+            "shape-determining kwargs of jitted dispatches inside turn loops",
+))
+def check(fc: FileContext, project: Project) -> List[Finding]:
+    cfg = project.config
+    dispatch_pats = _shared.compile_patterns(cfg.dispatch_patterns)
+    quantizers = set(cfg.quantizers)
+    base_static = set(cfg.static_kwargs)
+    findings: List[Finding] = []
+    seen = set()
+
+    for _, fn in _shared.iter_functions(fc.tree):
+        for loop in ast.walk(fn):
+            if not isinstance(loop, (ast.For, ast.AsyncFor, ast.While)):
+                continue
+            lvars = _loop_vars(loop)
+            if not lvars:
+                continue
+            for call in ast.walk(loop):
+                if not isinstance(call, ast.Call):
+                    continue
+                seg = _shared.last_segment(call.func)
+                if seg is None:
+                    continue
+                binding = fc.jit_bindings.get(seg)
+                is_dispatch = binding is not None or _shared.matches_any(
+                    seg, dispatch_pats)
+                if not is_dispatch:
+                    continue
+                statics = set(base_static)
+                if binding is not None and binding.static_resolved:
+                    statics |= binding.static_names
+                for kw in call.keywords:
+                    if kw.arg not in statics:
+                        continue
+                    why = _hazard(kw.value, lvars, quantizers)
+                    if why is None:
+                        continue
+                    key = (kw.value.lineno, kw.value.col_offset, kw.arg)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    findings.append(Finding(
+                        "R002", fc.path, kw.value.lineno,
+                        kw.value.col_offset,
+                        f"{why} flows into static kwarg '{kw.arg}' of "
+                        f"dispatch '{seg}' inside a turn loop — this mints "
+                        "a new compile key every iteration; pin it or pass "
+                        "it through the width quantizer "
+                        "[gate: tests/test_recompile.py]"))
+    return findings

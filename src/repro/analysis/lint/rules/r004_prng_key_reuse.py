@@ -1,0 +1,169 @@
+"""R004 PRNG-key reuse — the static twin of FaultSchedule statelessness.
+
+The engine's reproducibility story (stateless splitmix64 fault draws,
+seeded per-instance sampling, the reservoir chi-square gate) assumes
+functional PRNG discipline: a key is consumed by exactly one
+``jax.random.*`` sampling call; further randomness comes from
+``split``/``fold_in`` derivatives.  Consuming a key twice silently
+correlates draws that every node must instead agree are independent —
+the distributed transcripts stay identical, but the statistics they
+certify are wrong.
+
+Events per key binding, in execution order (loops walked twice so a
+consume-in-loop of a key bound outside the loop surfaces):
+
+* **consume** — key passed as the first argument (or ``key=``) to a
+  sampling ``jax.random.*`` call;
+* **derive** — key passed to ``split``/``fold_in`` (allowed repeatedly:
+  ``fold_in(key, i)`` per step is the idiom);
+* **rebind** — assignment to the name resets it.
+
+Flagged: consume→consume, consume→derive, derive→consume without a
+rebind in between.  Constant-index subscripts (``ks[0]``) are tracked
+per element; varying subscripts (``ks[i]`` in a loop) are skipped — that
+is the idiomatic batched pattern, not reuse.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from ..context import FileContext, Project, assigned_names
+from ..registry import Finding, Rule, register
+from . import _shared
+
+_PRODUCERS = {"PRNGKey", "key", "key_data", "wrap_key_data"}
+_DERIVERS = {"split", "fold_in", "clone"}
+
+# key state: ("fresh"|"derived"|"consumed", line_of_last_event)
+_RANK = {"fresh": 0, "derived": 1, "consumed": 2}
+
+
+class _Walker(_shared.StmtRule):
+    def __init__(self, fc: FileContext):
+        self.fc = fc
+        self.findings: List[Finding] = []
+        self._seen = set()
+
+    # -- helpers ---------------------------------------------------------
+
+    def _key_id(self, node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Name):
+            return node.id
+        if isinstance(node, ast.Subscript) and isinstance(node.value, ast.Name):
+            sl = node.slice
+            if isinstance(sl, ast.Constant) and isinstance(sl.value, int):
+                return f"{node.value.id}[{sl.value}]"
+            return None                     # varying subscript: skip
+        return None
+
+    def _random_call(self, call: ast.Call) -> Optional[str]:
+        """Return the jax.random function name, else None."""
+        canon = self.fc.call_canonical(call)
+        if canon and canon.startswith("jax.random."):
+            return canon.rsplit(".", 1)[1]
+        return None
+
+    def _flag(self, node: ast.AST, key: str, prev: Tuple[str, int],
+              event: str) -> None:
+        k = (node.lineno, node.col_offset, key)
+        if k in self._seen:
+            return
+        self._seen.add(k)
+        prev_state, prev_line = prev
+        if prev_state == "consumed":
+            what = f"already consumed at line {prev_line}"
+        else:
+            what = f"already split/folded at line {prev_line} — use the " \
+                   "derived keys"
+        self.findings.append(Finding(
+            "R004", self.fc.path, node.lineno, node.col_offset,
+            f"PRNG key '{key}' {what}; split or fold_in before reuse "
+            "[gate: FaultSchedule statelessness + reservoir chi-square]"))
+
+    # -- events ----------------------------------------------------------
+
+    def _process(self, node: ast.AST, state: dict) -> None:
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            fn = self._random_call(call)
+            if fn is None or fn in _PRODUCERS:
+                continue
+            arg = None
+            if call.args:
+                arg = call.args[0]
+            else:
+                for kw in call.keywords:
+                    if kw.arg == "key":
+                        arg = kw.value
+            if arg is None:
+                continue
+            key = self._key_id(arg)
+            if key is None:
+                continue
+            event = "derive" if fn in _DERIVERS else "consume"
+            prev = state.get(key, ("fresh", 0))
+            if prev[0] == "consumed" or (prev[0] == "derived"
+                                         and event == "consume"):
+                self._flag(call, key, prev, event)
+            new_state = event + "d" if event == "consume" else "derived"
+            if _RANK[new_state] > _RANK[prev[0]]:
+                state[key] = (new_state, call.lineno)
+
+    def on_expr(self, expr: ast.AST, state: dict) -> None:
+        self._process(expr, state)
+
+    def on_bind(self, target: ast.AST, state: dict) -> None:
+        for name in assigned_names(target):
+            state[name] = ("fresh", 0)
+            for k in list(state):
+                if k.startswith(name + "["):
+                    state[k] = ("fresh", 0)
+
+    def on_stmt(self, stmt: ast.stmt, state: dict) -> None:
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            if stmt.value is not None:
+                self._process(stmt.value, state)
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            for t in targets:
+                if t is not None:
+                    self.on_bind(t, state)
+        else:
+            self._process(stmt, state)
+
+    def copy(self, state: dict) -> dict:
+        return dict(state)
+
+    def merge(self, state: dict, branches: List[dict]) -> None:
+        names = set()
+        for b in branches:
+            names |= set(b)
+        for n in names:
+            marks = [b.get(n, ("fresh", 0)) for b in branches]
+            # keep the LEAST advanced state — exclusive branches must not
+            # combine into a phantom reuse
+            state[n] = min(marks, key=lambda m: _RANK[m[0]])
+
+
+@register(Rule(
+    id="R004",
+    name="prng-key-reuse",
+    gate="FaultSchedule statelessness (tests/test_session_pool.py) + "
+         "sampling determinism",
+    summary="a PRNG key consumed by two jax.random.* calls without an "
+            "intervening split/fold_in rebinding",
+))
+def check(fc: FileContext, project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for _, fn in _shared.iter_functions(fc.tree):
+        walker = _Walker(fc)
+        _shared.walk_body(fn.body, {}, walker)
+        findings.extend(walker.findings)
+    # module-level statements too (scripts/benchmarks)
+    walker = _Walker(fc)
+    _shared.walk_body(fc.tree.body, {}, walker)
+    findings.extend(walker.findings)
+    return findings

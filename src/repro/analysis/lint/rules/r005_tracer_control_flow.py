@@ -1,0 +1,163 @@
+"""R005 tracer-unsafe control flow.
+
+Python ``if``/``while``/``assert`` on a traced value either crashes at
+trace time (ConcretizationTypeError) or — worse, under ``jit`` with
+weak-typed inputs — silently bakes one branch into the compiled
+dispatch, breaking the every-node-same-transcript property the paper's
+communication bounds rest on.  Branching belongs in ``lax.cond`` /
+``jnp.where``; Python control flow may only touch *static* values.
+
+Traced contexts are resolved within the module: defs decorated with
+``jax.jit`` (or ``functools.partial(jax.jit, ...)``), names wrapped via
+``X = jax.jit(fn, static_argnames=...)``, and callbacks handed to
+``lax.while_loop``/``scan``/``cond``/``shard_map``/``vmap``.  Static
+params (resolved ``static_argnames``/``argnums``) are exempt; functions
+whose statics cannot be resolved are skipped rather than guessed at.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from ..context import FileContext, Project, assigned_names
+from ..registry import Finding, Rule, register
+from . import _shared
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_STATIC_CALLS = {"len", "isinstance", "type", "hasattr", "getattr", "callable"}
+
+# funcs whose Nth positional args are traced callbacks
+_CALLBACK_SLOTS = {
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "scan": (0,),
+    "cond": (1, 2),
+    "switch": (1,),
+    "shard_map": (0,),
+    "vmap": (0,),
+    "pmap": (0,),
+    "jit": (0,),
+    "grad": (0,),
+    "value_and_grad": (0,),
+}
+
+
+def _tainted(expr: ast.AST, tainted: Set[str], fc: FileContext) -> bool:
+    if isinstance(expr, ast.Name):
+        return expr.id in tainted
+    if isinstance(expr, ast.Attribute):
+        if expr.attr in _STATIC_ATTRS:
+            return False
+        return _tainted(expr.value, tainted, fc)
+    if isinstance(expr, ast.Subscript):
+        return _tainted(expr.value, tainted, fc)
+    if isinstance(expr, ast.Call):
+        seg = _shared.last_segment(expr.func)
+        if seg in _STATIC_CALLS:
+            return False
+        canon = fc.call_canonical(expr) or ""
+        if canon.startswith(("jax.numpy.", "jax.lax.", "jax.random.", "jax.nn.")):
+            return True
+        if isinstance(expr.func, ast.Attribute) and _tainted(
+                expr.func.value, tainted, fc):
+            return True                  # method on a traced value: .sum()
+        args = list(expr.args) + [kw.value for kw in expr.keywords]
+        return any(_tainted(a, tainted, fc) for a in args)
+    if isinstance(expr, ast.Compare):
+        # `x is None` / `x is not None` is a static structural check even
+        # on traced args — tracers are never None.
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in expr.ops):
+            return False
+        return (_tainted(expr.left, tainted, fc)
+                or any(_tainted(c, tainted, fc) for c in expr.comparators))
+    if isinstance(expr, ast.BoolOp):
+        return any(_tainted(v, tainted, fc) for v in expr.values)
+    if isinstance(expr, ast.BinOp):
+        return (_tainted(expr.left, tainted, fc)
+                or _tainted(expr.right, tainted, fc))
+    if isinstance(expr, ast.UnaryOp):
+        return _tainted(expr.operand, tainted, fc)
+    if isinstance(expr, ast.IfExp):
+        return (_tainted(expr.test, tainted, fc)
+                or _tainted(expr.body, tainted, fc)
+                or _tainted(expr.orelse, tainted, fc))
+    return False
+
+
+def _scan_traced_fn(
+    fc: FileContext, fn: ast.FunctionDef, statics: Set[str]
+) -> List[Finding]:
+    params = set(fc.param_names(fn))
+    tainted: Set[str] = params - statics
+    # grow the taint set to a fixpoint over local assignments
+    for _ in range(4):
+        grew = False
+        for node in _shared.walk_pruned(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            if _tainted(node.value, tainted, fc):
+                for t in node.targets:
+                    for name in assigned_names(t):
+                        if name not in tainted:
+                            tainted.add(name)
+                            grew = True
+        if not grew:
+            break
+
+    findings: List[Finding] = []
+    for node in _shared.walk_pruned(fn):
+        test = None
+        kind = None
+        if isinstance(node, ast.If):
+            test, kind = node.test, "if"
+        elif isinstance(node, ast.While):
+            test, kind = node.test, "while"
+        elif isinstance(node, ast.Assert):
+            test, kind = node.test, "assert"
+        if test is None or not _tainted(test, tainted, fc):
+            continue
+        findings.append(Finding(
+            "R005", fc.path, node.lineno, node.col_offset,
+            f"python '{kind}' on a traced value inside '{fn.name}' "
+            "(jitted/traced context) — this concretizes a tracer or bakes "
+            "one branch into the compiled dispatch; use lax.cond/jnp.where "
+            "[gate: every-node-same-transcript determinism]"))
+    return findings
+
+
+@register(Rule(
+    id="R005",
+    name="tracer-unsafe-control-flow",
+    gate="trace-time soundness of every jitted dispatch "
+         "(tests/test_engine.py parity gates)",
+    summary="python if/while/assert on values computed in a traced "
+            "context (non-static params, jnp/lax results)",
+))
+def check(fc: FileContext, project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    traced = dict(fc.traced_functions())
+    # callbacks passed positionally to lax control flow / shard_map / vmap
+    for node in ast.walk(fc.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        seg = _shared.last_segment(node.func)
+        slots = _CALLBACK_SLOTS.get(seg or "")
+        if slots is None:
+            continue
+        canon = fc.call_canonical(node) or ""
+        if not canon.startswith(("jax.", "functools.")) and "shard_map" not in canon:
+            continue
+        for i in slots:
+            if i < len(node.args) and isinstance(node.args[i], ast.Name):
+                name = node.args[i].id
+                if name in fc.functions:
+                    traced.setdefault(name, set())
+    for name, statics in traced.items():
+        if statics is None:
+            continue                      # unresolvable statics: skip
+        fn = fc.functions.get(name)
+        if fn is None:
+            continue
+        findings.extend(_scan_traced_fn(fc, fn, statics))
+    return findings

@@ -1,0 +1,255 @@
+"""R006 Pallas kernel hygiene — the static twin of the interpret-mode
+parity gates (tests/test_kernels.py vs kernels/ref.py).
+
+Three checks over modules that touch ``jax.experimental.pallas``:
+
+* **(a) unclamped program-id index** — a ``pl.program_id``-derived value
+  used as an index in ``pl.load``/``pl.store``/ref subscripts without
+  passing through ``clip``/``minimum``/``maximum``: on the last grid step
+  the block origin may run past the padded extent.  Comparisons
+  (``@pl.when(ni == 0)``) are not indices and never fire.
+* **(b) missing jnp ref counterpart** — every public entry point of a
+  ``kernels/`` module that launches a ``pallas_call`` owes a
+  ``*_ref``/``*_batch_ref`` twin in the sibling ``ref.py``; the parity
+  tests and the differential oracles both dispatch on that name.
+* **(c) narrow accumulation** — a float VMEM scratch accumulator at a
+  narrower dtype than the kernel output silently rounds partial sums
+  that the jnp ref computes at full width, so parity fails only at
+  sizes the fixtures never reach.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from ..context import FileContext, Project
+from ..registry import Finding, Rule, register
+from . import _shared
+
+_CLAMPS = {"clip", "minimum", "maximum", "min", "max", "mod", "remainder"}
+_FLOAT_WIDTH = {"float16": 16, "bfloat16": 16, "float32": 32, "float64": 64}
+
+
+def _uses_pallas(fc: FileContext) -> bool:
+    return any("pallas" in v for v in fc.aliases.values())
+
+
+def _is_pallas_call(fc: FileContext, call: ast.Call) -> bool:
+    canon = fc.call_canonical(call) or ""
+    return canon.endswith(".pallas_call") or canon == "pallas_call"
+
+
+def _kernel_functions(fc: FileContext) -> Set[str]:
+    """Defs passed (directly or via functools.partial) to a pallas_call,
+    plus any def that reads pl.program_id."""
+    kernels: Set[str] = set()
+    for node in ast.walk(fc.tree):
+        if isinstance(node, ast.Call) and _is_pallas_call(fc, node):
+            if node.args:
+                k = node.args[0]
+                if isinstance(k, ast.Call) and k.args:
+                    k = k.args[0]
+                if isinstance(k, ast.Name):
+                    kernels.add(k.id)
+    for name, fn in fc.functions.items():
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                canon = fc.call_canonical(node) or ""
+                if canon.endswith(".program_id"):
+                    kernels.add(name)
+                    break
+    return kernels
+
+
+def _check_pid_indices(fc: FileContext, fn: ast.FunctionDef) -> List[Finding]:
+    pid: Set[str] = set()
+    for _ in range(3):
+        grew = False
+        for node in _shared.walk_pruned(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            rhs_pid = False
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Call):
+                    canon = fc.call_canonical(sub) or ""
+                    if canon.endswith(".program_id"):
+                        rhs_pid = True
+                elif (isinstance(sub, ast.Name)
+                      and isinstance(sub.ctx, ast.Load) and sub.id in pid):
+                    rhs_pid = True
+            if rhs_pid and not _shared.contains_call_to(node.value, _CLAMPS):
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and t.id not in pid:
+                        pid.add(t.id)
+                        grew = True
+        if not grew:
+            break
+
+    def hazardous(idx: ast.AST) -> Optional[str]:
+        if _shared.contains_call_to(idx, _CLAMPS):
+            return None
+        if isinstance(idx, ast.Compare):
+            return None
+        for sub in ast.walk(idx):
+            if isinstance(sub, ast.Call):
+                canon = fc.call_canonical(sub) or ""
+                if canon.endswith(".program_id"):
+                    return "pl.program_id(...)"
+            if (isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load)
+                    and sub.id in pid):
+                return f"'{sub.id}'"
+        return None
+
+    findings: List[Finding] = []
+    params = set(fc.param_names(fn))
+
+    def flag(node: ast.AST, what: str, where: str) -> None:
+        findings.append(Finding(
+            "R006", fc.path, node.lineno, node.col_offset,
+            f"unclamped program-id-derived index {what} in {where} inside "
+            f"kernel '{fn.name}' — clip it to the padded extent before "
+            "addressing [gate: interpret-mode parity vs kernels/ref.py]"))
+
+    for node in _shared.walk_pruned(fn):
+        if isinstance(node, ast.Call):
+            canon = fc.call_canonical(node) or ""
+            if canon.endswith((".load", ".store")) and "pallas" in canon:
+                for idx in node.args[1:]:
+                    what = hazardous(idx)
+                    if what:
+                        flag(node, what, canon.rsplit(".", 1)[1])
+        elif isinstance(node, ast.Subscript):
+            base = node.value
+            if (isinstance(base, ast.Name) and base.id in params):
+                what = hazardous(node.slice)
+                if what:
+                    flag(node, what, f"'{base.id}[...]'")
+    return findings
+
+
+def _entry_points(fc: FileContext) -> List[ast.FunctionDef]:
+    out = []
+    for name, fn in fc.functions.items():
+        if name.startswith("_"):
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and _is_pallas_call(fc, node):
+                out.append(fn)
+                break
+    return out
+
+
+def _ref_stems(ref_fc: FileContext) -> Set[str]:
+    stems = set()
+    for name in ref_fc.functions:
+        if name.endswith("_ref"):
+            stem = name[:-4]
+            if stem.endswith("_batch"):
+                stem = stem[:-6]
+            stems.add(stem)
+    return stems
+
+
+def _check_ref_counterparts(
+    fc: FileContext, project: Project
+) -> List[Finding]:
+    frag = project.config.kernels_fragment
+    norm = fc.path.replace("\\", "/")
+    if f"/{frag}/" not in norm and not norm.startswith(f"{frag}/"):
+        return []
+    entries = _entry_points(fc)
+    if not entries:
+        return []
+    ref = project.sibling(fc.path, "ref")
+    stems = _ref_stems(ref) if ref is not None else set()
+    findings = []
+    for fn in entries:
+        stem = fn.name
+        if stem.endswith("_batched"):
+            stem = stem[: -len("_batched")]
+        ok = any(s == stem or s in stem or stem in s for s in stems)
+        if not ok:
+            findings.append(Finding(
+                "R006", fc.path, fn.lineno, fn.col_offset,
+                f"pallas entry point '{fn.name}' has no jnp ref "
+                "counterpart in the sibling ref.py (expected "
+                f"'{stem}_ref' or '{stem}_batch_ref') — the parity tests "
+                "and differential oracles need one "
+                "[gate: interpret-mode parity, tests/test_kernels.py]"))
+    return findings
+
+
+def _dtype_name(node: ast.AST) -> Optional[str]:
+    name = None
+    if isinstance(node, (ast.Attribute, ast.Name)):
+        seg = _shared.last_segment(node)
+        name = seg
+    elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+        name = node.value
+    return name
+
+
+def _check_scratch_dtypes(fc: FileContext) -> List[Finding]:
+    findings = []
+    for call in ast.walk(fc.tree):
+        if not isinstance(call, ast.Call) or not _is_pallas_call(fc, call):
+            continue
+        out_widths: List[int] = []
+        scratch: List = []
+        for kw in call.keywords:
+            if kw.arg == "out_shape":
+                structs = (kw.value.elts
+                           if isinstance(kw.value, (ast.Tuple, ast.List))
+                           else [kw.value])
+                for s in structs:
+                    if isinstance(s, ast.Call):
+                        dt = None
+                        for skw in s.keywords:
+                            if skw.arg == "dtype":
+                                dt = _dtype_name(skw.value)
+                        if dt is None and len(s.args) >= 2:
+                            dt = _dtype_name(s.args[1])
+                        if dt in _FLOAT_WIDTH:
+                            out_widths.append(_FLOAT_WIDTH[dt])
+            elif kw.arg == "scratch_shapes":
+                if isinstance(kw.value, (ast.Tuple, ast.List)):
+                    scratch = list(kw.value.elts)
+        if not out_widths or not scratch:
+            continue
+        out_w = max(out_widths)
+        for s in scratch:
+            if not isinstance(s, ast.Call) or len(s.args) < 2:
+                continue
+            dt = _dtype_name(s.args[1])
+            w = _FLOAT_WIDTH.get(dt or "")
+            if w is not None and w < out_w:
+                findings.append(Finding(
+                    "R006", fc.path, s.lineno, s.col_offset,
+                    f"float scratch accumulator is {dt} but the kernel "
+                    f"output is {out_w}-bit — partial sums round before "
+                    "the ref does; accumulate at least at output width "
+                    "[gate: interpret-mode parity vs kernels/ref.py]"))
+    return findings
+
+
+@register(Rule(
+    id="R006",
+    name="pallas-kernel-hygiene",
+    gate="interpret-mode kernel parity (tests/test_kernels.py + "
+         "kernels/ref.py differential oracles)",
+    summary="unclamped program-id indices in pl.load/pl.store, missing "
+            "jnp ref counterpart in ref.py, float accumulation narrower "
+            "than the kernel output",
+))
+def check(fc: FileContext, project: Project) -> List[Finding]:
+    if not _uses_pallas(fc):
+        return []
+    findings: List[Finding] = []
+    for name in sorted(_kernel_functions(fc)):
+        fn = fc.functions.get(name)
+        if fn is not None:
+            findings.extend(_check_pid_indices(fc, fn))
+    findings.extend(_check_ref_counterparts(fc, project))
+    findings.extend(_check_scratch_dtypes(fc))
+    return findings

@@ -1,0 +1,30 @@
+"""Known-bad R001: three use-after-donate shapes the runtime gate
+(tests/test_hotloop_donate.py) only catches when the path is exercised."""
+
+import jax
+
+
+def step(data, state):
+    return state
+
+
+_step_don = jax.jit(step, donate_argnames=("state",))
+_step_jit = jax.jit(step)
+
+
+def straight_line(data, state, host_view):
+    out = _step_don(data, state)
+    view = host_view(state)          # BAD: state's buffer was donated
+    return out, view
+
+
+def conditional_alias(data, state, donate):
+    step_d = _step_don if donate else _step_jit
+    out = step_d(data, state)
+    return out, state.turn           # BAD: donating alias reaches here
+
+
+def loop_carried(data, state, k):
+    for _ in range(k):
+        _ = _step_don(data, state)   # BAD on 2nd iteration: state dead
+    return data

@@ -1,0 +1,26 @@
+"""Known-clean R001: the single-consumer discipline the hot loops follow —
+every donated name is rebound before any further read."""
+
+import jax
+
+
+def step(data, state):
+    return state
+
+
+_step_don = jax.jit(step, donate_argnames=("state",))
+
+
+def rebound_chain(data, state, host_view, k):
+    for _ in range(k):
+        state = _step_don(data, state)   # consume + rebind, same statement
+        view = host_view(state)          # reads the NEW handle
+    return state, view
+
+
+def exclusive_branches(data, state, flag):
+    if flag:
+        state = _step_don(data, state)
+    else:
+        pass                             # state never donated on this arm
+    return state

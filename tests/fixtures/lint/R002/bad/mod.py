@@ -1,0 +1,22 @@
+"""Known-bad R002: Python-varying values minting a fresh compile key per
+iteration — the recompile storm tests/test_recompile.py gates against."""
+
+import jax
+
+
+def step(data, state, *, trans_width, n_pad):
+    return state
+
+
+_step_jit = jax.jit(step, static_argnames=("trans_width", "n_pad"))
+
+
+def run_turns(data, state, acts, labels):
+    for t in range(10):
+        # BAD: raw loop variable as a static kwarg
+        state = _step_jit(data, state, trans_width=t, n_pad=8)
+        # BAD: unquantized len() read
+        state = _step_jit(data, state, trans_width=len(acts), n_pad=8)
+        # BAD: raw .shape read
+        state = _step_jit(data, state, trans_width=8, n_pad=data.shape[0])
+    return state

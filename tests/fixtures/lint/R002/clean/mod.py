@@ -1,0 +1,27 @@
+"""Known-clean R002: everything reaching a static kwarg is pinned to the
+compile-key lattice — quantized, constant, or a bounded comparison."""
+
+import jax
+
+GROWTH = 8
+
+
+def _round_up(n, mult):
+    return ((n + mult - 1) // mult) * mult
+
+
+def step(data, state, *, trans_width, first_turn):
+    return state
+
+
+_step_jit = jax.jit(step, static_argnames=("trans_width", "first_turn"))
+
+
+def run_turns(data, state, acts, cap):
+    for t in range(10):
+        # quantized onto the growth lattice: finitely many keys
+        width = min(cap, _round_up(len(acts), GROWTH))
+        state = _step_jit(data, state, trans_width=width,
+                          first_turn=(t == 0))       # bounded bool: 2 keys
+        state = _step_jit(data, state, trans_width=cap, first_turn=False)
+    return state

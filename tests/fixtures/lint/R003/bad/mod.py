@@ -1,0 +1,27 @@
+"""Known-bad R003: device→host syncs inside the turn loop, outside the
+blessed packed-(3,B) host-view transfer — each one serializes the
+double-buffered overlap."""
+
+import numpy as np
+
+import jax
+
+
+def run_hot(state, dispatch, host_view, k):
+    for t in range(8):
+        view = np.asarray(host_view(state, t % k))     # blessed
+        loss = state.loss.item()                       # BAD: scalar sync
+        turns = state.turn.tolist()                    # BAD: full transfer
+        raw = np.asarray(state.margin)                 # BAD: unblessed pull
+        state.done.block_until_ready()                 # BAD: barrier
+        got = jax.device_get(state.w)                  # BAD: device_get
+        fill = int(state.fill[0])                      # BAD: cast on device
+        state = dispatch(state)
+    return state
+
+
+def step_pool(pool, viewer, dispatch):
+    while not pool.drained:
+        flags = np.asarray(pool.state.flags)           # BAD: unblessed pull
+        pool.state = dispatch(pool.state)
+    return pool

@@ -1,0 +1,20 @@
+"""Known-clean R003: the committed hot-loop discipline — one blessed
+view pull per turn; every host decision derives from it."""
+
+import numpy as np
+
+
+def run_hot(state, dispatch, host_view, k, cap):
+    t = 0
+    # pre-loop pull: scope is the turn loop only, setup may sync freely
+    t = int(np.asarray(state.turn).max(initial=0))
+    while t < cap:
+        vh = host_view(state, t % k)           # blessed producer
+        view = np.asarray(vh)                  # blessed chain
+        done, warm_ok, fills = view
+        if bool(done.all()):                   # host data: free to branch
+            break
+        width = int(np.max(fills))             # host data
+        state = dispatch(state, width)
+        t += 1
+    return state

@@ -1,0 +1,37 @@
+"""Known-bad R004: PRNG keys consumed twice — the draws silently
+correlate while every transcript still agrees, so only statistics gates
+(reservoir chi-square) would ever notice at runtime."""
+
+import jax
+
+
+def double_consume(key):
+    a = jax.random.normal(key, (3,))
+    b = jax.random.uniform(key, (3,))        # BAD: key already consumed
+    return a, b
+
+
+def consume_then_split(key):
+    x = jax.random.bernoulli(key, 0.5)
+    k1, k2 = jax.random.split(key)           # BAD: splitting a spent key
+    return x, k1, k2
+
+
+def split_then_consume(key):
+    ks = jax.random.split(key, 3)
+    y = jax.random.normal(key, (2,))         # BAD: use the derived keys
+    return ks, y
+
+
+def cross_iteration(key, n):
+    total = 0.0
+    for i in range(n):
+        total += jax.random.normal(key, ())  # BAD: same key every turn
+    return total
+
+
+def subscript_reuse(key):
+    ks = jax.random.split(key, 2)
+    a = jax.random.normal(ks[0], ())
+    b = jax.random.normal(ks[0], ())         # BAD: ks[0] consumed twice
+    return a, b

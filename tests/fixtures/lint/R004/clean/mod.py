@@ -1,0 +1,33 @@
+"""Known-clean R004: functional key discipline — split/fold_in before
+every consumption; per-element and per-iteration derivations."""
+
+import jax
+
+
+def split_fanout(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (3,))
+    b = jax.random.uniform(k2, (3,))
+    return a, b
+
+
+def fold_in_stream(key, n):
+    total = 0.0
+    for i in range(n):
+        ki = jax.random.fold_in(key, i)      # fold_in per step: the idiom
+        total += jax.random.normal(ki, ())
+    return total
+
+
+def indexed_keys(key, xs):
+    ks = jax.random.split(key, len(xs))
+    out = []
+    for i, x in enumerate(xs):
+        out.append(jax.random.normal(ks[i], ()))  # varying index: fine
+    return out
+
+
+def vmapped_hop_keys(keys, k):
+    # the engine/oneway.py pattern: split each per-instance key once,
+    # consume only the derivatives
+    return jax.vmap(lambda kk: jax.random.split(kk, k - 1))(keys)

@@ -1,0 +1,42 @@
+"""Known-bad R005: Python control flow on traced values — crashes at
+trace time at best, silently bakes one branch into the dispatch at
+worst."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@jax.jit
+def branch_on_sum(x):
+    s = jnp.sum(x)
+    if s > 0:                    # BAD: tracer in `if`
+        return s
+    return -s
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def loop_on_tracer(x, *, k):
+    while x.sum() > k:           # BAD: tracer in `while`
+        x = x - 1
+    return x
+
+
+def body(carry, inp):
+    assert carry > 0             # BAD: assert-on-tracer inside scan body
+    return carry + inp, inp
+
+
+def run(xs):
+    return lax.scan(body, 0.0, xs)
+
+
+def step(data, state):
+    if state.mean() > 0:         # BAD: traced via module-level jax.jit
+        return state
+    return -state
+
+
+_step_jit = jax.jit(step)

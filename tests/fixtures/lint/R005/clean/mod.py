@@ -1,0 +1,33 @@
+"""Known-clean R005: branching only on static params and structure —
+traced values go through jnp.where/lax.cond."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@functools.partial(jax.jit, static_argnames=("first_turn", "trans_width"))
+def step(data, state, *, first_turn, trans_width):
+    if first_turn:                       # static: part of the compile key
+        state = state + 1
+    if trans_width is not None:          # static width selection
+        data = data[:, :trans_width]
+    if state is None:                    # structural: tracers are never None
+        return data
+    B = state.shape[0]
+    if B > 4:                            # shapes are static under trace
+        data = data[:4]
+    branched = jnp.where(state > 0, state, -state)   # traced branch: where
+    return lax.cond(jnp.all(branched > 0).astype(bool),
+                    lambda s: s, lambda s: -s, branched)
+
+
+def body(carry, inp):
+    new = carry + inp
+    return new, jnp.where(new > 0, new, 0.0)
+
+
+def run(xs):
+    return lax.scan(body, 0.0, xs)

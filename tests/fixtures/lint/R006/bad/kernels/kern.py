@@ -1,0 +1,25 @@
+"""Known-bad R006: all three hygiene violations — unclamped program-id
+addressing, a pallas entry with no jnp ref counterpart (no sibling
+ref.py at all), and a bfloat16 scratch accumulating into an f32 out."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, o_ref, acc):
+    ni = pl.program_id(0)
+    base = ni * 8                                  # pid-derived, unclamped
+    v = pl.load(x_ref, (base,))                    # BAD: past padded extent
+    o_ref[base] = v                                # BAD: unclamped store
+    acc[0, 0] = acc[0, 0] + v
+
+
+def scan_rows(x):                                  # BAD: no ref.py twin
+    return pl.pallas_call(
+        _scan_kernel,
+        out_shape=jax.ShapeDtypeStruct((x.shape[0],), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.bfloat16)],   # BAD: narrow
+        grid=(8,),
+    )(x)

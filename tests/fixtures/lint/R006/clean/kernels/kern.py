@@ -1,0 +1,35 @@
+"""Known-clean R006: the committed kernel discipline — program ids feed
+``pl.when`` predicates (comparisons, never raw indices), any address
+derived from a pid is clamped, the scratch accumulator is as wide as the
+output, and the entry point has a jnp twin in the sibling ref.py."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, o_ref, acc):
+    ni = pl.program_id(0)
+    num_n = pl.num_programs(0)
+
+    @pl.when(ni == 0)                      # comparison: not an index
+    def _init():
+        acc[0, 0] = jnp.float32(0.0)
+
+    lo = jnp.minimum(ni * 8, x_ref.shape[0] - 8)   # clamped address
+    v = pl.load(x_ref, (pl.dslice(lo, 8),))
+    acc[0, 0] = acc[0, 0] + jnp.sum(v)
+
+    @pl.when(ni == num_n - 1)
+    def _flush():
+        o_ref[0] = acc[0, 0]
+
+
+def scan_rows(x):
+    return pl.pallas_call(
+        _scan_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+        grid=(8,),
+    )(x)

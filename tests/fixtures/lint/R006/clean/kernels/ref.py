@@ -1,0 +1,8 @@
+"""jnp reference twin for the clean kernel fixture — the differential
+oracle the parity tests dispatch on."""
+
+import jax.numpy as jnp
+
+
+def scan_rows_ref(x):
+    return jnp.sum(x, keepdims=True)[:1]
