@@ -31,14 +31,14 @@ HEADLINE = ("sequential_s", "batched_s", "speedup", "engine_b1_loop_s",
             "speedup_vs_engine_b1")
 OPTIONAL = ("batched_cold_padded_s", "speedup_vs_cold_padded",
             "speedup_hot_vs_cold", "speedup_sharded_vs_hot")
-BENCHES = ("engine", "maxmarg", "baselines")
+BENCHES = ("engine", "maxmarg", "baselines", "kernels")
 
 NOTES = (
     "Cumulative per-PR headline series folded from BENCH_engine.json / "
-    "BENCH_maxmarg.json / BENCH_baselines.json by benchmarks/"
-    "bench_history.py.  One entry per label (latest fold wins); numbers "
-    "are machine-local wall-clocks, so compare across entries only when "
-    "they were folded on the same machine."
+    "BENCH_maxmarg.json / BENCH_baselines.json / BENCH_kernels.json by "
+    "benchmarks/bench_history.py.  One entry per label (latest fold wins); "
+    "numbers are machine-local wall-clocks, so compare across entries only "
+    "when they were folded on the same machine."
 )
 
 
@@ -74,13 +74,19 @@ def extract(path: str) -> Optional[Dict]:
         if field in report:
             out[field] = report[field]
     out["instances"] = report.get("instances")
+    # the kernels artifact has no B=1 loop, so its parity anchor is its own
+    # parity_clean flag (all three kernel mismatch lists empty)
+    anchor = report.get("parity_b1_ok", report.get("parity_clean"))
     out["parity_ok"] = bool(
-        report.get("parity_b1_ok")
+        anchor
         and not report.get("legacy_oracle_disagreements")
         and not report.get("warm_cold_mismatch_indices")
         and not report.get("hot_cold_mismatch_indices")
         and not report.get("sharded_mismatch_indices")
-        and not report.get("per_node_mismatch_indices"))
+        and not report.get("per_node_mismatch_indices")
+        and not report.get("parity_mismatch_indices")
+        and not report.get("interpret_parity_mismatches")
+        and not report.get("maxmarg_kernel_mismatch_indices"))
     return out
 
 

@@ -199,6 +199,57 @@ def _check_history(path: str, report: dict) -> list:
     return errors
 
 
+KERNELS_SCHEMA = {
+    "notes": str, "tiny": bool, "instances": int, "device": str,
+    "sequential_s": _NUM, "batched_s": _NUM, "speedup": _NUM,
+    "solver": list, "parity_mismatch_indices": list,
+    "interpret_parity_mismatches": list,
+    "maxmarg_kernel_mismatch_indices": list,
+    "all_converged": bool, "parity_clean": bool,
+}
+KERNELS_SOLVER_SCHEMA = {"d": int, "B": int, "N": int, "steps": int,
+                         "stages": int, "baseline_s": _NUM, "tiled_s": _NUM,
+                         "speedup": _NUM, "all_converged": bool,
+                         "parity_mismatch_indices": list}
+KERNELS_DIMS = (2, 16, 64)
+
+
+def _check_kernels(path: str, report: dict) -> list:
+    """BENCH_kernels.json: the tiled-solver speedup series (one entry per
+    d bucket, all three required) and three parity-mismatch lists that are
+    gated empty — interpret-mode Pallas parity, solver decision parity, and
+    the MAXMARG solver_kernel differential.  Wall-clock magnitudes are not
+    gated (smoke sizes time nothing meaningful); emptiness and coverage
+    are."""
+    errors = []
+
+    def expect(obj, field, typ, where):
+        if field not in obj:
+            errors.append(f"{where}: missing key {field!r}")
+        elif not isinstance(obj[field], typ):
+            errors.append(f"{where}: {field!r} has type "
+                          f"{type(obj[field]).__name__}, wanted {typ}")
+
+    for field, typ in KERNELS_SCHEMA.items():
+        expect(report, field, typ, path)
+    solver = report.get("solver", [])
+    for i, entry in enumerate(solver):
+        for field, typ in KERNELS_SOLVER_SCHEMA.items():
+            expect(entry, field, typ, f"{path}[solver][{i}]")
+    dims = sorted(e.get("d") for e in solver if isinstance(e, dict))
+    if dims != sorted(KERNELS_DIMS):
+        errors.append(f"{path}: solver series covers d={dims}, wanted "
+                      f"{sorted(KERNELS_DIMS)}")
+    for flag in ("all_converged", "parity_clean"):
+        if report.get(flag) is not True:
+            errors.append(f"{path}: {flag} is not true")
+    for lst in ("parity_mismatch_indices", "interpret_parity_mismatches",
+                "maxmarg_kernel_mismatch_indices"):
+        if report.get(lst):
+            errors.append(f"{path}: {lst} is non-empty: {report[lst]}")
+    return errors
+
+
 def _check_service(path: str, report: dict) -> list:
     errors = []
 
@@ -268,6 +319,8 @@ def check(path: str) -> list:
         return _check_history(path, report)
     if "service" in os.path.basename(path):
         return _check_service(path, report)
+    if "kernels" in os.path.basename(path):
+        return _check_kernels(path, report)
     errors = []
     is_baselines = "baselines" in os.path.basename(path)
     is_maxmarg = "maxmarg" in os.path.basename(path)

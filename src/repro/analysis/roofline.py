@@ -128,11 +128,16 @@ def analyze_compiled(name: str, compiled, *, chips: int,
     structural = analyze_hlo(hlo)
     flops = float(structural["flops"])
     byts = float(structural["bytes"])
+    # cost_analysis() is a dict on newer jax, a per-computation list of
+    # dicts on older versions — normalize before reading
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
     colls = {"bytes_by_op": structural["bytes_by_op"],
              "counts": structural["counts"],
              "total_bytes": int(structural["collective_bytes"]),
              # naive (loop-body-once) numbers kept for reference
-             "xla_flops_once": float(compiled.cost_analysis().get("flops", 0.0))}
+             "xla_flops_once": float((ca or {}).get("flops", 0.0))}
     cbytes = float(structural["collective_bytes"])
 
     compute_s = flops / PEAK_FLOPS_BF16

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as _kernel_ops
+
 
 # ---------------------------------------------------------------------------
 # Thresholds (predict +1 iff x < t)  — paper Lemma 3.1
@@ -187,7 +189,8 @@ WARM_OFFSET = 1024.0
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "stages", "warm_steps",
-                                             "warm_offset", "return_gate"))
+                                             "warm_offset", "return_gate",
+                                             "kernel"))
 def _svm_solve_batch(
     X: jnp.ndarray,                # (B, N, d) f32; rows with label 0 are padding
     y: jnp.ndarray,                # (B, N) f32 in {+1, -1, 0}
@@ -200,6 +203,7 @@ def _svm_solve_batch(
     warm_steps: int = WARM_STEPS,
     warm_offset: float = WARM_OFFSET,
     return_gate: bool = False,
+    kernel: Optional[bool] = None,
 ):
     """Batched hard-margin-annealed Pegasos: B independent fits in lock-step.
 
@@ -240,10 +244,23 @@ def _svm_solve_batch(
     classified the fit set cleanly (all-False on the cold entry) — so
     callers instrumenting latch behaviour read the solver's own gate
     instead of recomputing the margin scan.
+
+    ``kernel`` (static) selects the solver's inner loop: ``True`` routes
+    every λ stage through ``kernels.ops.pegasos_stage`` — the tiled Pallas
+    kernel on TPU, its dot-contraction jnp twin elsewhere — with the
+    first-0-error latch fused into the stage launch; ``False`` keeps the
+    classic d-unrolled vmapped-XLA loop below, bit-identical to before
+    this flag existed.  ``None`` (default) resolves to the backend: Pallas
+    kernels are TPU-default, so the kernel path is chosen exactly when
+    running on TPU.  The two paths are two float approximations of the
+    same transcript-determined optimum — decision-level agreement on the
+    tested grids is enforced by the kernel-parity gates, not bit equality
+    (same contract as warm vs cold).
     """
     B, N, d = X.shape
     valid = y != 0.0
     nv = jnp.maximum(jnp.sum(valid, axis=1), 1).astype(X.dtype)  # (B,)
+    use_kernel = _kernel_ops._on_tpu() if kernel is None else bool(kernel)
 
     # the d-contractions are spelled as broadcast multiply-adds: XLA:CPU
     # lowers the K=d (=2..10) dot through a generic GEMM path that is ~5×
@@ -295,9 +312,20 @@ def _svm_solve_batch(
             ok0 = ok0 & warm_ok
         gate = ok0
         lam_p = jnp.full((B,), lam0, X.dtype)
-        w_p, b_p = pegasos_stage(w0.astype(X.dtype), b0.astype(X.dtype),
-                                 lam_p, warm_steps, jnp.float32(warm_offset))
-        ok_p = ok0 & (margins_min(w_p, b_p) > 0.0)
+        if use_kernel:
+            # polish runs un-latched (found=False in): the gate below is
+            # the composition ok0 & (polished margin > 0), not the
+            # kernel's own latch — same formula as the classic branch
+            w_p, b_p, mm_p, _f, _wb, _bb = _kernel_ops.pegasos_stage(
+                X, y, nv, w0.astype(X.dtype), b0.astype(X.dtype), lam_p,
+                jnp.zeros((B,), bool), zeros_w, zeros_b,
+                nsteps=warm_steps, t0=float(warm_offset))
+            ok_p = ok0 & (mm_p > 0.0)
+        else:
+            w_p, b_p = pegasos_stage(w0.astype(X.dtype), b0.astype(X.dtype),
+                                     lam_p, warm_steps,
+                                     jnp.float32(warm_offset))
+            ok_p = ok0 & (margins_min(w_p, b_p) > 0.0)
         found0 = ok_p
         w_best0 = jnp.where(ok_p[:, None], w_p, zeros_w)
         b_best0 = jnp.where(ok_p, b_p, zeros_b)
@@ -315,7 +343,13 @@ def _svm_solve_batch(
     def stage(carry):
         s, w, b, w_best, b_best, found = carry
         lam_s = lam0 * 0.1 ** s.astype(X.dtype)
-        w, b = pegasos_stage(w, b, jnp.full((B,), lam_s, X.dtype), steps)
+        lam_v = jnp.full((B,), lam_s, X.dtype)
+        if use_kernel:
+            # whole stage + first-0-error latch in one fused launch
+            w, b, _mm, found, w_best, b_best = _kernel_ops.pegasos_stage(
+                X, y, nv, w, b, lam_v, found, w_best, b_best, nsteps=steps)
+            return (s + 1, w, b, w_best, b_best, found)
+        w, b = pegasos_stage(w, b, lam_v, steps)
         ok = margins_min(w, b) > 0.0
         take = ok & ~found
         w_best = jnp.where(take[:, None], w, w_best)
@@ -344,17 +378,20 @@ def anneal_hard_margin(
     lam: float = 1e-3,
     steps: int = 2000,
     stages: int = 3,
+    kernel: Optional[bool] = None,
 ) -> Tuple[np.ndarray, float, bool]:
     """Single-instance entry to the warm-started annealed solver (B=1).
 
     Returns ``(w, b, converged)`` in float64/bool host types.  This *is* the
     batched engine's per-turn fit at B=1 — the engine's MAXMARG selector and
     the host API share one solver, so batched-vs-sequential parity is a
-    property of the program, not of tolerances.
+    property of the program, not of tolerances.  ``kernel`` follows
+    ``_svm_solve_batch``'s solver-path contract (None = TPU-default).
     """
     Xj = jnp.asarray(np.atleast_2d(X), dtype=jnp.float32)[None]
     yj = jnp.asarray(y, dtype=jnp.float32)[None]
-    w, b, ok = _svm_solve_batch(Xj, yj, jnp.float32(lam), steps, stages)
+    w, b, ok = _svm_solve_batch(Xj, yj, jnp.float32(lam), steps, stages,
+                                kernel=kernel)
     return (np.asarray(w[0], dtype=np.float64), float(b[0]), bool(ok[0]))
 
 

@@ -114,6 +114,36 @@ def data_mixed_hardness(n_per_node: int = 100, k: int = 4, seed: int = 0,
     return shards
 
 
+def data_highd(n_per_node: int = 200, k: int = 2, d: int = 16, seed: int = 0,
+               margin: float = 0.2, scale: float = 1.0) -> List[Shard]:
+    """Separable Gaussians in R^d with a controllable geometric margin —
+    the d ≫ 2 regime the tiled Pegasos solver targets (d ∈ {16, 64, 256}
+    in the kernel bench; any d ≥ 2 works).
+
+    Points are iid N(0, scale²·I) projected out of a ``margin``-wide slab
+    around a random unit separator w*: each point is shifted along ±w* so
+    its distance to the hyperplane is at least ``margin`` on its own side.
+    Labels are the side of w*.  The margin is *geometric* (units of the
+    feature space), so ``margin → 0`` produces near-degenerate instances
+    whose support set is decided at float precision — the knob the
+    warm-latch adversarial tests turn.  Shards split round-robin so every
+    node sees both classes."""
+    if d < 2:
+        raise ValueError("data_highd needs d >= 2")
+    rng = np.random.default_rng(seed)
+    wstar = rng.standard_normal(d)
+    wstar /= np.linalg.norm(wstar)
+    n = n_per_node * k
+    X = rng.normal(0.0, scale, size=(n, d))
+    proj = X @ wstar
+    y = np.where(proj >= 0.0, 1, -1).astype(np.int32)
+    # push each point out of the slab: along-w* distance becomes
+    # sign(proj)·(margin + |proj|) ≥ margin, leaving the orthogonal
+    # complement untouched (labels unchanged by construction)
+    X = X + np.outer(y * margin, wstar)
+    return [(X[i::k], y[i::k]) for i in range(k)]
+
+
 def lift_dim(shards: List[Shard], d: int, seed: int = 7, noise: float = 0.05) -> List[Shard]:
     """Embed 2-D shards into R^d (Table 3's high-dimensional variant): the
     informative structure stays in the first two coordinates, the remaining

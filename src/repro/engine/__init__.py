@@ -54,8 +54,8 @@ def run_sweep(instances, **kwargs):
     _FIT = ("steps", "stages", "lam")
     _ALLOWED = {
         "maxmarg": ("eps", "max_epochs", "max_support", "warm", "per_node",
-                    "compact", "fused_kernel", "mesh", "donate",
-                    "overlap", "stats") + _FIT,
+                    "compact", "fused_kernel", "solver_kernel", "mesh",
+                    "donate", "overlap", "stats") + _FIT,
         "median": ("eps", "n_angles", "max_epochs", "cut_kernel",
                    "extremes_kernel", "compact", "mesh", "donate",
                    "overlap", "stats"),

@@ -132,6 +132,7 @@ def step(
     warm: bool = False,
     per_node: bool = True,
     fused_kernel: bool = False,
+    solver_kernel: Optional[bool] = None,
 ) -> MaxMargState:
     """Advance every active instance by one MAXMARG turn (pure, jittable,
     shape-stable — usable under jit/while_loop).
@@ -147,7 +148,10 @@ def step(
     post-refit margin scan through the fused Pallas support/violation kernel
     (``kernels.support_margin.maxmarg_turn_scan_batched``, the TPU artifact)
     instead of its jnp reference — both produce identical integer decisions
-    (bit-for-bit tested)."""
+    (bit-for-bit tested).  ``solver_kernel`` (static) selects the *refit*
+    path the same way: the tiled Pegasos stage kernel
+    (``kernels.pegasos``, jnp twin off-TPU) vs the classic d-unrolled
+    loop; ``None`` defers to ``_svm_solve_batch``'s TPU-default."""
     B = state.done.shape[0]
     n_max, d = data.X.shape[2], data.X.shape[3]
     ci = state.turn % k                                # (B,) per-instance
@@ -184,10 +188,11 @@ def step(
         # observability only, never a protocol decision
         w, b, fit_ok, clean0 = _svm_solve_batch(
             K, yKf, jnp.float32(lam0), steps, stages,
-            w0=w0, b0=b0, warm_ok=wok, return_gate=True)
+            w0=w0, b0=b0, warm_ok=wok, return_gate=True,
+            kernel=solver_kernel)
     else:
         w, b, fit_ok = _svm_solve_batch(K, yKf, jnp.float32(lam0), steps,
-                                        stages)
+                                        stages, kernel=solver_kernel)
         clean0 = jnp.zeros_like(state.done)
 
     # -- 2-4 scans: one fused pass over the proposal --------------------------
@@ -329,7 +334,7 @@ def step(
 
 @functools.partial(jax.jit, static_argnames=(
     "k", "max_turns", "max_support", "steps", "stages", "warm", "per_node",
-    "fused_kernel"))
+    "fused_kernel", "solver_kernel"))
 def run_compiled(
     data: EngineData,
     state0: MaxMargState,
@@ -343,6 +348,7 @@ def run_compiled(
     warm: bool = False,
     per_node: bool = True,
     fused_kernel: bool = False,
+    solver_kernel: Optional[bool] = None,
 ) -> MaxMargState:
     """The whole MAXMARG sweep as one device computation: while_loop over
     ``step`` until every instance terminates or the turn budget runs out.
@@ -357,13 +363,13 @@ def run_compiled(
         return step(data, s, k=k, max_support=max_support, steps=steps,
                     stages=stages, lam0=lam0, warm=warm,
                     per_node=per_node and warm,
-                    fused_kernel=fused_kernel)
+                    fused_kernel=fused_kernel, solver_kernel=solver_kernel)
 
     return lax.while_loop(cond, body, state0)
 
 
 _STEP_STATICS = ("k", "max_support", "steps", "stages", "trans_width",
-                 "warm", "per_node", "fused_kernel")
+                 "warm", "per_node", "fused_kernel", "solver_kernel")
 
 _step_jit = jax.jit(step, static_argnames=_STEP_STATICS)
 # the donated variant: the per-turn output reuses the input state's buffers
@@ -400,6 +406,7 @@ def _hot_turn_impl(
     warm: bool,
     per_node: bool,
     fused_kernel: bool,
+    solver_kernel: Optional[bool] = None,
 ) -> MaxMargState:
     """One compacted turn as a single dispatch: gather the active instances,
     advance them by one ``step`` at the compacted transcript width, scatter
@@ -410,7 +417,7 @@ def _hot_turn_impl(
     step_fn = functools.partial(
         step, k=k, max_support=max_support, steps=steps, stages=stages,
         lam0=lam0, trans_width=trans_width, warm=warm, per_node=per_node,
-        fused_kernel=fused_kernel)
+        fused_kernel=fused_kernel, solver_kernel=solver_kernel)
     return hotloop.gathered_turn(step_fn, _pad_fix, data, state, idx, n_act)
 
 
@@ -433,14 +440,15 @@ def _sharded_dispatches(mesh, dspec, sspec, opts, donate):
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    k, max_support, steps, stages, lam0, fused_kernel = opts
+    k, max_support, steps, stages, lam0, fused_kernel, solver_kernel = opts
 
     def full(data, state, *, trans_width, warm, per_node):
         def body(d, s):
             return step(d, s, k=k, max_support=max_support, steps=steps,
                         stages=stages, lam0=lam0, trans_width=trans_width,
                         warm=warm, per_node=per_node,
-                        fused_kernel=fused_kernel)
+                        fused_kernel=fused_kernel,
+                        solver_kernel=solver_kernel)
         return shard_map(body, mesh=mesh, in_specs=(dspec, sspec),
                          out_specs=sspec, check_rep=False)(data, state)
 
@@ -452,7 +460,8 @@ def _sharded_dispatches(mesh, dspec, sspec, opts, donate):
             step_fn = functools.partial(
                 step, k=k, max_support=max_support, steps=steps,
                 stages=stages, lam0=lam0, trans_width=trans_width,
-                warm=warm, per_node=per_node, fused_kernel=fused_kernel)
+                warm=warm, per_node=per_node, fused_kernel=fused_kernel,
+                solver_kernel=solver_kernel)
             return hotloop.gathered_turn(step_fn, _pad_fix, d, s, ix, na[0])
         return shard_map(body, mesh=mesh,
                          in_specs=(dspec, sspec, P("data"), P("data")),
@@ -501,6 +510,7 @@ def run_hot(
     per_node: bool = True,
     compact: bool = True,
     fused_kernel: bool = False,
+    solver_kernel: Optional[bool] = None,
     mesh: Optional[jax.sharding.Mesh] = None,
     donate: Optional[bool] = None,
     overlap: Optional[bool] = None,
@@ -558,7 +568,8 @@ def run_hot(
     # per-dispatch
     track = per_node and warm
     opts = dict(k=k, max_support=max_support, steps=steps, stages=stages,
-                lam0=lam0, per_node=track, fused_kernel=fused_kernel)
+                lam0=lam0, per_node=track, fused_kernel=fused_kernel,
+                solver_kernel=solver_kernel)
     width_growth = max(max_support, VIOL_SHIP * (k - 1))
 
     def host_view(s, ci):
@@ -577,7 +588,8 @@ def run_hot(
         state = device_put_sharded(state, mesh)
         full_j, sub_j = _sharded_dispatches(
             mesh, shard_specs(data), shard_specs(state),
-            (k, max_support, steps, stages, lam0, fused_kernel), donate)
+            (k, max_support, steps, stages, lam0, fused_kernel,
+             solver_kernel), donate)
 
         def dispatch_full(s, *, t, width, use_warm):
             return full_j(data, s, trans_width=width, warm=use_warm,
@@ -630,6 +642,7 @@ def run_instances(
     per_node: bool = True,
     compact: bool = True,
     fused_kernel: Optional[bool] = None,
+    solver_kernel: Optional[bool] = None,
     mesh: Optional[jax.sharding.Mesh] = None,
     donate: Optional[bool] = None,
     overlap: Optional[bool] = None,
@@ -649,7 +662,9 @@ def run_instances(
     proposal — see the module docstring and ``run_hot``).
     ``fused_kernel`` routes the per-turn margin scans through
     the Pallas kernel (default: on TPU only, like the MEDIAN selector's
-    ``cut_kernel``).  ``mesh`` shards the hot path over a 1-D ("data",)
+    ``cut_kernel``); ``solver_kernel`` does the same for the refit solver
+    itself — the tiled Pegasos stage kernel with its fused first-0-error
+    latch (jnp dot-contraction twin off-TPU; same TPU-only default).  ``mesh`` shards the hot path over a 1-D ("data",)
     device mesh (requires ``compact=True``); ``donate``/``overlap`` opt the
     per-turn dispatches into buffer donation and the double-buffered host
     loop (mesh default: both on).
@@ -665,6 +680,8 @@ def run_instances(
                      for inst in instances]
     if fused_kernel is None:
         fused_kernel = dataplane.use_pallas_default()
+    if solver_kernel is None:
+        solver_kernel = dataplane.use_pallas_default()
     data, state0, k, _cap = pack_instances_maxmarg(
         instances, max_epochs=max_epochs, max_support=max_support, mesh=mesh)
     if warm or compact:
@@ -672,13 +689,14 @@ def run_instances(
                         max_support=max_support, steps=steps, stages=stages,
                         lam0=lam, warm=warm, per_node=per_node,
                         compact=compact, fused_kernel=fused_kernel,
-                        mesh=mesh, donate=donate, overlap=overlap,
-                        stats=stats)
+                        solver_kernel=solver_kernel, mesh=mesh,
+                        donate=donate, overlap=overlap, stats=stats)
     else:
         final = run_compiled(data, state0, k=k, max_turns=k * max_epochs,
                              max_support=max_support, steps=steps,
                              stages=stages, lam0=lam, per_node=per_node,
-                             fused_kernel=fused_kernel)
+                             fused_kernel=fused_kernel,
+                             solver_kernel=solver_kernel)
 
     converged = np.asarray(final.converged)
     epochs = np.asarray(final.epochs)

@@ -120,6 +120,10 @@ class PoolConfig:
     svm_steps: int = 2000
     svm_stages: int = 3
     lam0: float = 1e-3
+    # MAXMARG refit solver path: None = TPU-default (tiled Pegasos kernel
+    # on TPU, classic d-unrolled loop elsewhere) — resolved once at pool
+    # construction so admission keys stay pinned across the pool's life
+    solver_kernel: Optional[bool] = None
     admit_block: int = 8
     corrupt_block: int = 4
     retry_budget: int = 3
@@ -314,6 +318,11 @@ class SessionPool:
         self.cfg = config
         self.schedule = schedule if schedule is not None else F.FaultSchedule()
         self.stats: Dict[str, Any] = stats if stats is not None else {}
+        # resolved once: the solver path is part of the pinned dispatch key
+        from repro.engine import dataplane
+        self._solver_kernel = (dataplane.use_pallas_default()
+                               if config.solver_kernel is None
+                               else bool(config.solver_kernel))
         W, k, n_pad, d = config.slots, config.k, config.n_pad, config.d
 
         if config.selector == "median":
@@ -483,7 +492,8 @@ class SessionPool:
                 self.data, self.state, jnp.asarray(idx), jnp.int32(n_act),
                 k=cfg.k, max_support=cfg.max_support, steps=cfg.svm_steps,
                 stages=cfg.svm_stages, lam0=cfg.lam0, trans_width=width,
-                warm=False, per_node=False, fused_kernel=False)
+                warm=False, per_node=False, fused_kernel=False,
+                solver_kernel=self._solver_kernel)
         self.stats["dispatches"] += 1
 
     def _corrupt(self, rows: np.ndarray, kinds: np.ndarray):

@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
-Five kernels, each with the ``<name>.py`` (pl.pallas_call + BlockSpec) /
+Six kernels, each with the ``<name>.py`` (pl.pallas_call + BlockSpec) /
 ``ops.py`` (jit'd padding + dispatch wrapper) / ``ref.py`` (pure-jnp oracle)
 layout:
 
@@ -12,6 +12,10 @@ layout:
   median_cut       the MEDIAN selector's (B, m, n) weighted-median cut scan
                    (running risk counts down the direction axis, integer
                    side counts per cut)
+  pegasos          the MAXMARG refit solver: one whole Pegasos λ stage per
+                   launch (hinge gradient accumulated across N-tiles in f32
+                   VMEM scratch, first-0-error latch fused), block shapes
+                   from the committed autotune cache
 
 All are validated on CPU via ``interpret=True`` against the oracles
 (tests/test_kernels.py); the BlockSpec tilings target TPU v5e VMEM/MXU.
@@ -21,5 +25,6 @@ from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.mamba import mamba_scan  # noqa: F401
 from repro.kernels.median_cut import median_cut_scores_batched  # noqa: F401
+from repro.kernels.pegasos import pegasos_stage_batched  # noqa: F401
 from repro.kernels.rwkv6 import rwkv6_chunked  # noqa: F401
 from repro.kernels.support_margin import threshold_ranges, uncertain_mask  # noqa: F401

@@ -18,8 +18,11 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import mamba as _mamba
 from repro.kernels import median_cut as _mc
+from repro.kernels import pegasos as _pg
 from repro.kernels import rwkv6 as _rwkv6
+from repro.kernels import ref as _ref
 from repro.kernels import support_margin as _sm
+from repro.analysis import autotune as _autotune
 
 
 def _on_tpu() -> bool:
@@ -275,3 +278,73 @@ def support_uncertain_batch(
     out = _sm.uncertain_mask_batched(Vp, okp, lop, hip, Xp, yp, block_m=bm,
                                      block_n=bn, interpret=interpret)
     return out[:, :n] > 0.5
+
+
+# ---------------------------------------------------------------------------
+# tiled Pegasos solver stage (MAXMARG refit inner loop)
+# ---------------------------------------------------------------------------
+
+def pegasos_stage(
+    X: jnp.ndarray,                # (B, N, d) f32; label-0 rows = padding
+    y: jnp.ndarray,                # (B, N) f32 in {+1, -1, 0}
+    nv: jnp.ndarray,               # (B,) f32 valid row counts (≥ 1)
+    w: jnp.ndarray,                # (B, d)
+    b: jnp.ndarray,                # (B,)
+    lam: jnp.ndarray,              # (B,) per-instance stage λ
+    found: jnp.ndarray,            # (B,) bool first-0-error latch state
+    w_best: jnp.ndarray,           # (B, d)
+    b_best: jnp.ndarray,           # (B,)
+    *,
+    nsteps: int,
+    t0: float = 0.0,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    block_b: Optional[int] = None,
+    block_n: Optional[int] = None,
+    unroll: Optional[int] = None,
+) -> Tuple[jnp.ndarray, ...]:
+    """One fused Pegasos λ stage + first-0-error latch behind one call.
+
+    The solver's single dispatch point (``_svm_solve_batch(kernel=True)``):
+    Pallas tiled kernel on TPU (auto-interpret elsewhere, like every other
+    wrapper here), dot-contraction jnp twin (``ref.pegasos_stage_batch_ref``)
+    when ``use_pallas`` resolves False — the CPU fast path for d ≫ 2.
+    Block shapes / unroll default from the committed autotune cache
+    (``analysis.autotune.lookup_tile``) with its deterministic fallback.
+    Returns ``(w, b, mmin, found, w_best, b_best)``; ``mmin`` follows the
+    kernel mask convention (``pegasos.BIG`` where no valid rows).
+    """
+    B, N, d = X.shape
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if block_b is None or block_n is None or unroll is None:
+        kind = jax.devices()[0].device_kind
+        cfg = _autotune.lookup_tile(kind, B, N, d)
+        block_b = cfg.block_b if block_b is None else block_b
+        block_n = cfg.block_n if block_n is None else block_n
+        unroll = cfg.unroll if unroll is None else unroll
+
+    if not use_pallas:
+        return _ref.pegasos_stage_batch_ref(
+            X, y, nv, w, b, lam, found, w_best, b_best,
+            nsteps=nsteps, t0=t0, unroll=unroll)
+
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    bb = min(block_b, max(B, 1))
+    bn = min(block_n, max(N, 8))
+    # pads are inert by construction: label-0 rows never violate, zero d
+    # columns stay zero through the update, pad instances get nv=1 / λ=1
+    Xp = _pad_to(_pad_to(_pad_to(X, 0, bb), 1, bn), 2, _LANE)
+    yp = _pad_to(y.astype(jnp.float32), 0, bb)
+    yp = _pad_to(yp, 1, bn)
+    nvp = _pad_to(nv.astype(jnp.float32), 0, bb, value=1.0)
+    lamp = _pad_to(lam.astype(jnp.float32), 0, bb, value=1.0)
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), 0, bb), 1, _LANE)
+    bp = _pad_to(b.astype(jnp.float32), 0, bb)
+    fp = _pad_to(found.astype(jnp.int32), 0, bb)
+    wbp = _pad_to(_pad_to(w_best.astype(jnp.float32), 0, bb), 1, _LANE)
+    bbp = _pad_to(b_best.astype(jnp.float32), 0, bb)
+    w_o, b_o, mm_o, f_o, wb_o, bb_o = _pg.pegasos_stage_batched(
+        Xp, yp, nvp, wp, bp, lamp, fp, wbp, bbp, nsteps=nsteps, t0=t0,
+        block_b=bb, block_n=bn, interpret=interpret)
+    return (w_o[:B, :d], b_o[:B], mm_o[:B], f_o[:B] != 0,
+            wb_o[:B, :d], bb_o[:B])

@@ -1,0 +1,189 @@
+"""Tiled Pallas kernel for the batched Pegasos λ-stage (the MAXMARG refit).
+
+``core.classifiers._svm_solve_batch`` runs every hard-margin refit as plain
+vmapped XLA Pegasos over ``(B, N, d)``: one ``fori_loop`` step per gradient
+pass, with the d-contraction spelled as d broadcast multiply-adds (the fast
+form at the paper's d = 2..10, but *solver-bound* at d ≫ 2 — ROADMAP's TPU
+kernel item).  This kernel is the tiled deployment artifact for that loop:
+
+* grid ``(B/block_b, nsteps+1, N/block_n)`` — instances in parallel blocks,
+  the Pegasos step axis sequential, N-tiles innermost;
+* the hinge-gradient reduction is accumulated across N-tiles in an f32 VMEM
+  scratch (``g_s``/``gb_s``); ``d`` stays fully resident per block, so each
+  step's two contractions (margins ``X·w``, gradient ``violᵀ·X``) are real
+  MXU matmuls instead of d strided passes;
+* the separator itself lives in VMEM scratch across the whole stage — one
+  kernel launch covers a *whole λ stage* (nsteps updates + the trailing
+  margin scan), not one ``fori_loop`` step per dispatch;
+* the first-0-error latch of ``_svm_solve_batch`` is fused: the final grid
+  step folds the stage's min-margin scan into the ``found``/``w_best``/
+  ``b_best`` latch update, so the stage-annealing caller reads latched
+  results straight out of the launch;
+* masked-pad path: label-0 rows contribute no hinge violations and the
+  gradient normalizes by the caller-supplied per-instance valid count
+  ``nv`` — compacted hot-loop fills and tile padding ride the same mask.
+
+Block shapes come from the committed tuning cache
+(``kernels/tuning_cache.json`` via ``analysis.autotune.lookup_tile``); the
+``ops.pegasos_stage`` wrapper pads/dispatches and falls back to the
+dot-contraction jnp twin (``ref.pegasos_stage_batch_ref``) off-TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 1e30  # mask constant; jnp.inf is avoided inside kernels (see support_margin)
+
+
+def _pegasos_stage_kernel(
+    x_ref, y_ref, nv_ref, w0_ref, b0_ref, lam_ref, found_ref, wb_ref, bb_ref,
+    w_out, b_out, mmin_out, found_out, wbest_out, bbest_out,
+    w_s, b_s, g_s, gb_s, mm_s,
+    *, nsteps: int, num_n_blocks: int, t0: float,
+):
+    """One λ stage for a ``block_b`` slab of instances.
+
+    Grid ``(bi, s, ni)``: ``s < nsteps`` are Pegasos steps (N-tiles
+    accumulate the hinge gradient, the last tile applies the update +
+    ball projection), ``s == nsteps`` is the stage's min-margin scan whose
+    last tile emits the latched outputs.  ``program_id`` values are only
+    ever *compared* (`pl.when` step/tile selection), never used as
+    addresses — block addressing is entirely BlockSpec-driven.
+    """
+    s = pl.program_id(1)
+    ni = pl.program_id(2)
+
+    @pl.when((s == 0) & (ni == 0))
+    def _load():
+        w_s[...] = w0_ref[...].astype(jnp.float32)
+        b_s[...] = b0_ref[...].astype(jnp.float32)
+
+    @pl.when(ni == 0)
+    def _zero():
+        g_s[...] = jnp.zeros_like(g_s)
+        gb_s[...] = jnp.zeros_like(gb_s)
+        mm_s[...] = jnp.full_like(mm_s, BIG)
+
+    X = x_ref[...].astype(jnp.float32)                   # (bb, bn, d)
+    yv = y_ref[...].astype(jnp.float32)                  # (bb, bn)
+    valid = yv != 0.0
+    w = w_s[...]                                         # (bb, d)
+    # margins of the current iterate on this tile — MXU batched matvec
+    m = yv * (jnp.einsum("bnd,bd->bn", X, w,
+                         preferred_element_type=jnp.float32)
+              + b_s[...][:, None])
+
+    @pl.when(s < nsteps)
+    def _grad():
+        viol = ((m < 1.0) & valid).astype(jnp.float32)
+        vy = viol * yv
+        g_s[...] += jnp.einsum("bn,bnd->bd", vy, X,
+                               preferred_element_type=jnp.float32)
+        gb_s[...] += jnp.sum(vy, axis=1)
+
+    @pl.when(s == nsteps)
+    def _margin():
+        mm_s[...] = jnp.minimum(mm_s[...],
+                                jnp.min(jnp.where(valid, m, BIG), axis=1))
+
+    @pl.when((s < nsteps) & (ni == num_n_blocks - 1))
+    def _update():
+        lam = lam_ref[...].astype(jnp.float32)           # (bb,)
+        nv = nv_ref[...].astype(jnp.float32)
+        eta = 1.0 / (lam * (s.astype(jnp.float32) + 2.0 + t0))
+        gw = lam[:, None] * w_s[...] - g_s[...] / nv[:, None]
+        gb = -gb_s[...] / nv
+        w2 = w_s[...] - eta[:, None] * gw
+        b2 = b_s[...] - eta * gb
+        nrm = jnp.sqrt(jnp.sum(w2 * w2, axis=1))
+        scale = jnp.minimum(1.0, (1.0 / jnp.sqrt(lam)) / (nrm + 1e-12))
+        w_s[...] = w2 * scale[:, None]
+        b_s[...] = b2 * scale
+
+    @pl.when((s == nsteps) & (ni == num_n_blocks - 1))
+    def _emit():
+        mm = mm_s[...]
+        ok = mm > 0.0                                    # BIG ⇒ no valid rows
+        found_in = found_ref[...] != 0
+        take = ok & ~found_in
+        w_out[...] = w_s[...]
+        b_out[...] = b_s[...]
+        mmin_out[...] = mm
+        found_out[...] = (found_in | ok).astype(jnp.int32)
+        wbest_out[...] = jnp.where(take[:, None], w_s[...],
+                                   wb_ref[...].astype(jnp.float32))
+        bbest_out[...] = jnp.where(take, b_s[...],
+                                   bb_ref[...].astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("nsteps", "t0", "block_b",
+                                             "block_n", "interpret"))
+def pegasos_stage_batched(
+    X: jnp.ndarray,                # (B, N, d) f32; label-0 rows are padding
+    y: jnp.ndarray,                # (B, N) f32 in {+1, -1, 0}
+    nv: jnp.ndarray,               # (B,) f32 — per-instance valid row count
+    w: jnp.ndarray,                # (B, d) stage-entry separator
+    b: jnp.ndarray,                # (B,)
+    lam: jnp.ndarray,              # (B,) per-instance stage λ
+    found: jnp.ndarray,            # (B,) i32 — latch state in
+    w_best: jnp.ndarray,           # (B, d) latched separator in
+    b_best: jnp.ndarray,           # (B,)
+    *,
+    nsteps: int,
+    t0: float = 0.0,
+    block_b: int = 8,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """One fused Pegasos λ stage + first-0-error latch as one pallas_call.
+
+    Shapes must tile evenly (the ``ops.pegasos_stage`` wrapper pads).
+    Returns ``(w, b, mmin, found, w_best, b_best)``; ``mmin`` uses the
+    kernel mask constant ``BIG`` (not inf) for instances with no valid
+    rows — callers that need the inf convention recompute margins
+    themselves (``_svm_solve_batch`` does, for canonicalization only).
+    """
+    B, N, d = X.shape
+    block_b = min(block_b, B)
+    block_n = min(block_n, N)
+    assert B % block_b == 0 and N % block_n == 0, (B, block_b, N, block_n)
+    nb, nn = B // block_b, N // block_n
+
+    kernel = functools.partial(_pegasos_stage_kernel, nsteps=nsteps,
+                               num_n_blocks=nn, t0=t0)
+    vec = pl.BlockSpec((block_b,), lambda bi, s, ni: (bi,))
+    mat = pl.BlockSpec((block_b, d), lambda bi, s, ni: (bi, 0))
+    w_o, b_o, mm_o, f_o, wb_o, bb_o = pl.pallas_call(
+        kernel,
+        grid=(nb, nsteps + 1, nn),
+        in_specs=[
+            pl.BlockSpec((block_b, block_n, d),
+                         lambda bi, s, ni: (bi, ni, 0)),
+            pl.BlockSpec((block_b, block_n), lambda bi, s, ni: (bi, ni)),
+            vec, mat, vec, vec, vec, mat, vec,
+        ],
+        out_specs=[mat, vec, vec, vec, mat, vec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, d), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B, d), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b, d), jnp.float32),       # w iterate
+            pltpu.VMEM((block_b,), jnp.float32),         # b iterate
+            pltpu.VMEM((block_b, d), jnp.float32),       # hinge-gradient acc
+            pltpu.VMEM((block_b,), jnp.float32),         # offset-gradient acc
+            pltpu.VMEM((block_b,), jnp.float32),         # running min margin
+        ],
+        interpret=interpret,
+    )(X, y, nv, w, b, lam, found, w_best, b_best)
+    return w_o, b_o, mm_o, f_o, wb_o, bb_o

@@ -288,3 +288,59 @@ def maxmarg_turn_batch_ref(w, b, K, yK, X, y, *, rtol: float = 0.15,
     return jax.vmap(functools.partial(
         maxmarg_turn_ref, rtol=rtol, max_support=max_support,
         viol_ship=viol_ship))(w, b, K, yK, X, y)
+
+
+@functools.partial(jax.jit, static_argnames=("nsteps", "t0", "unroll"))
+def pegasos_stage_batch_ref(
+    X: jnp.ndarray,                # (B, N, d) f32; label-0 rows are padding
+    y: jnp.ndarray,                # (B, N) f32 in {+1, -1, 0}
+    nv: jnp.ndarray,               # (B,) f32 valid row counts
+    w: jnp.ndarray,                # (B, d)
+    b: jnp.ndarray,                # (B,)
+    lam: jnp.ndarray,              # (B,)
+    found: jnp.ndarray,            # (B,) bool first-0-error latch state
+    w_best: jnp.ndarray,           # (B, d)
+    b_best: jnp.ndarray,           # (B,)
+    *,
+    nsteps: int,
+    t0: float = 0.0,
+    unroll: int = 2,
+):
+    """One fused Pegasos λ stage + first-0-error latch: the jnp twin of
+    ``kernels.pegasos.pegasos_stage_batched`` and the solver's CPU fast
+    path (``_svm_solve_batch(kernel=True)`` off-TPU).
+
+    Same op sequence as the kernel body — einsum d-contractions (real
+    GEMMs, unlike the classic solver's per-d broadcast unroll, which is
+    what makes this the d ≫ 2 fast path even on CPU), hinge gradient
+    normalized by ``nv``, L2-ball projection, and a trailing min-margin
+    scan folded into the latch.  ``mmin`` uses the kernel mask constant
+    ``pegasos.BIG`` (not inf) for instances with no valid rows.  ``unroll``
+    is the CPU tuning knob from the autotune cache; it never changes the
+    math, only the fori_loop unrolling.
+    """
+    big = 1e30
+    valid = y != 0.0
+
+    def step(i, carry):
+        wi, bi = carry
+        m = y * (jnp.einsum("bnd,bd->bn", X, wi) + bi[:, None])
+        vy = ((m < 1.0) & valid).astype(X.dtype) * y
+        g = jnp.einsum("bn,bnd->bd", vy, X)
+        gb = -jnp.sum(vy, axis=1) / nv
+        eta = 1.0 / (lam * (i.astype(X.dtype) + 2.0 + t0))
+        w2 = wi - eta[:, None] * (lam[:, None] * wi - g / nv[:, None])
+        b2 = bi - eta * gb
+        nrm = jnp.sqrt(jnp.sum(w2 * w2, axis=1))
+        scale = jnp.minimum(1.0, (1.0 / jnp.sqrt(lam)) / (nrm + 1e-12))
+        return w2 * scale[:, None], b2 * scale
+
+    w, b = jax.lax.fori_loop(0, nsteps, step, (w, b), unroll=unroll)
+    m = y * (jnp.einsum("bnd,bd->bn", X, w,
+                        preferred_element_type=jnp.float32) + b[:, None])
+    mmin = jnp.min(jnp.where(valid, m, big), axis=1)
+    ok = mmin > 0.0
+    take = ok & ~found
+    return (w, b, mmin, found | ok,
+            jnp.where(take[:, None], w, w_best),
+            jnp.where(take, b, b_best))

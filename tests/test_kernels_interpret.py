@@ -116,3 +116,70 @@ def test_maxmarg_turn_scan_interpret_bit_for_bit(max_support, viol_ship):
         w, b, K, yK, X, y, max_support=max_support, viol_ship=viol_ship)
     for g, e in zip(got, want):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+
+
+def _pegasos_inputs(B, N, d, seed=3, found_frac=0.3):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    X = jax.random.normal(ks[0], (B, N, d), jnp.float32)
+    y = jnp.where(jax.random.bernoulli(ks[1], 0.5, (B, N)), 1.0, -1.0)
+    y = y * jax.random.bernoulli(ks[2], 0.85, (B, N))    # label-0 pads
+    nv = jnp.maximum(jnp.sum(y != 0, axis=1), 1).astype(jnp.float32)
+    w = jnp.zeros((B, d), jnp.float32)
+    b = jnp.zeros((B,), jnp.float32)
+    lam = jnp.full((B,), 1e-2, jnp.float32)
+    found = jax.random.bernoulli(ks[3], found_frac, (B,))
+    w_best = jax.random.normal(ks[4], (B, d), jnp.float32)
+    b_best = jax.random.normal(ks[5], (B,), jnp.float32)
+    return X, y, nv, w, b, lam, found, w_best, b_best
+
+
+def test_pegasos_stage_interpret_bit_for_bit():
+    """Lane-aligned d + single N-tile: the kernel's op sequence is exactly
+    the jnp twin's, so every output (including the fused latch) must match
+    bit-for-bit through the interpreter."""
+    args = _pegasos_inputs(B=6, N=48, d=8)
+    want = ref.pegasos_stage_batch_ref(*args, nsteps=60)
+    with _interpret_ctx():
+        got = ops.pegasos_stage(*args, nsteps=60, use_pallas=True,
+                                interpret=True, block_b=8, block_n=64,
+                                unroll=1)
+    for g, e in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+
+
+def test_pegasos_stage_interpret_tiled_grid():
+    """Multi-block grid with unaligned d and N: the VMEM gradient
+    accumulation across N-tiles and the d-lane padding reassociate the
+    contractions, so floats are allclose while the latch decisions
+    (found / which w_best was taken) stay bit-equal."""
+    args = _pegasos_inputs(B=5, N=70, d=12, seed=9)
+    want = ref.pegasos_stage_batch_ref(*args, nsteps=60)
+    with _interpret_ctx():
+        got = ops.pegasos_stage(*args, nsteps=60, use_pallas=True,
+                                interpret=True, block_b=2, block_n=16,
+                                unroll=1)
+    names = ("w", "b", "mmin", "found", "w_best", "b_best")
+    for name, g, e in zip(names, got, want):
+        if name == "found":
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+        else:
+            np.testing.assert_allclose(np.asarray(g), np.asarray(e),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_pegasos_stage_interpret_warm_offset_and_latch():
+    """t0 (the warm polish eta offset) threads through both paths
+    identically, and an already-latched instance's w_best is never
+    overwritten by a later separating stage."""
+    args = _pegasos_inputs(B=4, N=32, d=8, seed=5, found_frac=1.0)
+    want = ref.pegasos_stage_batch_ref(*args, nsteps=40, t0=1024.0)
+    with _interpret_ctx():
+        got = ops.pegasos_stage(*args, nsteps=40, t0=1024.0,
+                                use_pallas=True, interpret=True,
+                                block_b=8, block_n=32, unroll=1)
+    for g, e in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+    # all instances entered latched -> w_best must be the input w_best
+    np.testing.assert_array_equal(np.asarray(got[4]), np.asarray(args[7]))
+    np.testing.assert_array_equal(np.asarray(got[3]),
+                                  np.ones(4, bool))

@@ -102,3 +102,76 @@ def test_warm_start_margin_regression():
     # canonical form survives the device-side canonicalization
     m = y * (X @ h.w + h.b)
     assert m.min() == pytest.approx(1.0, rel=1e-3)
+
+
+def _solve_batch_k(Xs, ys, kernel, n_pad=0, **kw):
+    d = Xs[0].shape[1]
+    N = max(x.shape[0] for x in Xs) + n_pad
+    B = len(Xs)
+    Xb = np.zeros((B, N, d), np.float32)
+    yb = np.zeros((B, N), np.float32)
+    for i, (X, y) in enumerate(zip(Xs, ys)):
+        Xb[i, :X.shape[0]] = X
+        yb[i, :X.shape[0]] = y
+    return clf._svm_solve_batch(jnp.asarray(Xb), jnp.asarray(yb),
+                                jnp.float32(1e-3), 2000, 3, **kw,
+                                kernel=kernel)
+
+
+@pytest.mark.parametrize("d", [2, 16])
+def test_kernel_path_decision_parity(d):
+    """kernel=True (the tiled-solver dispatch; jnp twin on CPU) and
+    kernel=False (the classic loop) are two float approximations of the
+    same transcript-determined optimum: identical convergence bits and
+    identical sign decisions on every fit row."""
+    Xs, ys = zip(*[_separable(120 + 10 * i, d, seed=i) for i in range(6)])
+    wc, bc, okc = _solve_batch_k(list(Xs), list(ys), kernel=False)
+    wk, bk, okk = _solve_batch_k(list(Xs), list(ys), kernel=True)
+    np.testing.assert_array_equal(np.asarray(okc), np.asarray(okk))
+    assert bool(jnp.all(okc))
+    for i, (X, y) in enumerate(zip(Xs, ys)):
+        mc = y * (X @ np.asarray(wc[i], np.float64) + float(bc[i]))
+        mk = y * (X @ np.asarray(wk[i], np.float64) + float(bk[i]))
+        assert mc.min() > 0 and mk.min() > 0  # both separate => same signs
+
+
+def test_kernel_path_padding_rows_are_inert():
+    """Extra label-0 rows must not change the kernel path's result at all
+    beyond float reassociation: same convergence, near-identical
+    separator (the masked-pad contract compacted fills rely on)."""
+    X, y = _separable(140, 16, seed=3)
+    w0, b0, ok0 = _solve_batch_k([X], [y], kernel=True)
+    w1, b1, ok1 = _solve_batch_k([X], [y], kernel=True, n_pad=37)
+    assert bool(ok0[0]) and bool(ok1[0])
+    np.testing.assert_allclose(np.asarray(w0[0]), np.asarray(w1[0]),
+                               rtol=1e-4, atol=1e-5)
+    assert float(b0[0]) == pytest.approx(float(b1[0]), rel=1e-4, abs=1e-5)
+
+
+def test_kernel_path_warm_gate_matches_classic():
+    """The warm polish gate (return_gate bits) is computed from the same
+    carried-separator margin scan on both paths, so the gate itself must
+    be bit-identical; and a cold kernel=True entry must equal a warm
+    kernel=True entry whose warm_ok is all-False, mirroring the classic
+    path's warm/cold bit-exactness property."""
+    Xs, ys = zip(*[_separable(120, 8, seed=i) for i in range(4)])
+    B = len(Xs)
+    wc, bc, okc, gc = _solve_batch_k(
+        list(Xs), list(ys), kernel=False, return_gate=True,
+        w0=jnp.zeros((B, 8), jnp.float32), b0=jnp.zeros((B,), jnp.float32),
+        warm_ok=jnp.ones((B,), bool))
+    wk, bk, okk, gk = _solve_batch_k(
+        list(Xs), list(ys), kernel=True, return_gate=True,
+        w0=jnp.zeros((B, 8), jnp.float32), b0=jnp.zeros((B,), jnp.float32),
+        warm_ok=jnp.ones((B,), bool))
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(gk))
+    # cold == warm-with-all-False-gate, per path
+    w_cold, b_cold, ok_cold = _solve_batch_k(list(Xs), list(ys), kernel=True)
+    w_gate, b_gate, ok_gate, gate = _solve_batch_k(
+        list(Xs), list(ys), kernel=True, return_gate=True,
+        w0=jnp.ones((B, 8), jnp.float32), b0=jnp.zeros((B,), jnp.float32),
+        warm_ok=jnp.zeros((B,), bool))
+    assert not bool(jnp.any(gate))
+    np.testing.assert_array_equal(np.asarray(w_cold), np.asarray(w_gate))
+    np.testing.assert_array_equal(np.asarray(b_cold), np.asarray(b_gate))
+    np.testing.assert_array_equal(np.asarray(ok_cold), np.asarray(ok_gate))

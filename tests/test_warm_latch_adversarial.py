@@ -1,0 +1,156 @@
+"""Warm-latch gate under adversarial near-degenerate margins.
+
+The hot path's clean-carry gate (``_svm_solve_batch`` warm entry) latches a
+carried separator through a short polish only when the carry already
+classifies the fit set cleanly.  On well-separated data that gate is
+obviously safe; the dangerous regime is *near-degenerate* margins, where
+support-band membership (functional margin ≤ (1+rtol)·min) is decided at
+float precision — an ulp-scale wobble of the separator flips which points
+count as support.  This module builds exactly those instances (the
+latch-quality study the ROADMAP owed):
+
+* a generator whose instances provably sit on the band edge: several rows'
+  membership flips under an ulp-scale perturbation of the separator
+  (asserted, not assumed);
+* the gate contract, per instance and on BOTH solver paths (classic
+  ``kernel=False`` and the tiled dispatch ``kernel=True``): a warm entry
+  seeded with the ulp-perturbed carry either (a) latches through the gate
+  and stays decision-exact vs the cold solve, or (b) falls back to the
+  cold anneal bit-for-bit.  There is no third outcome — in particular no
+  "latched but silently different decisions".
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import classifiers as clf
+from repro.engine.maxmarg import RTOL
+
+
+def make_band_flip_instance(d=8, n_easy=40, n_edge=6, seed=0,
+                            rtol=RTOL, gmin=0.05):
+    """A separable instance whose support band is ulp-degenerate.
+
+    Rows sit at controlled functional margins around a unit separator w*:
+    two anchor rows at ``gmin`` (the band's min), ``n_edge`` rows straddling
+    the band edge ``(1+rtol)·gmin`` within a few float32 ulp, and easy rows
+    far outside.  Membership of the edge rows under the exact separator is
+    decided by the last bit of the margin computation.
+    """
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal(d)
+    w /= np.linalg.norm(w)
+    edge = (1.0 + rtol) * gmin
+    # straddle the edge at ±{1,2,3}·ulp steps, alternating sides
+    eps = np.float32(edge) * np.spacing(np.float32(1.0))
+    dists = [gmin, gmin]
+    dists += [edge + ((-1) ** i) * (1 + i // 2) * eps for i in range(n_edge)]
+    dists += list(rng.uniform(4 * gmin, 8 * gmin, n_easy))
+    dists = np.asarray(dists)
+    labels = np.where(rng.random(dists.size) < 0.5, 1.0, -1.0)
+    # orthogonal jitter moves points along the hyperplane, not across it
+    X = rng.standard_normal((dists.size, d)).astype(np.float64)
+    X -= np.outer(X @ w, w)
+    X += np.outer(labels * dists, w)
+    return X.astype(np.float32), labels.astype(np.float32), w
+
+
+def _band(X, y, w, b, rtol=RTOL):
+    m = (y * (X @ w + b)).astype(np.float32)
+    mmin = np.float32(max(m.min(), 1e-12))
+    return m <= mmin * np.float32(1.0 + rtol)
+
+
+def _ulp_perturb(w, b, direction=1):
+    """One-ulp step on every separator component (the smallest
+    representable wobble — e.g. a carry that crossed a float round-trip)."""
+    to = np.float32(direction * np.inf)
+    return (np.nextafter(w.astype(np.float32), to),
+            np.nextafter(np.float32(b), to))
+
+
+def test_generator_band_membership_flips_under_ulp_perturbation():
+    flipped = 0
+    for seed in range(4):
+        X, y, w = make_band_flip_instance(seed=seed)
+        base = _band(X, y, w.astype(np.float32), 0.0)
+        for direction in (1, -1):
+            wp, bp = _ulp_perturb(w, 0.0, direction)
+            flipped += int(np.any(_band(X, y, wp, bp) != base))
+    # the generator's defining property: ulp-scale separator perturbation
+    # flips support-band membership on these instances
+    assert flipped >= 4, flipped
+
+
+def _pack(cases):
+    d = cases[0][0].shape[1]
+    N = max(X.shape[0] for X, _, _ in cases)
+    B = len(cases)
+    Xb = np.zeros((B, N, d), np.float32)
+    yb = np.zeros((B, N), np.float32)
+    for i, (X, y, _) in enumerate(cases):
+        Xb[i, :X.shape[0]] = X
+        yb[i, :X.shape[0]] = y
+    return jnp.asarray(Xb), jnp.asarray(yb)
+
+
+@pytest.mark.parametrize("kernel", [False, True])
+def test_gate_holds_decision_exact_or_falls_back_cold(kernel):
+    """Per instance: a warm entry whose carry is the cold solution wobbled
+    by one ulp either latches decision-exact or replays the cold anneal
+    bit-for-bit.  Ulp-scale perturbation cannot manufacture a third
+    outcome on either solver path."""
+    cases = [make_band_flip_instance(seed=s) for s in range(6)]
+    Xb, yb = _pack(cases)
+    lam = jnp.float32(1e-3)
+    w_c, b_c, ok_c = clf._svm_solve_batch(Xb, yb, lam, 800, 3,
+                                          kernel=kernel)
+    assert bool(jnp.all(ok_c))
+    wc, bc = np.asarray(w_c), np.asarray(b_c)
+    w0 = np.stack([_ulp_perturb(wc[i], bc[i], 1 if i % 2 else -1)[0]
+                   for i in range(len(cases))])
+    b0 = np.asarray([_ulp_perturb(wc[i], bc[i], 1 if i % 2 else -1)[1]
+                     for i in range(len(cases))])
+    w_w, b_w, ok_w, gate = clf._svm_solve_batch(
+        Xb, yb, lam, 800, 3, w0=jnp.asarray(w0), b0=jnp.asarray(b0),
+        warm_ok=jnp.ones((len(cases),), bool), return_gate=True,
+        kernel=kernel)
+    ww, bw = np.asarray(w_w), np.asarray(b_w)
+    gate, ok_w = np.asarray(gate), np.asarray(ok_w)
+    Xn, yn = np.asarray(Xb), np.asarray(yb)
+    for i in range(len(cases)):
+        cold_exact = (np.array_equal(ww[i], wc[i])
+                      and np.float32(bw[i]) == np.float32(bc[i]))
+        if cold_exact:
+            continue                       # (b) fell back cold, bit-for-bit
+        # (a) must have latched through the gate, decision-exact vs cold
+        assert gate[i] and ok_w[i], i
+        valid = yn[i] != 0
+        dec_w = Xn[i][valid] @ ww[i] + bw[i]
+        dec_c = Xn[i][valid] @ wc[i] + bc[i]
+        np.testing.assert_array_equal(np.sign(dec_w) * yn[i][valid] > 0,
+                                      np.sign(dec_c) * yn[i][valid] > 0,
+                                      err_msg=str(i))
+
+
+@pytest.mark.parametrize("kernel", [False, True])
+def test_untrusted_ulp_carry_is_cold_bit_for_bit(kernel):
+    """warm_ok=False must neutralize even a maximally-plausible carry (the
+    cold solution itself, ulp-wobbled): the whole batch replays the cold
+    anneal bit-for-bit on both solver paths — the per-instance fallback
+    basis the gate test above relies on."""
+    cases = [make_band_flip_instance(seed=10 + s) for s in range(3)]
+    Xb, yb = _pack(cases)
+    lam = jnp.float32(1e-3)
+    w_c, b_c, ok_c = clf._svm_solve_batch(Xb, yb, lam, 400, 2,
+                                          kernel=kernel)
+    w0 = np.nextafter(np.asarray(w_c), np.float32(np.inf))
+    w_w, b_w, ok_w, gate = clf._svm_solve_batch(
+        Xb, yb, lam, 400, 2, w0=jnp.asarray(w0), b0=b_c,
+        warm_ok=jnp.zeros((len(cases),), bool), return_gate=True,
+        kernel=kernel)
+    assert not bool(np.any(np.asarray(gate)))
+    np.testing.assert_array_equal(np.asarray(w_w), np.asarray(w_c))
+    np.testing.assert_array_equal(np.asarray(b_w), np.asarray(b_c))
+    np.testing.assert_array_equal(np.asarray(ok_w), np.asarray(ok_c))
