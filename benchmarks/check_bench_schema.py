@@ -149,9 +149,29 @@ SERVICE_SCHEMA = {
     "steady_state_recompiles": int,
     "oracle_checked": int,
     "oracle_mismatches": list,
+    "mixed_traffic": dict,
 }
 
 SERVICE_STATUSES = ("converged", "budget_exhausted", "quarantined")
+
+# the mixed_traffic series (PR 10): interleaved MEDIAN+MAXMARG+SAMPLING
+# sessions through ONE unified pool vs three per-family pools at equal
+# session counts.  Gated: zero steady-state recompiles on the unified
+# pool's warm run, exactly ONE pinned dispatch key for the whole mixed
+# stream, and an empty unified-vs-per-family mismatch list.
+SERVICE_MIXED_SCHEMA = {
+    "sessions": int,
+    "slots": int,
+    "per_family_sessions": dict,
+    "unified_s": _NUM,
+    "per_family_s": dict,
+    "per_family_total_s": _NUM,
+    "steady_state_recompiles": int,
+    "steady_state_dispatch_keys": list,
+    "checked": int,
+    "bitwise": int,
+    "mismatches": list,
+}
 
 
 GAP_ENTRY_SCHEMA = {
@@ -299,6 +319,37 @@ def _check_service(path: str, report: dict) -> list:
         if injected == 0:
             errors.append(f"{path}: schedule has nonzero fault rates but "
                           f"stats show zero injected faults")
+
+    # the mixed-traffic gates: one pool, one key, zero drift vs per-family
+    mixed = report.get("mixed_traffic")
+    if isinstance(mixed, dict):
+        for field, typ in SERVICE_MIXED_SCHEMA.items():
+            expect(mixed, field, typ, f"{path}[mixed_traffic]")
+        if mixed.get("steady_state_recompiles") != 0:
+            errors.append(
+                f"{path}[mixed_traffic]: steady_state_recompiles is "
+                f"{mixed.get('steady_state_recompiles')!r}, wanted 0 — "
+                f"mixed admission moved a compile-cache key")
+        keys = mixed.get("steady_state_dispatch_keys")
+        if isinstance(keys, list) and len(keys) != 1:
+            errors.append(
+                f"{path}[mixed_traffic]: {len(keys)} distinct dispatch "
+                f"keys, wanted exactly 1 — the unified pool must drive "
+                f"the whole mixed stream at ONE pinned key")
+        if mixed.get("mismatches"):
+            errors.append(
+                f"{path}[mixed_traffic]: mismatches is non-empty: "
+                f"{mixed['mismatches']} — unified-pool sessions must "
+                f"match their per-family pool twins")
+        if mixed.get("checked") == 0:
+            errors.append(f"{path}[mixed_traffic]: checked is 0 — the "
+                          f"unified-vs-per-family parity gate never ran")
+        fam = mixed.get("per_family_sessions")
+        if isinstance(fam, dict) and isinstance(mixed.get("sessions"), int) \
+                and sum(fam.values()) != mixed["sessions"]:
+            errors.append(f"{path}[mixed_traffic]: per-family session "
+                          f"counts {fam} do not sum to "
+                          f"sessions={mixed['sessions']}")
     return errors
 
 

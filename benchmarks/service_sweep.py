@@ -37,6 +37,18 @@ bitwise anyway).  The two chaos arms must also agree with each other
 (``determinism_ok``): the fault schedule is a pure hash, so same seed ⇒
 same decisions.
 
+PR 10 adds the ``mixed_traffic`` series: the same streamed-admission loop
+with MEDIAN + MAXMARG + SAMPLING sessions interleaved through ONE
+``PoolConfig(selector="unified")`` pool, measured against three
+per-family pools serving the identical sessions (equal counts, warm
+caches both sides).  Gated: the unified pool's steady run adds zero jit
+cache entries, dispatches every mixed turn at exactly ONE pinned compile
+key, and every session's result matches its per-family pool twin —
+MEDIAN and SAMPLING bitwise, MAXMARG decision/comm-exact with separators
+allclose (the two paths fit at different padded transcript widths, the
+engine's own unified-vs-per-selector caveat; ``bitwise`` counts how many
+match bitwise anyway).
+
 Usage:
   python benchmarks/service_sweep.py            # full size, BENCH_service.json
   python benchmarks/service_sweep.py --tiny     # CI chaos-smoke sizes,
@@ -53,7 +65,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.engine import hotloop, median, run_instances, session_pool
+from repro.engine import hotloop, median, run_instances, session_pool, unified
 from repro.engine.faults import FaultSchedule
 from repro.engine.session_pool import PoolConfig, SessionPool
 from repro.engine.state import ProtocolInstance
@@ -72,7 +84,12 @@ NOTES = (
     "single pinned dispatch key — and every fault-free session is "
     "decision- and comm-exact vs the engine.run_instances sweep oracle, "
     "whose differently-keyed compiles may move separator floats by ulps; "
-    "engine_bitwise counts how many match bitwise anyway).  Produced by "
+    "engine_bitwise counts how many match bitwise anyway).  The "
+    "mixed_traffic series streams interleaved MEDIAN+MAXMARG+SAMPLING "
+    "sessions through ONE unified pool vs three per-family pools at equal "
+    "session counts (warm caches both sides); gated on zero steady-state "
+    "recompiles, exactly one pinned dispatch key, and empty mismatches "
+    "(MEDIAN/SAMPLING bitwise, MAXMARG decision/comm-exact).  Produced by "
     "benchmarks/service_sweep.py; schema-gated by check_bench_schema.py."
 )
 
@@ -133,6 +150,162 @@ def _pool_cache_entries() -> int:
            session_pool._corrupt_median, session_pool._view_median,
            session_pool._mark_done)
     return sum(f._cache_size() for f in fns)
+
+
+def _unified_cache_entries() -> int:
+    """Same census for a unified pool turn — ``_corrupt_unified`` /
+    ``_view_unified`` are aliases of the maxmarg jits (jit re-keys on the
+    pytree structure, and UnifiedState shares the leaf names they touch),
+    so counting the alias targets counts them."""
+    fns = (unified._hot_turn, session_pool._admit_rows,
+           session_pool._corrupt_maxmarg, session_pool._view_maxmarg,
+           session_pool._mark_done)
+    return sum(f._cache_size() for f in fns)
+
+
+MIXED_SELECTORS = ("median", "maxmarg", "sampling")
+
+
+def build_mixed_workload(n_sessions: int, k: int, n_pad: int,
+                         seed: int = 1000) -> List[dict]:
+    """The mixed-traffic workload: the same separable 2-D instances, with
+    the three protocol families interleaved round-robin and a per-session
+    seed (feeds the SAMPLING reservoir chain; both arms use the same one,
+    so SAMPLING results are bitwise-comparable)."""
+    base = build_workload(n_sessions, k, n_pad, seed=seed)
+    return [{"shards": s, "selector": MIXED_SELECTORS[i % 3], "seed": i}
+            for i, s in enumerate(base)]
+
+
+def run_streaming_mixed(pool: SessionPool, entries: List[dict],
+                        low_water: int) -> float:
+    """``run_streaming`` for per-session selector/seed submissions."""
+    it = iter(entries)
+    exhausted = False
+    t0 = time.perf_counter()
+    guard = 0
+    while True:
+        while not exhausted and len(pool.pending) < low_water:
+            try:
+                e = next(it)
+            except StopIteration:
+                exhausted = True
+                break
+            pool.submit(e["shards"], selector=e["selector"], seed=e["seed"])
+        if exhausted and pool.drained():
+            break
+        pool.step_pool()
+        guard += 1
+        if guard > 100_000:
+            raise RuntimeError("mixed service benchmark failed to drain")
+    return time.perf_counter() - t0
+
+
+def mixed_traffic_series(tiny: bool) -> Tuple[List[str], dict]:
+    """One unified pool carrying interleaved MEDIAN/MAXMARG/SAMPLING
+    sessions vs three per-family pools carrying the identical sessions.
+    Both arms are timed on warm caches; the unified arm's warm run must
+    add zero jit cache entries and dispatch at exactly one pinned key."""
+    if tiny:
+        sessions, slots, n_pad, n_angles, max_epochs = 12, 4, 16, 64, 8
+    else:
+        sessions, slots, n_pad, n_angles, max_epochs = 48, 12, 32, 128, 8
+    k = 2
+    low_water = max(2, slots // 2)
+    entries = build_mixed_workload(sessions, k, n_pad)
+    ucfg = PoolConfig(slots=slots, k=k, n_pad=n_pad, selector="unified",
+                      n_angles=n_angles, max_epochs=max_epochs)
+    lines = [f"mixed traffic: {sessions} sessions interleaved over "
+             f"{MIXED_SELECTORS}, {slots} slots, one unified pool"]
+
+    # -- unified arm: warmup compiles the ONE pinned key, warm run timed --
+    run_streaming_mixed(SessionPool(ucfg), entries, low_water)
+    entries0 = _unified_cache_entries()
+    keys0 = len(hotloop.KEY_LOG)
+    pool_u = SessionPool(ucfg)
+    unified_s = run_streaming_mixed(pool_u, entries, low_water)
+    recompiles = _unified_cache_entries() - entries0
+    keys = sorted(set(hotloop.KEY_LOG[keys0:]))
+    lines.append(f"unified pool: {unified_s:.2f}s, {recompiles} steady "
+                 f"recompiles over {len(keys)} distinct dispatch keys")
+
+    # -- per-family baseline: three pools, same sessions, warm too --------
+    # (no pinned SAMPLING pool exists; a unified pool fed only SAMPLING
+    # sessions is that family's dedicated path)
+    fam_entries = {sel: [e for e in entries if e["selector"] == sel]
+                   for sel in MIXED_SELECTORS}
+    fam_cfg = {
+        "median": PoolConfig(slots=slots, k=k, n_pad=n_pad,
+                             n_angles=n_angles, max_epochs=max_epochs),
+        "maxmarg": PoolConfig(slots=slots, k=k, n_pad=n_pad,
+                              selector="maxmarg", max_epochs=max_epochs),
+        "sampling": ucfg,
+    }
+    fam_s: Dict[str, float] = {}
+    fam_results: Dict[str, dict] = {}
+    for sel in MIXED_SELECTORS:
+        run_streaming_mixed(SessionPool(fam_cfg[sel]), fam_entries[sel],
+                            low_water)
+        p = SessionPool(fam_cfg[sel])
+        fam_s[sel] = run_streaming_mixed(p, fam_entries[sel], low_water)
+        fam_results[sel] = p.results
+    per_family_total = sum(fam_s.values())
+    lines.append("per-family pools: " + ", ".join(
+        f"{sel} {fam_s[sel]:.2f}s" for sel in MIXED_SELECTORS)
+        + f" (total {per_family_total:.2f}s)")
+
+    # -- parity: every unified-pool session vs its per-family twin --------
+    mismatches = []
+    bitwise = 0
+    checked = 0
+    fam_pos = {sel: 0 for sel in MIXED_SELECTORS}
+    for sid, e in enumerate(entries):
+        sel = e["selector"]
+        fid = fam_pos[sel]
+        fam_pos[sel] += 1
+        r, o = pool_u.results[sid], fam_results[sel][fid]
+        checked += 1
+        wr = np.asarray(r.classifier.w)
+        wo = np.asarray(o.classifier.w)
+        decisions = (r.converged == o.converged and r.rounds == o.rounds
+                     and r.comm == o.comm)
+        exact = (decisions and np.array_equal(wr, wo)
+                 and float(r.classifier.b) == float(o.classifier.b))
+        if exact:
+            bitwise += 1
+        # MEDIAN is width-invariant bitwise; SAMPLING runs the identical
+        # unified step both sides; MAXMARG fits at two transcript widths,
+        # so its separators are held to allclose + decision/comm equality
+        if sel == "maxmarg":
+            ok = (decisions
+                  and np.allclose(wr, wo, rtol=1e-5, atol=1e-6)
+                  and np.isclose(float(r.classifier.b),
+                                 float(o.classifier.b),
+                                 rtol=1e-5, atol=1e-6))
+        else:
+            ok = exact
+        if not ok:
+            mismatches.append({"sid": sid, "selector": sel,
+                               "arm": "unified_vs_per_family"})
+    lines.append(f"mixed parity: {checked} sessions checked, "
+                 f"{len(mismatches)} mismatches, {bitwise} bitwise")
+
+    section = {
+        "sessions": sessions,
+        "slots": slots,
+        "per_family_sessions": {sel: len(fam_entries[sel])
+                                for sel in MIXED_SELECTORS},
+        "unified_s": round(unified_s, 4),
+        "per_family_s": {sel: round(fam_s[sel], 4)
+                         for sel in MIXED_SELECTORS},
+        "per_family_total_s": round(per_family_total, 4),
+        "steady_state_recompiles": int(recompiles),
+        "steady_state_dispatch_keys": [list(kk) for kk in keys],
+        "checked": checked,
+        "bitwise": bitwise,
+        "mismatches": mismatches,
+    }
+    return lines, section
 
 
 def _statuses(pool: SessionPool) -> Dict[str, int]:
@@ -229,6 +402,10 @@ def main(tiny: bool = False) -> List[str]:
                  f"{len(mismatches)} mismatches, "
                  f"{engine_bitwise}/{sessions} engine-bitwise")
 
+    # -- mixed-traffic series: one unified pool vs three per-family pools -
+    mixed_lines, mixed = mixed_traffic_series(tiny)
+    lines += mixed_lines
+
     report = {
         "notes": NOTES,
         "tiny": tiny,
@@ -253,6 +430,7 @@ def main(tiny: bool = False) -> List[str]:
         "engine_bitwise": engine_bitwise,
         "oracle_checked": checked,
         "oracle_mismatches": mismatches,
+        "mixed_traffic": mixed,
     }
     out = OUT.replace(".json", ".tiny.json") if tiny else OUT
     with open(out, "w") as f:

@@ -1,0 +1,140 @@
+"""Doc-drift gate: documentation links must resolve to real code.
+
+``docs/ARCHITECTURE.md`` is a map of the tree; a map that names modules
+that moved, or DESIGN.md anchors that were reworded, is worse than no map.
+This checker is the CI twin of that promise, in the stdlib-only idiom of
+:mod:`repro.analysis.lint` (the dep-free ``lint`` job runs it with no
+project deps installed):
+
+* every relative **markdown link** target must exist on disk (resolved
+  against the linking file's own directory, the way GitHub renders it);
+* every ``#fragment`` on a markdown link into a ``.md`` file must match a
+  real heading of that file under GitHub's anchor slugging;
+* every backticked **path token** (```` `src/.../x.py` ````,
+  ```` `benchmarks/x.py` ````, ```` `engine/hotloop.py` ````, …) must
+  exist either at the repo root or under ``src/repro/`` (the short module
+  spelling DESIGN.md uses).
+
+Run as ``PYTHONPATH=src python -m repro.analysis.doccheck FILE...`` —
+one ``file:line: message`` diagnostic per problem, exit 1 if any.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Iterable, List, Tuple
+
+# [text](target) — target split into path + optional #fragment below
+_MD_LINK = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+# `path/with/slash.ext` — only slashed tokens; bare names are prose
+_CODE_PATH = re.compile(r"`([A-Za-z0-9_.-]+(?:/[A-Za-z0-9_.-]+)+"
+                        r"\.(?:py|md|json|toml|yml))`")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+
+# roots a short backticked path may resolve against (DESIGN.md writes
+# `engine/hotloop.py` for src/repro/engine/hotloop.py)
+_PATH_ROOTS = ("", "src/repro")
+
+
+def slugify(heading: str) -> str:
+    """GitHub's heading→anchor rule: drop markup, lowercase, keep
+    alphanumerics/underscores/hyphens, spaces become hyphens."""
+    text = heading.replace("`", "").strip().lower()
+    out = []
+    for ch in text:
+        if ch.isalnum() or ch in "_-":
+            out.append(ch)
+        elif ch == " ":
+            out.append("-")
+    return "".join(out)
+
+
+def _headings(md_path: str) -> List[str]:
+    slugs = []
+    with open(md_path, encoding="utf-8") as f:
+        in_fence = False
+        for line in f:
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = _HEADING.match(line)
+            if m:
+                slugs.append(slugify(m.group(1)))
+    return slugs
+
+
+def check_file(doc_path: str, root: str = ".") -> List[Tuple[int, str]]:
+    """Return (line, message) problems for one markdown file."""
+    problems: List[Tuple[int, str]] = []
+    doc_dir = os.path.dirname(os.path.abspath(doc_path))
+    heading_cache = {}
+
+    def anchors_of(md_file: str) -> List[str]:
+        if md_file not in heading_cache:
+            heading_cache[md_file] = _headings(md_file)
+        return heading_cache[md_file]
+
+    with open(doc_path, encoding="utf-8") as f:
+        in_fence = False
+        for lineno, line in enumerate(f, 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for target in _MD_LINK.findall(line):
+                if "://" in target or target.startswith("mailto:"):
+                    continue
+                path, _, frag = target.partition("#")
+                dest = (os.path.normpath(os.path.join(doc_dir, path))
+                        if path else os.path.abspath(doc_path))
+                if path and not os.path.exists(dest):
+                    problems.append(
+                        (lineno, f"broken link target {target!r}: "
+                                 f"{path} does not exist"))
+                    continue
+                if frag:
+                    if not dest.endswith(".md"):
+                        continue
+                    slugs = anchors_of(dest)
+                    if frag not in slugs:
+                        problems.append(
+                            (lineno, f"broken anchor {target!r}: no "
+                                     f"heading slugs to {frag!r} in "
+                                     f"{path or os.path.basename(dest)}"))
+            for token in _CODE_PATH.findall(line):
+                if not any(os.path.exists(os.path.join(root, base, token))
+                           for base in _PATH_ROOTS):
+                    problems.append(
+                        (lineno, f"dangling path `{token}`: not found at "
+                                 f"repo root or under src/repro/"))
+    return problems
+
+
+def main(argv: Iterable[str]) -> int:
+    files = list(argv)
+    if not files:
+        print("usage: python -m repro.analysis.doccheck FILE.md ...")
+        return 2
+    n_bad = 0
+    for doc in files:
+        if not os.path.exists(doc):
+            print(f"{doc}: file not found")
+            n_bad += 1
+            continue
+        for lineno, msg in check_file(doc):
+            print(f"{doc}:{lineno}: {msg}")
+            n_bad += 1
+    if n_bad:
+        print(f"doccheck: {n_bad} problem(s)")
+        return 1
+    print(f"doccheck: {len(files)} file(s) OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -256,6 +256,15 @@ def _svm_solve_batch(
     same transcript-determined optimum — decision-level agreement on the
     tested grids is enforced by the kernel-parity gates, not bit equality
     (same contract as warm vs cold).
+
+    Compile-key contract: this function is jitted with static
+    ``steps``/``stages``/``warm_steps``/``warm_offset``/``return_gate``/
+    ``kernel`` — plus, implicitly, the (B, N, d) shapes of ``X``/``y``
+    and whether ``w0``/``warm_ok`` are present.  Everything else
+    (data, λ, warm iterates) is traced.  Engine callers pin B and N via
+    their own padding/quantization so repeated refits hit one cache
+    entry; calling this directly with ragged batch shapes recompiles
+    per shape.
     """
     B, N, d = X.shape
     valid = y != 0.0

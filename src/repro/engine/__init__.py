@@ -19,7 +19,11 @@ Three compiled execution paths share the conventions: MEDIAN
 (:mod:`repro.engine.median`), MAXMARG (:mod:`repro.engine.maxmarg`), and the
 one-way chain protocols + §7 baselines (:mod:`repro.engine.oneway` —
 reservoir chain scan plus batched terminal fits).  ``run_sweep`` buckets a
-mixed grid across all of them.
+mixed grid across all of them — or, with ``unified_dispatch=True``, routes
+MEDIAN + MAXMARG + SAMPLING through :mod:`repro.engine.unified`'s
+mixed-selector superset state, where the selector is traced per-row data
+and one compiled step drives any mix (DESIGN.md §unified mixed-selector
+state).
 """
 
 from repro.engine.state import (
@@ -28,25 +32,48 @@ from repro.engine.state import (
     MaxMargState,
     ProtocolInstance,
     ProtocolState,
+    SELECTOR_CODES,
+    SELECTOR_NAMES,
+    UnifiedState,
     maxmarg_transcript_capacity,
     pack_instances,
     pack_instances_maxmarg,
+    pack_instances_unified,
     transcript_capacity,
+    unified_transcript_capacity,
 )
 from repro.engine.median import run_compiled, run_instances, step
-from repro.engine import dataplane, hotloop, maxmarg, oneway
+from repro.engine import dataplane, hotloop, maxmarg, oneway, unified
 
 
-def run_sweep(instances, **kwargs):
-    """Dispatch a heterogeneous sweep: bucket instances by scenario spec
-    (selector, party count, dimension), run each bucket as one compiled
-    batch, and return results in input order.
+def run_sweep(instances, *, unified_dispatch=False, **kwargs):
+    """Dispatch a heterogeneous sweep and return results in input order.
 
-    The engine's compiled ``step`` is selector- and shape-monomorphic (k and
-    d are static), so a mixed sweep is *bucketed dispatch*: one engine
-    dispatch per distinct (selector, k, d) — see DESIGN.md §selector
-    abstraction.  The full paper grid (two-way MEDIAN/MAXMARG + one-way
-    sampling + the §7 baselines) is therefore one ``run_sweep`` call.
+    Two dispatch modes:
+
+    * **bucketed** (default): one engine dispatch per distinct
+      (selector, k, d) — the engine's per-selector compiled ``step`` is
+      selector- and shape-monomorphic, see DESIGN.md §selector abstraction.
+      The full paper grid (two-way MEDIAN/MAXMARG + one-way sampling + the
+      §7 baselines) is one ``run_sweep`` call.
+    * **unified** (``unified_dispatch=True``): MEDIAN, MAXMARG and
+      SAMPLING instances bucket by (k, d) *only* and run through
+      :mod:`repro.engine.unified`'s mixed-selector state — the selector
+      becomes traced per-row data, so any interleaving of those families
+      at equal shapes shares one compiled step (the §7 baselines keep
+      their own closed-form dispatches either way).
+
+    Compile-key contract (the invariant callers break first): each
+    bucket's compiled variants key on the *static* scenario shape — party
+    count k, dimension d, padded sizes (n_max, cap rounded to multiples of
+    8), the compacted (n_pad, width, warm) hot-loop key, and static solver
+    options (``max_epochs``, ``max_support``, ``steps``/``stages``,
+    kernel flags) — never on per-instance values (ε, seeds, shard
+    contents, or — under unified dispatch — the selector mix).  Repeating
+    a sweep of the same shapes therefore recompiles nothing
+    (tests/test_recompile.py gates this); changing any static option or
+    shape bucket compiles a fresh variant.
+
     Keyword arguments are forwarded to each bucket's runner (a selector
     ignores options that don't apply to it), but a kwarg no selector in the
     sweep understands raises — a typo must not silently run with defaults.
@@ -63,12 +90,17 @@ def run_sweep(instances, **kwargs):
         "naive": _FIT,
         "voting": _FIT,
         "mixing": _FIT,
+        "unified": ("eps", "n_angles", "max_epochs", "max_support", "warm",
+                    "per_node", "compact", "vc_dim", "c", "solver_kernel",
+                    "width_policy", "stats") + _FIT,
     }
     buckets = {}
     for i, inst in enumerate(instances):
-        key = (inst.selector, len(inst.shards), inst.shards[0][0].shape[1])
-        if inst.selector not in _ALLOWED:
+        if inst.selector not in _ALLOWED or inst.selector == "unified":
             raise ValueError(f"unknown selector {inst.selector!r}")
+        sel_key = ("unified" if unified_dispatch
+                   and inst.selector in SELECTOR_CODES else inst.selector)
+        key = (sel_key, len(inst.shards), inst.shards[0][0].shape[1])
         buckets.setdefault(key, []).append(i)
     understood = set().union(*(_ALLOWED[sel] for (sel, _k, _d) in buckets))
     unknown = set(kwargs) - understood
@@ -80,7 +112,9 @@ def run_sweep(instances, **kwargs):
         group = [instances[i] for i in idxs]
         allowed = _ALLOWED[selector]
         opts = {a: kwargs[a] for a in allowed if a in kwargs}
-        if selector == "maxmarg":
+        if selector == "unified":
+            res = unified.run_instances(group, **opts)
+        elif selector == "maxmarg":
             res = maxmarg.run_instances(group, **opts)
         elif selector in oneway.ONEWAY_SELECTORS:
             res = oneway.run_instances(group, **opts)
@@ -97,6 +131,9 @@ __all__ = [
     "MaxMargState",
     "ProtocolInstance",
     "ProtocolState",
+    "SELECTOR_CODES",
+    "SELECTOR_NAMES",
+    "UnifiedState",
     "dataplane",
     "hotloop",
     "maxmarg",
@@ -104,9 +141,12 @@ __all__ = [
     "oneway",
     "pack_instances",
     "pack_instances_maxmarg",
+    "pack_instances_unified",
     "run_compiled",
     "run_instances",
     "run_sweep",
     "step",
     "transcript_capacity",
+    "unified",
+    "unified_transcript_capacity",
 ]

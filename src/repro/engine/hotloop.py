@@ -68,6 +68,34 @@ WIDTH_MULT = 8   # live transcript width rounds up to this
 KEY_LOG: List[Tuple[int, int, bool, bool]] = []
 
 
+def quantize_width(w: int, cap: int, policy: str = "linear") -> int:
+    """Round a live transcript width up to a dispatchable bucket.
+
+    ``"linear"`` is the classic rule — ``min(cap, round_up(w, WIDTH_MULT))``
+    — and is byte-identical to what every hot path shipped before the policy
+    knob existed.  ``"geometric"`` rounds up to the next bucket of the
+    series 8, 16, 24, 40, 64, 96, 144, ... (each ≈1.5× the last, re-rounded
+    to ``WIDTH_MULT``): mixed-selector traffic spreads live fills across
+    families with very different transcript growth, and linear rounding then
+    visits O(cap / WIDTH_MULT) distinct widths — each a fresh compile —
+    where geometric rounding visits O(log cap) at ≤ 50% padding waste
+    (DESIGN.md §unified mixed-selector state).
+
+    Both policies preserve ``w = 0`` exactly: a zero width is meaningful
+    (MAXMARG's empty-transcript first turn compiles a skip-concat branch)
+    and must not be promoted into a padded nonzero bucket.
+    """
+    w = min(cap, _round_up(w, WIDTH_MULT))
+    if policy == "linear" or w <= WIDTH_MULT:
+        return w
+    if policy != "geometric":
+        raise ValueError(f"unknown width policy {policy!r}")
+    b = WIDTH_MULT
+    while b < w:
+        b = _round_up((b * 3) // 2, WIDTH_MULT)
+    return min(cap, b)
+
+
 def gather_rows(arr, idx):
     """arr (B, N, ...), idx (B,) -> (B, ...): per-instance row gather.
 
@@ -171,6 +199,7 @@ def run_hot(
     compact: bool = True,
     width_slack: int = 0,
     width_growth: int = 0,
+    width_policy: str = "linear",
     overlap: bool = False,
     shards: Optional[int] = None,
     stats: Optional[dict] = None,
@@ -183,7 +212,10 @@ def run_hot(
     the transcript fills the width compaction keys on.  ``width_slack``
     widens the compacted read past the turn-start fill — a selector whose
     step *reads* transcripts after appending to them (MEDIAN's post-S
-    extremes scan) passes the per-turn append bound.
+    extremes scan) passes the per-turn append bound.  ``width_policy``
+    selects the :func:`quantize_width` bucketing rule ("linear" default,
+    "geometric" for mixed-width traffic where linear rounding would churn
+    the compile cache).
 
     ``dispatch_full`` runs the whole batch at a compacted ``width``
     (``None`` on the non-compacted path); ``dispatch_sub`` additionally
@@ -249,8 +281,8 @@ def run_hot(
         # a turn where no live instance's carried separator can latch falls
         # through to the cold anneal anyway — skip the polish dispatch
         use_warm = warm and t > 0 and bool(warm_ok[act].any())
-        width = min(cap, _round_up(int(fills[act].max(initial=0))
-                                   + width_slack + growth, WIDTH_MULT))
+        width = quantize_width(int(fills[act].max(initial=0))
+                               + width_slack + growth, cap, width_policy)
         return act, width, use_warm
 
     def dispatch(state, act, width, use_warm, t):

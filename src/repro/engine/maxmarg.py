@@ -668,6 +668,13 @@ def run_instances(
     device mesh (requires ``compact=True``); ``donate``/``overlap`` opt the
     per-turn dispatches into buffer donation and the double-buffered host
     loop (mesh default: both on).
+
+    Compile-key contract: ``max_epochs``, ``max_support``, ``steps``,
+    ``stages``, ``k``, ``d``, ``per_node``, the kernel toggles, and the
+    mesh topology are static — changing any of them compiles a new
+    ``step``.  Shard contents, eps, ``lam``, seeds, and B are traced
+    data; the hot path re-keys only on the quantized
+    ``(n_pad, width, warm)`` buckets ``hotloop.KEY_LOG`` records.
     """
     from repro.core import classifiers as clf
     from repro.core.protocols.one_way import ProtocolResult

@@ -695,6 +695,13 @@ def run_instances(
     (a dict) collects host-side observability — on sharded sweeps the
     per-dispatch shard skew (``hotloop.shard_skew``) — and is never read
     for decisions.
+
+    Compile-key contract: ``n_angles``, ``max_epochs``, ``k``, ``d``, the
+    kernel toggles, and the mesh topology are static — changing any of
+    them compiles a new ``step``.  Shard contents, eps, seeds, and B are
+    traced data; the hot path additionally re-keys only on the quantized
+    ``(n_pad, width, warm)`` buckets ``hotloop.KEY_LOG`` records, so
+    sweeps of any size reuse a handful of compilations.
     """
     from repro.core import classifiers as clf
     from repro.core import geometry as geo

@@ -223,6 +223,12 @@ def run_instances(
     as differential oracles in ``benchmarks/legacy_oneway.py``).  ``vc_dim``
     and ``c`` parameterize the ``"sampling"`` ε-net size exactly as on the
     host API; per-instance RNG comes from ``ProtocolInstance.seed``.
+
+    Compile-key contract: the padded reservoir cap (max ε-net size over
+    the batch, rounded to 8), ``steps``, ``stages``, ``k``, and ``d`` are
+    static — a batch with a larger max eps-driven reservoir compiles a
+    new dispatch.  Shard contents, per-instance caps, seeds, ``lam``,
+    and B are traced data and never recompile.
     """
     from repro.core import classifiers as clf
     from repro.core.protocols.one_way import ProtocolResult

@@ -12,7 +12,11 @@ tests/test_recompile.py gates it).
 Mixed-phase dispatch is what PR 7's per-instance ``turn`` refactor buys:
 admitted sessions start at turn 0 while their slot neighbours are mid-epoch,
 and one dispatch advances them all (the coordinator index ``ci = turn % k``
-is a (B,) gather).  The pool's bit-exactness contract is **compiled-program
+is a (B,) gather).  ``PoolConfig(selector="unified")`` extends the same move
+to mixed-*family* dispatch: the selector becomes traced per-row data in the
+superset :class:`~repro.engine.state.UnifiedState`, so ONE pool absorbs
+interleaved MEDIAN + MAXMARG + SAMPLING sessions with no per-family
+bucketing and no extra compile keys (:mod:`repro.engine.unified`).  The pool's bit-exactness contract is **compiled-program
 identity**: every dispatch uses one pinned (full-block, full-width) cache
 key (see ``_dispatch`` for why — XLA's shape-dependent fusion perturbs
 separator floats by ulps across keys), so a session's results are a pure
@@ -61,16 +65,22 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.sampling import epsilon_net_size
 from repro.engine import faults as F
-from repro.engine import hotloop, median, maxmarg
+from repro.engine import hotloop, median, maxmarg, unified
 from repro.engine.state import (
     BatchCommLog,
     EngineData,
     MaxMargState,
     ProtocolState,
+    SEL_MEDIAN,
+    SELECTOR_CODES,
+    SELECTOR_NAMES,
+    UnifiedState,
     _round_up,
     maxmarg_transcript_capacity,
     transcript_capacity,
+    unified_transcript_capacity,
 )
 
 # host-side slot lifecycle (the device only ever sees done flags)
@@ -106,6 +116,14 @@ class PoolConfig:
     is the comm-blowout invariant threshold — generous against any
     legitimate per-turn bit cost (k-1 bits), tiny against
     ``faults.COMM_SPIKE_BITS``.
+
+    ``selector="unified"`` makes admission selector-agnostic: each
+    :meth:`SessionPool.submit` call names its own protocol family
+    (MEDIAN / MAXMARG / SAMPLING), the selector rides the pending queue as
+    data, and every mixed dispatch still uses the ONE pinned key — the
+    superset :class:`~repro.engine.state.UnifiedState` cap covers every
+    family, including ``res_cap`` (the largest per-session ε-net reservoir
+    the pool accepts; defaults to the ε-net size at the pool's own ``eps``).
     """
 
     slots: int
@@ -124,6 +142,9 @@ class PoolConfig:
     # on TPU, classic d-unrolled loop elsewhere) — resolved once at pool
     # construction so admission keys stay pinned across the pool's life
     solver_kernel: Optional[bool] = None
+    # unified pools only: max ε-net reservoir rows any SAMPLING session may
+    # request; None resolves to the size at the pool's default eps
+    res_cap: Optional[int] = None
     admit_block: int = 8
     corrupt_block: int = 4
     retry_budget: int = 3
@@ -133,10 +154,14 @@ class PoolConfig:
     checkpoint_dir: Optional[str] = None
 
     def __post_init__(self):
-        if self.selector not in ("median", "maxmarg"):
+        if self.selector not in ("median", "maxmarg", "unified"):
             raise ValueError(f"unknown selector {self.selector!r}")
         if self.selector == "median" and self.d != 2:
             raise ValueError("MEDIAN engine is specified for R^2")
+        if self.selector == "unified" and self.res_cap is None:
+            # resolved once so dataclasses.asdict round-trips the pinned cap
+            object.__setattr__(self, "res_cap", _round_up(
+                epsilon_net_size(self.eps, self.d + 1), 8))
         if self.n_pad % 8:
             object.__setattr__(self, "n_pad", _round_up(self.n_pad, 8))
         if self.slots < 1 or self.k < 2:
@@ -152,6 +177,10 @@ class PoolConfig:
     def cap(self) -> int:
         if self.selector == "median":
             return transcript_capacity(self.k, self.max_epochs)
+        if self.selector == "unified":
+            return unified_transcript_capacity(
+                self.k, self.max_epochs, self.max_support,
+                res_cap=int(self.res_cap or 0), has_median=(self.d == 2))
         return maxmarg_transcript_capacity(self.k, self.max_epochs,
                                            self.max_support)
 
@@ -208,6 +237,16 @@ def _corrupt_maxmarg(state: MaxMargState, idx, kind) -> MaxMargState:
     )
 
 
+# UnifiedState shares MaxMargState's separator/transcript/comm leaf names,
+# so the maxmarg corruption body applies verbatim — jax.jit re-keys on the
+# pytree structure, giving the unified pool its own cached variant.  The
+# supervision view likewise: max w_fill is each family's ACTUAL transcript
+# fill (a SAMPLING row's reservoir fill is min(seen, res_cap), which grows
+# monotonically per hop — distinct from the hot loop's width view, which
+# inflates fills to res_cap for coverage).
+_corrupt_unified = _corrupt_maxmarg
+
+
 @jax.jit
 def _view_median(state: ProtocolState) -> jnp.ndarray:
     """Supervision view as one (5, W) i32 transfer: done, converged, max
@@ -228,6 +267,9 @@ def _view_maxmarg(state: MaxMargState) -> jnp.ndarray:
                       jnp.max(state.w_fill, axis=1),
                       nan.astype(jnp.int32),
                       state.comm.bits])
+
+
+_view_unified = _view_maxmarg
 
 
 # ---------------------------------------------------------------------------
@@ -284,12 +326,63 @@ def _fresh_state_maxmarg(A: int, cfg: PoolConfig, live: int) -> MaxMargState:
     )
 
 
+def _fresh_state_unified(A: int, cfg: PoolConfig, live: int,
+                         batch: Sequence["_Pending"] = ()) -> UnifiedState:
+    """Fresh superset rows for a mixed admission wave: the selector code,
+    reservoir size and Vitter hop keys are per-row data taken from the
+    pending entries — the device tree shapes (and so the admission scatter's
+    compile key) never depend on the wave's selector mix."""
+    k, cap, d = cfg.k, cfg.cap, cfg.d
+    m = cfg.n_angles if d == 2 else 1
+    done = np.zeros((A,), bool)
+    done[live:] = True
+    sel = np.zeros((A,), np.int32)
+    res_cap = np.zeros((A,), np.int32)
+    hop_keys = np.zeros((A, max(k - 1, 1), 2), np.uint32)
+    for i, p in enumerate(batch):
+        sel[i] = SELECTOR_CODES[p.selector]
+        if p.selector == "sampling":
+            res_cap[i] = p.res_cap
+            hop_keys[i] = np.asarray(jax.random.split(
+                jax.random.PRNGKey(p.seed), k - 1))
+    return UnifiedState(
+        sel=sel,
+        dir_ok=np.ones((A, m), bool),
+        lo_w=np.full((A, k, m), -np.inf, np.float32),
+        hi_w=np.full((A, k, m), np.inf, np.float32),
+        wx=np.zeros((A, k, cap, d), np.float32),
+        wy=np.zeros((A, k, cap), np.int32),
+        w_fill=np.zeros((A, k), np.int32),
+        turn=np.zeros((A,), np.int32),
+        done=done,
+        converged=np.zeros((A,), bool),
+        epochs=np.zeros((A,), np.int32),
+        h_w=np.zeros((A, d), np.float32),
+        h_b=np.zeros((A,), np.float32),
+        h_valid=np.zeros((A,), bool),
+        warm_turn=np.zeros((A,), bool),
+        c_w=np.zeros((A, k, d), np.float32),
+        c_b=np.zeros((A, k), np.float32),
+        c_valid=np.zeros((A, k), bool),
+        warm_node=np.zeros((A, k), bool),
+        latches=np.zeros((A,), np.int32),
+        seen=np.zeros((A,), np.int32),
+        res_cap=res_cap,
+        hop_keys=hop_keys,
+        comm=BatchCommLog(*(np.zeros((A,), np.int32)
+                            for _ in BatchCommLog._fields)),
+    )
+
+
 @dataclasses.dataclass
 class _Pending:
     sid: int
     X: np.ndarray        # (k, n_pad, d) f32
     y: np.ndarray        # (k, n_pad) i32
     budget: int
+    selector: str = "median"   # per-session family (unified pools)
+    seed: int = 0              # Vitter PRNG seed (SAMPLING sessions)
+    res_cap: int = 0           # ε-net reservoir rows (SAMPLING sessions)
 
 
 class SessionPool:
@@ -310,6 +403,24 @@ class SessionPool:
     view, fault schedule), so two pools with equal config+schedule+workload
     make identical decisions — including across :meth:`checkpoint` /
     :meth:`restore` (the determinism contract tests pin).
+
+    With ``PoolConfig(selector="unified")`` ONE pool absorbs mixed
+    MEDIAN + MAXMARG + SAMPLING traffic: ``submit(shards,
+    selector="sampling", seed=...)`` tags each session, the pending queue
+    carries the tag as data, and dispatch/admission/corruption all stay at
+    their single pinned keys (the superset state makes the selector a
+    traced per-row leaf — see :mod:`repro.engine.unified`).
+
+    Compile-key contract: everything that keys a compiled variant is fixed
+    at construction — ``PoolConfig``'s geometry (``slots``/``k``/``n_pad``/
+    ``d``), the ``cap`` transcript width, the solver statics
+    (``max_support``/``svm_steps``/``svm_stages``, the resolved
+    ``solver_kernel``), and the ``admit_block``/``corrupt_block`` scatter
+    shapes.  Dispatch always uses the one key ``(round_up(slots, 4), cap,
+    False, False)``, so after the first pool turn of each op NOTHING a
+    caller streams in recompiles: not session count, admission order,
+    selector mix (unified pools), ε, seeds, or fault timing.  Changing any
+    ``PoolConfig`` field means a new pool and a fresh set of keys.
     """
 
     def __init__(self, config: PoolConfig,
@@ -330,6 +441,14 @@ class SessionPool:
             self._V = jnp.asarray(geo.direction_grid(config.n_angles),
                                   jnp.float32)
             state0 = _fresh_state_median(W, config, live=0)
+        elif config.selector == "unified":
+            if config.d == 2:
+                from repro.core import geometry as geo
+                self._V = jnp.asarray(geo.direction_grid(config.n_angles),
+                                      jnp.float32)
+            else:   # median-free pool: stub grid (the substep is omitted)
+                self._V = jnp.zeros((1, config.d), jnp.float32)
+            state0 = _fresh_state_unified(W, config, live=0)
         else:
             self._V = None
             state0 = _fresh_state_maxmarg(W, config, live=0)
@@ -355,6 +474,7 @@ class SessionPool:
         self.straggle_until = np.zeros((W,), np.int64)
         self.prev_fill = np.zeros((W,), np.int32)
         self.turns_done = np.zeros((W,), np.int32)
+        self.slot_sel = np.zeros((W,), np.int32)   # SEL_* code per slot
 
         for key in ("admitted", "evicted_converged", "evicted_budget",
                     "quarantined", "dispatches", "pool_turns",
@@ -365,10 +485,32 @@ class SessionPool:
     # -- submission ---------------------------------------------------------
 
     def submit(self, shards: Sequence[Tuple[np.ndarray, np.ndarray]],
-               eps: Optional[float] = None) -> int:
+               eps: Optional[float] = None,
+               selector: Optional[str] = None, seed: int = 0) -> int:
         """Queue one protocol instance (k ragged shards, padded here to the
-        pool's pinned (k, n_pad, d) shape).  Returns the session id."""
+        pool's pinned (k, n_pad, d) shape).  Returns the session id.
+
+        ``selector`` picks the session's protocol family on unified pools
+        (default: MEDIAN when d=2, else MAXMARG); per-selector pools accept
+        only their own.  ``seed`` feeds a SAMPLING session's Vitter chain —
+        its ε-net reservoir size (from ``eps``) must fit the pool's pinned
+        ``res_cap``.  Neither affects any compile key: both ride the
+        pending queue as data."""
         cfg = self.cfg
+        if selector is None:
+            selector = (cfg.selector if cfg.selector != "unified"
+                        else ("median" if cfg.d == 2 else "maxmarg"))
+        if cfg.selector == "unified":
+            if selector not in SELECTOR_CODES:
+                raise ValueError(
+                    f"unified pools take {sorted(SELECTOR_CODES)}, "
+                    f"got {selector!r}")
+            if selector == "median" and cfg.d != 2:
+                raise ValueError("MEDIAN sessions require a d=2 pool")
+        elif selector != cfg.selector:
+            raise ValueError(
+                f"pool is pinned to selector {cfg.selector!r}; "
+                f"mixed traffic needs PoolConfig(selector='unified')")
         if len(shards) != cfg.k:
             raise ValueError(f"expected {cfg.k} shards, got {len(shards)}")
         X = np.zeros((cfg.k, cfg.n_pad, cfg.d), np.float32)
@@ -389,12 +531,24 @@ class SessionPool:
             X[j, :n] = Xs
             y[j, :n] = ys
             n_total += n
-        budget = int(np.floor((cfg.eps if eps is None else eps) * n_total))
+        eps_eff = cfg.eps if eps is None else eps
+        budget = int(np.floor(eps_eff * n_total))
+        res_cap = 0
+        if selector == "sampling":
+            res_cap = epsilon_net_size(eps_eff, cfg.d + 1)
+            if res_cap > (cfg.res_cap or 0):
+                raise ValueError(
+                    f"SAMPLING session needs a {res_cap}-row reservoir, "
+                    f"pool pins res_cap={cfg.res_cap} (lower eps at "
+                    f"construction or raise PoolConfig.res_cap)")
         sid = self._next_sid
         self._next_sid += 1
-        self.pending.append(_Pending(sid, X, y, budget))
+        self.pending.append(_Pending(sid, X, y, budget,
+                                     selector=selector, seed=seed,
+                                     res_cap=res_cap))
         self.sessions[sid] = {
-            "status": ST_PENDING, "retries": 0, "backoffs": 0,
+            "status": ST_PENDING, "selector": selector,
+            "retries": 0, "backoffs": 0,
             "dropouts": 0, "drop_msgs": 0, "straggles": 0,
             "corrupt_kind": -1, "quarantine_reason": None,
             "admitted_turn": -1, "evicted_turn": -1, "turns": 0,
@@ -433,8 +587,12 @@ class SessionPool:
                                              np.int32)]),
                     np.concatenate([dblk.budget,
                                     np.zeros((A - take,), np.int32)]))
-            fresh = (_fresh_state_median if cfg.selector == "median"
-                     else _fresh_state_maxmarg)(A, cfg, live=take)
+            if cfg.selector == "median":
+                fresh = _fresh_state_median(A, cfg, live=take)
+            elif cfg.selector == "unified":
+                fresh = _fresh_state_unified(A, cfg, live=take, batch=batch)
+            else:
+                fresh = _fresh_state_maxmarg(A, cfg, live=take)
             idx = np.full((A,), W, np.int32)
             idx[:take] = slots
             self.data, self.state = _admit_rows(
@@ -442,6 +600,7 @@ class SessionPool:
 
             for p, s in zip(batch, slots):
                 self.sid[s] = p.sid
+                self.slot_sel[s] = SELECTOR_CODES[p.selector]
                 self.slot_state[s] = SLOT_LIVE
                 self.retries[s] = 0
                 self.backoff_until[s] = 0
@@ -487,6 +646,15 @@ class SessionPool:
                 self.data, self._V, self.state, jnp.asarray(idx),
                 jnp.int32(n_act), k=cfg.k, first_turn=False,
                 cut_kernel=False, extremes_kernel=False, trans_width=width)
+        elif cfg.selector == "unified":
+            self.state = unified._hot_turn(
+                self.data, self._V, self.state, jnp.asarray(idx),
+                jnp.int32(n_act), k=cfg.k, max_support=cfg.max_support,
+                steps=cfg.svm_steps, stages=cfg.svm_stages, lam0=cfg.lam0,
+                trans_width=width, warm=False, per_node=False,
+                has_median=(cfg.d == 2), first_turn=False,
+                cut_kernel=False, extremes_kernel=False,
+                fused_kernel=False, solver_kernel=self._solver_kernel)
         else:
             self.state = maxmarg._hot_turn(
                 self.data, self.state, jnp.asarray(idx), jnp.int32(n_act),
@@ -501,8 +669,8 @@ class SessionPool:
         (multiple waves if the draw hit more rows than one block holds)."""
         C = self.cfg.corrupt_block
         W = self.cfg.slots
-        fn = (_corrupt_median if self.cfg.selector == "median"
-              else _corrupt_maxmarg)
+        fn = {"median": _corrupt_median, "maxmarg": _corrupt_maxmarg,
+              "unified": _corrupt_unified}[self.cfg.selector]
         for off in range(0, rows.size, C):
             idx = np.full((C,), W, np.int32)
             knd = np.full((C,), -1, np.int32)
@@ -534,6 +702,10 @@ class SessionPool:
         else:
             w_np = np.asarray(s.h_w, np.float64)
             b_np = np.asarray(s.h_b, np.float64)
+            if cfg.selector == "unified":
+                # shared-leaf convention: MEDIAN rows store h_v in h_w and
+                # recover LinearSeparator(-h_v, h_t) at extraction
+                w_np[self.slot_sel == SEL_MEDIAN] *= -1.0
         epochs = np.asarray(s.epochs)
         conv = np.asarray(s.converged)
         comm_np = type(s.comm)(*(np.asarray(a) for a in s.comm))
@@ -548,6 +720,8 @@ class SessionPool:
                 self.stats["evicted_converged" if converged
                            else "evicted_budget"] += 1
                 h = clf.LinearSeparator(w_np[slot], float(b_np[slot]))
+                sel_name = (SELECTOR_NAMES[int(self.slot_sel[slot])]
+                            if cfg.selector == "unified" else cfg.selector)
                 self.results[sid] = ProtocolResult(
                     h,
                     comm_np.summary(int(slot), dim=cfg.d),
@@ -555,13 +729,14 @@ class SessionPool:
                             else cfg.max_epochs),
                     converged=converged,
                     extra={"engine": True, "session_pool": True,
-                           "selector": cfg.selector, "sid": sid,
+                           "selector": sel_name, "sid": sid,
                            "retries": rec["retries"],
                            "backoffs": rec["backoffs"]},
                 )
             rec["evicted_turn"] = self.pool_turn
             rec["turns"] = int(self.turns_done[slot])
             self.sid[slot] = -1
+            self.slot_sel[slot] = 0
             self.slot_state[slot] = SLOT_EMPTY
         # freed rows stay in the device state until an admission overwrites
         # them; mark them done so a stale gather can never dispatch them
@@ -637,7 +812,8 @@ class SessionPool:
                     self.sessions[self.sid[slot]]["corrupt_kind"] = int(kind)
 
         # -- supervision screen (one (5, W) transfer) -----------------------
-        viewer = _view_median if cfg.selector == "median" else _view_maxmarg
+        viewer = {"median": _view_median, "maxmarg": _view_maxmarg,
+                  "unified": _view_unified}[cfg.selector]
         view = np.asarray(viewer(self.state))
         done, conv, fills, nan, bits = view
         live = self.slot_state == SLOT_LIVE       # minus fresh quarantines
@@ -721,6 +897,7 @@ class SessionPool:
             "host/straggle_until": self.straggle_until,
             "host/prev_fill": self.prev_fill,
             "host/turns_done": self.turns_done,
+            "host/slot_sel": self.slot_sel,
         })
         if self.pending:
             flat["pending/sid"] = np.asarray([p.sid for p in self.pending])
@@ -728,6 +905,12 @@ class SessionPool:
             flat["pending/y"] = np.stack([p.y for p in self.pending])
             flat["pending/budget"] = np.asarray(
                 [p.budget for p in self.pending], np.int32)
+            flat["pending/selector"] = np.asarray(
+                [SELECTOR_CODES[p.selector] for p in self.pending], np.int32)
+            flat["pending/seed"] = np.asarray(
+                [p.seed for p in self.pending], np.int64)
+            flat["pending/res_cap"] = np.asarray(
+                [p.res_cap for p in self.pending], np.int32)
         path = os.path.join(dirname, f"pool_{self.pool_turn:08d}.npz")
         np.savez(path, **flat)
 
@@ -786,11 +969,15 @@ class SessionPool:
         pool.straggle_until = z["host/straggle_until"]
         pool.prev_fill = z["host/prev_fill"]
         pool.turns_done = z["host/turns_done"]
+        pool.slot_sel = z["host/slot_sel"]
         if "pending/sid" in z.files:
             for i, sid in enumerate(z["pending/sid"]):
                 pool.pending.append(_Pending(
                     int(sid), z["pending/X"][i], z["pending/y"][i],
-                    int(z["pending/budget"][i])))
+                    int(z["pending/budget"][i]),
+                    selector=SELECTOR_NAMES[int(z["pending/selector"][i])],
+                    seed=int(z["pending/seed"][i]),
+                    res_cap=int(z["pending/res_cap"][i])))
         pool.pool_turn = man["pool_turn"]
         pool._next_sid = man["next_sid"]
         pool.sessions = {int(k): v for k, v in man["sessions"].items()}

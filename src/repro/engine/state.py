@@ -30,6 +30,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.comm import wire_bytes
+from repro.core.sampling import EPSILON_NET_C, epsilon_net_size
+
+# static per-instance selector codes for the unified mixed-selector state
+# (DESIGN.md §unified mixed-selector state).  The codes live in a *traced*
+# (B,) i32 leaf — mixing selectors changes data, never the compiled program —
+# and 0 doubles as the inert value gather-filled into padding rows (a
+# label-0 MEDIAN row is the engine's no-op instance).
+SEL_MEDIAN = 0
+SEL_MAXMARG = 1
+SEL_SAMPLING = 2
+SELECTOR_CODES = {"median": SEL_MEDIAN, "maxmarg": SEL_MAXMARG,
+                  "sampling": SEL_SAMPLING}
+SELECTOR_NAMES = {v: k for k, v in SELECTOR_CODES.items()}
 
 
 class BatchCommLog(NamedTuple):
@@ -367,4 +380,179 @@ def pack_instances(
     # jnp leaves on the legacy path: callers step this state eagerly (the
     # constant-fold differential test) and functional .at updates need them
     state0 = jax.tree_util.tree_map(jnp.asarray, state0)
+    return data, state0, k, cap
+
+
+class UnifiedState(NamedTuple):
+    """Superset protocol state for mixed-selector dispatch — the union of
+    :class:`ProtocolState`, :class:`MaxMargState` and the one-way sampling
+    chain's reservoir carry, keyed by a *traced* per-instance selector code
+    (``SEL_MEDIAN`` / ``SEL_MAXMARG`` / ``SEL_SAMPLING``).
+
+    Leaf sharing is the whole design (DESIGN.md §unified mixed-selector
+    state):
+
+    * **transcripts** ``wx``/``wy``/``w_fill`` are shared: MEDIAN and MAXMARG
+      append per the usual label-0 convention; a SAMPLING row keeps its
+      Vitter reservoir in node slot ``k-1``'s transcript (so the terminal
+      fit — which concatenates shard ``k-1`` with the coordinator
+      transcript — *is* the sampling oracle's ``own ∪ reservoir`` fit);
+    * **separator** ``h_w``/``h_b``/``h_valid`` are shared: a MEDIAN row
+      stores its direction in ``h_w`` and threshold in ``h_b`` (result
+      extraction negates ``h_w`` to recover ``LinearSeparator(-h_v, h_t)``);
+    * **control** ``turn``/``done``/``converged``/``epochs``/``comm`` are
+      shared and per-instance, so one dispatch mixes sessions at different
+      phases of different protocols;
+    * **selector-private** leaves are simply carried untouched by the other
+      selectors' masked substeps: the MEDIAN arc (``dir_ok``/``lo_w``/
+      ``hi_w``), the MAXMARG warm carries (``warm_turn``/``c_w``/``c_b``/
+      ``c_valid``/``warm_node``/``latches``), and the sampling reservoir
+      counters (``seen``/``res_cap``/``hop_keys``).
+
+    ``sel`` is data, not structure: two sweeps with different selector mixes
+    share one compiled ``unified.step``, and the session pool admits any mix
+    into one slot array at one pinned dispatch key.
+    """
+
+    sel: jnp.ndarray        # (B,) i32 — SEL_* code per instance
+    # --- median-private (m = n_angles, or 1 when the mix has no median) ---
+    dir_ok: jnp.ndarray     # (B, m) bool — allowed direction arc
+    lo_w: jnp.ndarray       # (B, k, m) f32 — running per-node threshold lo
+    hi_w: jnp.ndarray       # (B, k, m) f32 — running per-node threshold hi
+    # --- shared transcript + control ---
+    wx: jnp.ndarray         # (B, k, cap, d) f32 — transcripts / reservoir
+    wy: jnp.ndarray         # (B, k, cap) i32 — labels (0 = empty)
+    w_fill: jnp.ndarray     # (B, k) i32 — fill counters
+    turn: jnp.ndarray       # (B,) i32 — per-instance turn counter
+    done: jnp.ndarray       # (B,) bool
+    converged: jnp.ndarray  # (B,) bool
+    epochs: jnp.ndarray     # (B,) i32
+    # --- shared separator (median: h_w = h_v, h_b = h_t) ---
+    h_w: jnp.ndarray        # (B, d) f32
+    h_b: jnp.ndarray        # (B,) f32
+    h_valid: jnp.ndarray    # (B,) bool
+    # --- maxmarg-private warm carries ---
+    warm_turn: jnp.ndarray  # (B,) bool
+    c_w: jnp.ndarray        # (B, k, d) f32
+    c_b: jnp.ndarray        # (B, k) f32
+    c_valid: jnp.ndarray    # (B, k) bool
+    warm_node: jnp.ndarray  # (B, k) bool
+    latches: jnp.ndarray    # (B,) i32
+    # --- sampling-private reservoir carry ---
+    seen: jnp.ndarray       # (B,) i32 — valid stream rows ingested so far
+    res_cap: jnp.ndarray    # (B,) i32 — per-instance ε-net reservoir size
+    hop_keys: jnp.ndarray   # (B, k-1, 2) u32 — per-hop Vitter PRNG keys
+    comm: BatchCommLog
+
+
+def unified_transcript_capacity(k: int, max_epochs: int, max_support: int,
+                                res_cap: int = 0,
+                                has_median: bool = True) -> int:
+    """Static shared transcript bound for a mixed-selector sweep: the max of
+    every family's own bound (:func:`transcript_capacity` for MEDIAN,
+    :func:`maxmarg_transcript_capacity` for MAXMARG, the largest per-instance
+    ε-net reservoir for SAMPLING), so one (B, k, cap, d) buffer holds any
+    mix.  Already a multiple of 8 (each family bound is)."""
+    cap = maxmarg_transcript_capacity(k, max_epochs, max_support)
+    if has_median:
+        cap = max(cap, transcript_capacity(k, max_epochs))
+    return max(cap, _round_up(max(res_cap, 0), 8))
+
+
+def pack_instances_unified(
+    instances: Sequence[ProtocolInstance],
+    *,
+    n_angles: int,
+    max_epochs: int,
+    max_support: int,
+    vc_dim: Optional[int] = None,
+    c: Optional[float] = None,
+) -> Tuple[EngineData, UnifiedState, int, int]:
+    """Pad a mixed MEDIAN + MAXMARG + SAMPLING sweep onto one static shape.
+
+    Returns ``(data, state0, k, cap)``.  All instances must share the party
+    count k and dimension d; any MEDIAN instance in the mix requires d=2
+    (its direction grid is planar) and sizes the arc leaves to ``n_angles``
+    — a median-free mix carries 1-wide stub arc leaves instead.  SAMPLING
+    rows get their per-instance ε-net size in ``res_cap`` (``vc_dim``/``c``
+    default exactly like :func:`repro.engine.oneway.run_instances`) and
+    their Vitter hop keys pre-split from ``ProtocolInstance.seed``, so the
+    reservoir stream is bitwise the one-way oracle's.
+    """
+    assert instances, "need at least one instance"
+    ks = {len(inst.shards) for inst in instances}
+    assert len(ks) == 1, f"instances must share the party count, got {ks}"
+    k = ks.pop()
+    ds = {s[0].shape[1] for inst in instances for s in inst.shards}
+    assert len(ds) == 1, f"instances must share the dimension, got {ds}"
+    d = ds.pop()
+    sels = [inst.selector for inst in instances]
+    unknown = set(sels) - set(SELECTOR_CODES)
+    if unknown:
+        raise ValueError(
+            f"unified packing covers {sorted(SELECTOR_CODES)}, got "
+            f"{sorted(unknown)}")
+    has_median = "median" in sels
+    if has_median and d != 2:
+        raise ValueError(f"MEDIAN instances require d=2, got d={d}")
+    m = n_angles if has_median else 1
+
+    B = len(instances)
+    n_max = _round_up(max(s[0].shape[0] for inst in instances
+                          for s in inst.shards), 8)
+    vc = vc_dim if vc_dim is not None else d + 1
+    cc = c if c is not None else EPSILON_NET_C
+    res_cap = np.zeros((B,), np.int32)
+    hop_keys = np.zeros((B, max(k - 1, 1), 2), np.uint32)
+    for b, inst in enumerate(instances):
+        if inst.selector == "sampling":
+            res_cap[b] = epsilon_net_size(inst.eps, vc, c=cc)
+            if k > 1:
+                hop_keys[b] = np.asarray(jax.random.split(
+                    jax.random.PRNGKey(inst.seed), k - 1))
+    cap = unified_transcript_capacity(k, max_epochs, max_support,
+                                      res_cap=int(res_cap.max()),
+                                      has_median=has_median)
+
+    X = np.zeros((B, k, n_max, d), np.float32)
+    y = np.zeros((B, k, n_max), np.int32)
+    budget = np.zeros((B,), np.int32)
+    for b, inst in enumerate(instances):
+        n_total = 0
+        for j, (Xs, ys) in enumerate(inst.shards):
+            n = Xs.shape[0]
+            assert (np.abs(ys) == 1).all(), "labels must be +-1"
+            X[b, j, :n] = Xs
+            y[b, j, :n] = ys
+            n_total += n
+        budget[b] = int(np.floor(inst.eps * n_total))
+
+    state0 = UnifiedState(
+        sel=np.asarray([SELECTOR_CODES[s] for s in sels], np.int32),
+        dir_ok=np.ones((B, m), bool),
+        lo_w=np.full((B, k, m), -np.inf, np.float32),
+        hi_w=np.full((B, k, m), np.inf, np.float32),
+        wx=np.zeros((B, k, cap, d), np.float32),
+        wy=np.zeros((B, k, cap), np.int32),
+        w_fill=np.zeros((B, k), np.int32),
+        turn=np.zeros((B,), np.int32),
+        done=np.zeros((B,), bool),
+        converged=np.zeros((B,), bool),
+        epochs=np.zeros((B,), np.int32),
+        h_w=np.zeros((B, d), np.float32),
+        h_b=np.zeros((B,), np.float32),
+        h_valid=np.zeros((B,), bool),
+        warm_turn=np.zeros((B,), bool),
+        c_w=np.zeros((B, k, d), np.float32),
+        c_b=np.zeros((B, k), np.float32),
+        c_valid=np.zeros((B, k), bool),
+        warm_node=np.zeros((B, k), bool),
+        latches=np.zeros((B,), np.int32),
+        seen=np.zeros((B,), np.int32),
+        res_cap=res_cap,
+        hop_keys=hop_keys,
+        comm=BatchCommLog(*(np.zeros((B,), np.int32)
+                            for _ in BatchCommLog._fields)),
+    )
+    data = EngineData(jnp.asarray(X), jnp.asarray(y), jnp.asarray(budget))
     return data, state0, k, cap

@@ -38,6 +38,8 @@ from repro.engine.session_pool import PoolConfig, SessionPool
 class _OpenSession:
     reservoirs: List[Reservoir]
     eps: Optional[float]
+    selector: Optional[str] = None
+    seed: int = 0
 
 
 class ProtocolService:
@@ -59,7 +61,18 @@ class ProtocolService:
     dispatch, fault, retry and eviction decision is the pool's, so the
     pool's determinism and bit-exactness contracts carry over verbatim
     (same workload + config + schedule ⇒ same decisions, including across
-    :meth:`checkpoint` / :meth:`restore`).
+    :meth:`checkpoint` / :meth:`restore`).  On a
+    ``PoolConfig(selector="unified")`` pool, :meth:`open` and :meth:`submit`
+    take a per-session ``selector`` (and Vitter ``seed``), so one service
+    instance absorbs heterogeneous MEDIAN / MAXMARG / SAMPLING traffic.
+
+    Compile-key contract (inherited from the pool): every compiled variant
+    is keyed by ``PoolConfig`` alone — geometry (``slots``/``k``/``n_pad``/
+    ``d``), transcript ``cap``, solver statics and scatter block shapes.
+    Nothing streamed through this API (batch sizes fed per node, session
+    count, ε, selector mix, seeds, admission order) ever recompiles;
+    per-node stream length is decoupled from the pinned shapes by the
+    reservoir, which downsamples any stream to ≤ ``n_pad`` rows.
     """
 
     def __init__(self, config: PoolConfig,
@@ -74,9 +87,12 @@ class ProtocolService:
     # -- streaming ingest ---------------------------------------------------
 
     def open(self, eps: Optional[float] = None,
-             reservoir_capacity: Optional[int] = None) -> int:
+             reservoir_capacity: Optional[int] = None,
+             selector: Optional[str] = None, seed: int = 0) -> int:
         """Open a streaming session: one reservoir per node, capacity
         ``reservoir_capacity`` (default: the pool's pinned ``n_pad``).
+        ``selector``/``seed`` tag the session's protocol family on unified
+        pools (validated at :meth:`close`, when the pool sees them).
         Returns an ingest handle (not yet a pool session id)."""
         cap = self.cfg.n_pad if reservoir_capacity is None \
             else reservoir_capacity
@@ -92,7 +108,7 @@ class ProtocolService:
                           rng=np.random.default_rng(
                               (self._ingest_seed, h, node)))
                 for node in range(self.cfg.k)],
-            eps=eps)
+            eps=eps, selector=selector, seed=seed)
         return h
 
     def feed(self, handle: int, node: int, X: np.ndarray,
@@ -115,12 +131,15 @@ class ProtocolService:
             if r.filled == 0:
                 raise ValueError("cannot close a session with an empty node")
             shards.append(r.sample())
-        return self.pool.submit(shards, eps=sess.eps)
+        return self.pool.submit(shards, eps=sess.eps,
+                                selector=sess.selector, seed=sess.seed)
 
     def submit(self, shards: Sequence[Tuple[np.ndarray, np.ndarray]],
-               eps: Optional[float] = None) -> int:
+               eps: Optional[float] = None,
+               selector: Optional[str] = None, seed: int = 0) -> int:
         """Enqueue ready-made shards directly (no streaming)."""
-        return self.pool.submit(shards, eps=eps)
+        return self.pool.submit(shards, eps=eps, selector=selector,
+                                seed=seed)
 
     # -- pool pump ----------------------------------------------------------
 

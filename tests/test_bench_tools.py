@@ -97,6 +97,18 @@ def _service_report():
         "sessions_per_s_fault_free": 40.0, "sessions_per_s_faulted": 20.0,
         "steady_state_recompiles": 0,
         "oracle_checked": 4, "oracle_mismatches": [],
+        "mixed_traffic": {
+            "sessions": 6, "slots": 2,
+            "per_family_sessions": {"median": 2, "maxmarg": 2,
+                                    "sampling": 2},
+            "unified_s": 0.3,
+            "per_family_s": {"median": 0.1, "maxmarg": 0.1,
+                             "sampling": 0.1},
+            "per_family_total_s": 0.3,
+            "steady_state_recompiles": 0,
+            "steady_state_dispatch_keys": [[4, 100, False, False]],
+            "checked": 6, "bitwise": 6, "mismatches": [],
+        },
     }
 
 
@@ -147,6 +159,37 @@ def test_service_schema_gates_phantom_chaos(tmp_path):
                   "corruptions": 0}
     errs = _check_service(tmp_path, r)
     assert any("zero injected faults" in e for e in errs)
+
+
+def test_service_schema_gates_mixed_recompiles(tmp_path):
+    r = _service_report()
+    r["mixed_traffic"]["steady_state_recompiles"] = 1
+    errs = _check_service(tmp_path, r)
+    assert any("mixed admission moved a compile-cache key" in e
+               for e in errs)
+
+
+def test_service_schema_gates_mixed_multi_key(tmp_path):
+    r = _service_report()
+    r["mixed_traffic"]["steady_state_dispatch_keys"].append(
+        [8, 100, False, False])
+    errs = _check_service(tmp_path, r)
+    assert any("ONE pinned key" in e for e in errs)
+
+
+def test_service_schema_gates_mixed_mismatches(tmp_path):
+    r = _service_report()
+    r["mixed_traffic"]["mismatches"] = [
+        {"sid": 1, "selector": "maxmarg", "arm": "unified_vs_per_family"}]
+    errs = _check_service(tmp_path, r)
+    assert any("per-family pool twins" in e for e in errs)
+
+
+def test_service_schema_gates_mixed_family_accounting(tmp_path):
+    r = _service_report()
+    r["mixed_traffic"]["per_family_sessions"]["median"] = 1  # 5 != 6
+    errs = _check_service(tmp_path, r)
+    assert any("do not sum to" in e for e in errs)
 
 
 def test_service_schema_missing_key(tmp_path):

@@ -27,7 +27,7 @@ import jax
 
 from repro import engine
 from repro.core import datasets
-from repro.engine import hotloop, maxmarg, median
+from repro.engine import hotloop, maxmarg, median, unified
 
 N_ANGLES = 256
 MAX_EPOCHS = 24
@@ -48,6 +48,10 @@ def _median_lowerings():
 
 def _maxmarg_lowerings():
     return maxmarg._step_jit._cache_size() + maxmarg._hot_turn._cache_size()
+
+
+def _unified_lowerings():
+    return unified._step_jit._cache_size() + unified._hot_turn._cache_size()
 
 
 def test_median_cache_keys_only_on_npad_width_warm():
@@ -90,6 +94,74 @@ def test_maxmarg_cache_keys_only_on_npad_width_warm():
     engine.maxmarg.run_instances(insts, max_epochs=MAX_EPOCHS)
     assert _maxmarg_lowerings() == n_low, \
         "re-running the same sweep recompiled"
+
+
+def test_unified_mixed_cache_ignores_selector_mix():
+    """The unified dispatch's whole point: the compiled variants key on
+    shapes and statics, NEVER on which rows run which protocol — so a
+    permuted admission order of the same mixed grid (different selector
+    interleaving, same per-row data) adds zero lowerings."""
+    jax.clear_caches()
+    hotloop.KEY_LOG.clear()
+    insts = [engine.ProtocolInstance(
+        _GENS[i % 3](n_per_node=40, k=2, seed=i),
+        (0.1, 0.05, 0.05)[i % 3],
+        ("median", "maxmarg", "sampling")[i % 3], seed=i)
+        for i in range(9)]
+    first = engine.run_sweep(insts, n_angles=64, max_epochs=8,
+                             unified_dispatch=True)
+    keys = set(hotloop.KEY_LOG)
+    n_low = _unified_lowerings()
+    assert 0 < n_low <= len(keys), (n_low, sorted(keys))
+
+    # reversed mix: the hot loop's width/compaction choices are functions
+    # of the *set* of live rows, so every dispatch hits the cache
+    hotloop.KEY_LOG.clear()
+    perm = list(reversed(insts))
+    second = engine.run_sweep(perm, n_angles=64, max_epochs=8,
+                              unified_dispatch=True)
+    assert set(hotloop.KEY_LOG) == keys
+    assert _unified_lowerings() == n_low, \
+        "re-ordering the selector mix recompiled"
+    for a, b in zip(first, reversed(second)):
+        assert a.comm == b.comm and a.rounds == b.rounds
+
+
+def test_unified_pool_single_pinned_key_zero_steady_recompiles():
+    """ISSUE 10 acceptance: a mixed MEDIAN+MAXMARG+SAMPLING stream through
+    ONE SessionPool uses one pinned dispatch key, and a second pool with a
+    different admission order adds zero lowerings."""
+    from repro.engine.session_pool import PoolConfig, SessionPool
+
+    jax.clear_caches()
+    hotloop.KEY_LOG.clear()
+    insts = [engine.ProtocolInstance(
+        _GENS[i % 3](n_per_node=16, k=2, seed=i),
+        (0.1, 0.05, 0.05)[i % 3],
+        ("median", "maxmarg", "sampling")[i % 3], seed=i)
+        for i in range(6)]
+
+    def run(order):
+        pool = SessionPool(PoolConfig(slots=4, k=2, n_pad=16,
+                                      selector="unified", n_angles=64,
+                                      max_epochs=8))
+        for inst in order:
+            pool.submit(inst.shards, eps=inst.eps, selector=inst.selector,
+                        seed=inst.seed)
+        pool.run()
+        return pool
+
+    run(insts)
+    keys = set(hotloop.KEY_LOG)
+    assert len(keys) == 1, sorted(keys)     # the single pinned dispatch key
+    n_low = unified._hot_turn._cache_size()
+    assert n_low == 1
+
+    hotloop.KEY_LOG.clear()
+    run(list(reversed(insts)))
+    assert set(hotloop.KEY_LOG) == keys
+    assert unified._hot_turn._cache_size() == n_low, \
+        "a second mixed pool recompiled"
 
 
 @pytest.mark.skipif(len(jax.devices()) < 2,

@@ -1,0 +1,244 @@
+"""Mixed-selector dispatch gates (ISSUE 10 tentpole).
+
+The unified path's contract (DESIGN.md §unified mixed-selector state) in
+test form:
+
+* **oracle parity** — an interleaved MEDIAN + MAXMARG + SAMPLING grid run
+  through ``run_sweep(unified_dispatch=True)`` matches the per-selector
+  ``run_instances`` oracles row for row: MEDIAN bitwise (any covering
+  transcript width is), MAXMARG and SAMPLING decision/comm-exact with
+  separators allclose (padded solver widths reassociate float sums);
+* **one pool, any mix** — a ``PoolConfig(selector="unified")`` pool absorbs
+  all three families through one pinned dispatch key, decision/comm-exact
+  vs the same oracles, and bitwise invariant to admission order;
+* **supervision is selector-blind** — forced faults land on the targeted
+  session whatever its family, trip the paired invariant, and leave every
+  other session bitwise identical to the fault-free run;
+* **checkpoint/restore** — a mixed pool snapshotted mid-stream (pending
+  selector/seed tags and the per-slot selector codes included) resumes to
+  bitwise-identical results.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core import datasets
+from repro.engine import run_sweep, unified
+from repro.engine.faults import CORRUPT_NAN
+from repro.engine.session_pool import (
+    ST_CONVERGED,
+    ST_QUARANTINED,
+    PoolConfig,
+    SessionPool,
+)
+from repro.engine.state import ProtocolInstance
+
+N_PAD = 16
+N_ANGLES = 64
+MAX_EPOCHS = 8
+_GENS = (datasets.data1, datasets.data2, datasets.data3)
+_MIX = ("median", "maxmarg", "sampling")
+
+
+def _mixed_instances(n, k=2, n_per_node=N_PAD, seed0=0):
+    """Interleaved families over staggered datasets/eps; uniform shard
+    sizes keep the sampling rows' Threefry draws bitwise comparable."""
+    return [ProtocolInstance(
+        _GENS[i % 3](n_per_node=n_per_node, k=k, seed=seed0 + i),
+        eps=(0.1, 0.05, 0.05)[i % 3], selector=_MIX[i % 3],
+        seed=seed0 + i) for i in range(n)]
+
+
+def _assert_matches_oracle(res, oracle, *, median_bitwise=False):
+    for r, o in zip(res, oracle):
+        sel = r.extra["selector"]
+        assert r.comm == o.comm, sel
+        assert r.rounds == o.rounds and r.converged == o.converged, sel
+        w_r, w_o = np.asarray(r.classifier.w), np.asarray(o.classifier.w)
+        if median_bitwise and sel == "median":
+            assert np.array_equal(w_r, w_o)
+            assert float(r.classifier.b) == float(o.classifier.b)
+        else:
+            np.testing.assert_allclose(w_r, w_o, rtol=1e-5, atol=1e-6)
+            assert np.isclose(float(r.classifier.b), float(o.classifier.b),
+                              rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine path: one dispatch vs the per-selector oracles
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_sweep_matches_per_selector_oracles():
+    insts = _mixed_instances(9)
+    oracle = run_sweep(insts, n_angles=N_ANGLES, max_epochs=MAX_EPOCHS)
+    res = run_sweep(insts, n_angles=N_ANGLES, max_epochs=MAX_EPOCHS,
+                    unified_dispatch=True)
+    assert all(r.extra.get("unified") for r in res)
+    _assert_matches_oracle(res, oracle, median_bitwise=True)
+    # family-specific extras survive the shared extraction
+    for r in res:
+        if r.extra["selector"] == "sampling":
+            assert r.rounds == 1 and r.converged and "sample_size" in r.extra
+        if r.extra["selector"] == "maxmarg":
+            assert "warm_latches" in r.extra
+
+
+def test_mixed_sweep_kparty_chains_and_carries():
+    """k=3: multi-hop Vitter chains and per-node warm carries share the
+    one dispatch with a k-party MEDIAN row."""
+    insts = _mixed_instances(6, k=3, seed0=7)
+    oracle = run_sweep(insts, n_angles=N_ANGLES, max_epochs=MAX_EPOCHS)
+    res = run_sweep(insts, n_angles=N_ANGLES, max_epochs=MAX_EPOCHS,
+                    unified_dispatch=True)
+    _assert_matches_oracle(res, oracle, median_bitwise=True)
+
+
+def test_unified_run_instances_median_free_mix():
+    """A median-free mix carries stub arc leaves and skips the MEDIAN
+    substep entirely — results still match the oracles."""
+    insts = [inst for inst in _mixed_instances(8)
+             if inst.selector != "median"]
+    oracle = run_sweep(insts, max_epochs=MAX_EPOCHS)
+    res = unified.run_instances(insts, max_epochs=MAX_EPOCHS)
+    _assert_matches_oracle(res, oracle)
+
+
+# ---------------------------------------------------------------------------
+# pool path: one pool, any mix, any admission order
+# ---------------------------------------------------------------------------
+
+
+def _pool_cfg(**kw):
+    base = dict(slots=4, k=2, n_pad=N_PAD, selector="unified",
+                n_angles=N_ANGLES, max_epochs=MAX_EPOCHS)
+    base.update(kw)
+    return PoolConfig(**base)
+
+
+def _submit_all(pool, insts):
+    return [pool.submit(inst.shards, eps=inst.eps, selector=inst.selector,
+                        seed=inst.seed) for inst in insts]
+
+
+def _res_bitwise(a, b):
+    return (np.array_equal(np.asarray(a.classifier.w),
+                           np.asarray(b.classifier.w))
+            and float(a.classifier.b) == float(b.classifier.b)
+            and a.comm == b.comm and a.rounds == b.rounds
+            and a.converged == b.converged)
+
+
+def test_mixed_pool_matches_oracles_across_admission_orders():
+    insts = _mixed_instances(9, seed0=20)
+    oracle = run_sweep(insts, n_angles=N_ANGLES, max_epochs=MAX_EPOCHS)
+
+    pool_a = SessionPool(_pool_cfg())
+    sids_a = _submit_all(pool_a, insts)
+    pool_a.run()
+    _assert_matches_oracle([pool_a.results[s] for s in sids_a], oracle)
+    for s, inst in zip(sids_a, insts):
+        assert pool_a.results[s].extra["selector"] == inst.selector
+
+    # reversed admission: different slot assignment and batch composition,
+    # bitwise-identical per-session results (the single pinned key at work)
+    perm = list(reversed(range(len(insts))))
+    pool_b = SessionPool(_pool_cfg())
+    sids_b = _submit_all(pool_b, [insts[i] for i in perm])
+    pool_b.run()
+    for j, i in enumerate(perm):
+        assert _res_bitwise(pool_b.results[sids_b[j]],
+                            pool_a.results[sids_a[i]]), insts[i].selector
+
+
+class _ForcedSchedule:
+    """Duck-typed fault schedule: fire exactly at (sid, turn) coordinates
+    (``(sid, None)`` fires every turn) — the pool only reads ``draws`` /
+    ``straggle_max`` / ``any_faults``."""
+
+    straggle_max = 3
+    any_faults = True
+
+    def __init__(self, dropout=(), corrupt=None):
+        self._drop = set(dropout)
+        self._cor = dict(corrupt or {})
+
+    def draws(self, sids, t):
+        sids = [int(s) for s in np.asarray(sids)]
+        return {
+            "dropout": np.asarray(
+                [(s, t) in self._drop or (s, None) in self._drop
+                 for s in sids], bool),
+            "drop_msg": np.zeros(len(sids), bool),
+            "straggle": np.zeros(len(sids), np.int32),
+            "corrupt": np.asarray(
+                [self._cor.get((s, t), self._cor.get((s, None), -1))
+                 for s in sids], np.int32),
+        }
+
+
+def test_mixed_pool_faults_land_on_the_right_session():
+    """Targeted faults must hit their sid whatever its family, and leave
+    every other session bitwise identical to the fault-free pool."""
+    insts = _mixed_instances(6, seed0=40)
+    clean = SessionPool(_pool_cfg())
+    sids = _submit_all(clean, insts)
+    clean.run()
+
+    # sid 2 is a SAMPLING session (mix order), sid 0 a MEDIAN one
+    sched = _ForcedSchedule(dropout=[(0, 0), (0, 2)],
+                            corrupt={(2, None): CORRUPT_NAN})
+    chaos = SessionPool(_pool_cfg(), schedule=sched)
+    _submit_all(chaos, insts)
+    chaos.run()
+
+    assert chaos.sessions[2]["status"] == ST_QUARANTINED
+    assert chaos.sessions[2]["quarantine_reason"] == "nan_separator"
+    assert chaos.sessions[2]["selector"] == "sampling"
+    assert chaos.sessions[0]["dropouts"] == 2
+    assert chaos.sessions[0]["status"] == ST_CONVERGED
+    for sid in sids:
+        if sid == 2:
+            assert sid not in chaos.results
+            continue
+        assert _res_bitwise(chaos.results[sid], clean.results[sid]), sid
+
+
+def test_mixed_pool_checkpoint_restore_bitwise(tmp_path):
+    insts = _mixed_instances(9, seed0=60)
+    ref = SessionPool(_pool_cfg())
+    _submit_all(ref, insts)
+    ref.run()
+
+    pool = SessionPool(_pool_cfg())
+    _submit_all(pool, insts)
+    pool.step_pool()
+    pool.step_pool()
+    pool.checkpoint(str(tmp_path))
+    resumed = SessionPool.restore(str(tmp_path))
+    assert np.array_equal(resumed.slot_sel, pool.slot_sel)
+    resumed.run()
+    for sid in ref.results:
+        assert _res_bitwise(resumed.results[sid], ref.results[sid]), sid
+
+
+def test_unified_submit_validation():
+    pinned = SessionPool(PoolConfig(slots=2, k=2, n_pad=N_PAD,
+                                    n_angles=N_ANGLES))
+    shards = _mixed_instances(1)[0].shards
+    with pytest.raises(ValueError, match="pinned to selector"):
+        pinned.submit(shards, selector="maxmarg")
+
+    pool = SessionPool(_pool_cfg(slots=2))
+    with pytest.raises(ValueError, match="unified pools take"):
+        pool.submit(shards, selector="voting")
+    with pytest.raises(ValueError, match="reservoir"):
+        # an ε-net far larger than the pool's pinned res_cap
+        pool.submit(shards, eps=1e-4, selector="sampling")
+    sid = pool.submit(shards, selector="sampling", seed=5)
+    assert pool.sessions[sid]["selector"] == "sampling"
